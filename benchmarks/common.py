@@ -1,0 +1,146 @@
+"""Shared harness for the paper-table benchmarks.
+
+The paper's tables are CIFAR-scale; this container is a 2-core CPU, so each
+table runs a *scaled* instance on SynthDigits (DESIGN.md §6): fewer clients,
+smaller images, shorter schedules. The validation target is the paper's
+QUALITATIVE orderings (Co-Boosting > DENSE/F-* > FedAvg; Co-Boosting
+ensemble > FedENS; every ablation component helps), not CIFAR point
+accuracies. Scale presets:
+
+  quick — the default for ``python -m benchmarks.run`` (minutes);
+  full  — closer to the paper's sizes (hours; opt-in via REPRO_BENCH_SCALE).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from functools import lru_cache, partial
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.config.train import OFLConfig
+from repro.data import make_synth_images
+from repro.fed import build_market
+from repro.launch.ofl import run_method
+from repro.utils import get_logger
+
+log = get_logger("bench")
+
+SCALE = os.environ.get("REPRO_BENCH_SCALE", "quick")
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchScale:
+    classes: int = 6
+    image: int = 16
+    per_class: int = 120
+    test_per_class: int = 40
+    clients: int = 3
+    local_epochs: int = 10
+    epochs: int = 10
+    gen_iters: int = 8
+    batch: int = 32
+    buffer_batches: int = 3
+    client_arch: str = "cnn2"
+    server_arch: str = "cnn2"
+    seeds: Tuple[int, ...] = (0,)
+
+
+QUICK = BenchScale()
+FULL = BenchScale(
+    classes=10,
+    image=32,
+    per_class=400,
+    test_per_class=100,
+    clients=10,
+    local_epochs=40,
+    epochs=60,
+    gen_iters=20,
+    batch=64,
+    buffer_batches=6,
+    client_arch="cnn5",
+    server_arch="cnn5",
+    seeds=(0, 1, 2),
+)
+
+
+def get_scale() -> BenchScale:
+    return FULL if SCALE == "full" else QUICK
+
+
+def make_cfg(sc: BenchScale, seed: int = 0, **overrides) -> OFLConfig:
+    base = dict(
+        num_clients=sc.clients,
+        partition="dirichlet",
+        alpha=0.1,
+        local_epochs=sc.local_epochs,
+        epochs=sc.epochs,
+        gen_iters=sc.gen_iters,
+        batch_size=sc.batch,
+        latent_dim=32,
+        buffer_batches=sc.buffer_batches,
+        seed=seed,
+    )
+    base.update(overrides)
+    return OFLConfig(**base)
+
+
+@lru_cache(maxsize=4)
+def _data(sc: BenchScale, seed: int):
+    x, y = make_synth_images(seed, sc.classes, sc.per_class, (sc.image, sc.image, 3))
+    tx, ty = make_synth_images(seed + 1, sc.classes, sc.test_per_class, (sc.image, sc.image, 3))
+    return x, y, tx, ty
+
+
+_MARKET_CACHE: Dict = {}
+
+
+def get_market(sc: BenchScale, cfg: OFLConfig, seed: int, archs: Optional[Sequence[str]] = None):
+    """Local training is method-independent; cache it per (partition, seed)."""
+    key = (sc, cfg.partition, cfg.alpha, cfg.c_cls, cfg.lognormal_sigma, cfg.num_clients, seed, tuple(archs or ()))
+    if key not in _MARKET_CACHE:
+        x, y, tx, ty = _data(sc, seed)
+        archs_list = list(archs) if archs else [sc.client_arch] * cfg.num_clients
+        market = build_market(seed, x, y, cfg, sc.classes, archs_list)
+        _MARKET_CACHE[key] = (market, (x, y, tx, ty))
+    return _MARKET_CACHE[key]
+
+
+def bench_setting(
+    methods: Sequence[str],
+    sc: BenchScale,
+    seed: int = 0,
+    archs: Optional[Sequence[str]] = None,
+    server_arch: Optional[str] = None,
+    **cfg_overrides,
+) -> Dict[str, Dict[str, float]]:
+    """Run a list of methods on one partition setting; returns
+    {method: {server_acc, ensemble_acc, seconds}}."""
+    cfg = make_cfg(sc, seed, **cfg_overrides)
+    (applies, params, sizes, _), (x, y, tx, ty) = get_market(sc, cfg, seed, archs)
+    out: Dict[str, Dict[str, float]] = {}
+    for m in methods:
+        t0 = time.time()
+        res = run_method(
+            m, cfg, sc.classes, (sc.image, sc.image, 3), applies, params, sizes,
+            x, tx, ty, server_arch or sc.server_arch, seed, eval_every=max(cfg.epochs, 1),
+        )
+        res = {k: float(v) for k, v in res.items() if isinstance(v, (int, float))}
+        res["seconds"] = round(time.time() - t0, 1)
+        out[m] = res
+        log.info("  %-12s server=%.3f ensemble=%.3f (%.0fs)", m, res.get("server_acc", -1), res.get("ensemble_acc", -1), res["seconds"])
+    return out
+
+
+def print_csv(table: str, rows: List[Dict]) -> None:
+    if not rows:
+        return
+    keys = list(rows[0].keys())
+    print(f"# {table}")
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(str(r.get(k, "")) for k in keys))
+    print()

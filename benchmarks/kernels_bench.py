@@ -1,0 +1,78 @@
+"""Kernel micro-benchmarks: Pallas (interpret-mode on CPU) vs pure-jnp
+reference. Wall times on CPU measure the *reference* path meaningfully and
+the interpret path only for correctness-scale inputs; the TPU story lives
+in the roofline analysis. Also reports allclose deltas."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import print_csv
+from repro.kernels import (
+    ensemble_kl,
+    ensemble_kl_ref,
+    flash_attention,
+    flash_attention_ref,
+    ghm_ce,
+    ghm_ce_ref,
+)
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6  # us
+
+
+def main() -> list:
+    rows = []
+    key = jax.random.key(0)
+
+    # ensemble_kl
+    k, b, v = 8, 64, 2048
+    cl = jax.random.normal(key, (k, b, v))
+    st = jax.random.normal(jax.random.key(1), (b, v))
+    w = jax.nn.softmax(jax.random.normal(jax.random.key(2), (k,)))
+    got = ensemble_kl(cl, st, w, temperature=4.0)
+    want = ensemble_kl_ref(cl, st, w, 4.0)
+    err = float(jnp.max(jnp.abs(got - want)))
+    us_ref = _time(jax.jit(lambda a, b2, c: ensemble_kl_ref(a, b2, c, 4.0)), cl, st, w)
+    us_ker = _time(lambda a, b2, c: ensemble_kl(a, b2, c, temperature=4.0), cl, st, w)
+    rows.append(dict(kernel="ensemble_kl", shape=f"K{k}xB{b}xV{v}", max_err=f"{err:.2e}",
+                     us_ref=round(us_ref), us_interpret=round(us_ker)))
+
+    # ghm_ce
+    lbl = jax.random.randint(jax.random.key(3), (b,), 0, v)
+    got = ghm_ce(cl, lbl, w)
+    want = ghm_ce_ref(cl, lbl, w)
+    err = float(jnp.max(jnp.abs(got - want)))
+    us_ref = _time(jax.jit(lambda a, l, c: ghm_ce_ref(a, l, c)), cl, lbl, w)
+    us_ker = _time(lambda a, l, c: ghm_ce(a, l, c), cl, lbl, w)
+    rows.append(dict(kernel="ghm_ce", shape=f"K{k}xB{b}xV{v}", max_err=f"{err:.2e}",
+                     us_ref=round(us_ref), us_interpret=round(us_ker)))
+
+    # flash attention
+    bq, s, h, kh, hd = 2, 256, 4, 2, 64
+    q = jax.random.normal(key, (bq, s, h, hd))
+    kk = jax.random.normal(jax.random.key(4), (bq, s, kh, hd))
+    vv = jax.random.normal(jax.random.key(5), (bq, s, kh, hd))
+    got = flash_attention(q, kk, vv, causal=True, block_q=64, block_kv=64)
+    want = flash_attention_ref(q, kk, vv, causal=True)
+    err = float(jnp.max(jnp.abs(got - want)))
+    us_ref = _time(jax.jit(lambda a, b2, c: flash_attention_ref(a, b2, c, causal=True)), q, kk, vv)
+    us_ker = _time(lambda a, b2, c: flash_attention(a, b2, c, causal=True, block_q=64, block_kv=64), q, kk, vv)
+    rows.append(dict(kernel="flash_attention", shape=f"B{bq}xS{s}xH{h}/{kh}xD{hd}", max_err=f"{err:.2e}",
+                     us_ref=round(us_ref), us_interpret=round(us_ker)))
+
+    print_csv("kernels (interpret-mode correctness + timing)", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

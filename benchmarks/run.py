@@ -1,0 +1,60 @@
+"""Benchmark entry point: one module per paper table + kernel micro-bench.
+
+    PYTHONPATH=src python -m benchmarks.run [--tables t1,t7,kernels|all]
+
+Default (quick scale) runs every table at reduced size; set
+``REPRO_BENCH_SCALE=full`` for paper-scale sweeps (hours).
+Output: CSV blocks per table (what EXPERIMENTS.md §Paper-validation cites).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (
+    kernels_bench,
+    table1_main,
+    table2_ensemble,
+    table3_hetero,
+    table4_unbalanced,
+    table5_ccls,
+    table6_clients,
+    table7_ablation,
+)
+from benchmarks.common import SCALE
+
+TABLES = {
+    "kernels": ("kernels", kernels_bench.main),
+    "t1": ("table1_main", table1_main.main),
+    "t2": ("table2_ensemble", table2_ensemble.main),
+    "t3": ("table3_hetero", table3_hetero.main),
+    "t4": ("table4_unbalanced", table4_unbalanced.main),
+    "t5": ("table5_ccls", table5_ccls.main),
+    "t6": ("table6_clients", table6_clients.main),
+    "t7": ("table7_ablation", table7_ablation.main),
+}
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument(
+        "--tables",
+        default="kernels,t1,t2,t5,t7",
+        help=f"comma list from {list(TABLES)} or 'all'",
+    )
+    args = p.parse_args()
+    names = list(TABLES) if args.tables == "all" else args.tables.split(",")
+    print(f"# benchmark scale: {SCALE}; tables: {names}", flush=True)
+    t0 = time.time()
+    for n in names:
+        label, fn = TABLES[n]
+        print(f"## running {label} ...", file=sys.stderr, flush=True)
+        t1 = time.time()
+        fn()
+        print(f"## {label} done in {time.time()-t1:.0f}s", file=sys.stderr, flush=True)
+    print(f"# all benchmarks done in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Tables 18/19 (App. B.7) — hyperparameter sensitivity: DHS perturbation
+strength ε and EE step size µ. Not in the default `benchmarks.run` set
+(adds ~20 min); run directly:
+
+    PYTHONPATH=src python -m benchmarks.table19_sensitivity
+"""
+from __future__ import annotations
+
+from benchmarks.common import SCALE, bench_setting, get_scale, print_csv
+
+
+def main(eps_values=None, mu_values=None) -> list:
+    sc = get_scale()
+    eps_values = eps_values or ((1 / 255, 4 / 255, 8 / 255, 16 / 255) if SCALE == "full" else (2 / 255, 8 / 255, 32 / 255))
+    mu_values = mu_values or ((0.005, 0.05, 0.1) if SCALE == "full" else (0.01, 0.1))
+    rows = []
+    for eps in eps_values:
+        res = bench_setting(("coboosting",), sc, seed=0, epsilon=eps)
+        r = res["coboosting"]
+        rows.append(dict(param="epsilon", value=round(eps, 5),
+                         server_acc=round(r["server_acc"], 4),
+                         ensemble_acc=round(r["ensemble_acc"], 4)))
+    for mu in mu_values:
+        res = bench_setting(("coboosting",), sc, seed=0, mu=mu)
+        r = res["coboosting"]
+        rows.append(dict(param="mu", value=mu,
+                         server_acc=round(r["server_acc"], 4),
+                         ensemble_acc=round(r["ensemble_acc"], 4)))
+    print_csv("table19_sensitivity (DHS epsilon / EE mu sweeps)", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

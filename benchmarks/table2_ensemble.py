@@ -1,0 +1,25 @@
+"""Table 2/9 — ensemble accuracy: FedENS (uniform weights) vs the
+Co-Boosting learned-weight ensemble, per heterogeneity level."""
+from __future__ import annotations
+
+from benchmarks.common import SCALE, bench_setting, get_scale, print_csv
+
+
+def main(alphas=None) -> list:
+    sc = get_scale()
+    alphas = alphas or ((0.05, 0.1, 0.3) if SCALE == "full" else (0.1, 0.3))
+    rows = []
+    for alpha in alphas:
+        for seed in sc.seeds:
+            res = bench_setting(("fedens", "coboosting"), sc, seed=seed, alpha=alpha)
+            rows.append(
+                dict(alpha=alpha, seed=seed,
+                     fedens_ensemble=round(res["fedens"]["ensemble_acc"], 4),
+                     coboosting_ensemble=round(res["coboosting"]["ensemble_acc"], 4))
+            )
+    print_csv("table2_ensemble (FedENS vs Co-Boosting ensemble accuracy)", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Table 6/11 — varying client count. Expected: Co-Boosting's edge over
+DENSE grows with n (weight search matters more with more clients)."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import SCALE, bench_setting, get_scale, print_csv
+
+
+def main(ns=None) -> list:
+    sc = get_scale()
+    ns = ns or ((5, 10, 20) if SCALE == "full" else (3, 5))
+    methods = ("dense", "coboosting")
+    rows = []
+    for n in ns:
+        sc_n = dataclasses.replace(sc, clients=n)
+        for seed in sc.seeds:
+            res = bench_setting(methods, sc_n, seed=seed, num_clients=n)
+            for m, r in res.items():
+                rows.append(dict(clients=n, seed=seed, method=m,
+                                 server_acc=round(r["server_acc"], 4),
+                                 ensemble_acc=round(r["ensemble_acc"], 4)))
+    print_csv("table6_clients (client-count sweep)", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.npz import save_checkpoint, load_checkpoint, list_checkpoints
+
+__all__ = ["save_checkpoint", "load_checkpoint", "list_checkpoints"]

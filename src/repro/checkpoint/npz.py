@@ -1,0 +1,60 @@
+"""Flat-npz pytree checkpointing with an index manifest.
+
+Params are nested dicts; we flatten to "a/b/c" keys, store one ``.npz`` per
+step plus a ``manifest.json`` recording steps, shapes and metadata. Arrays
+are pulled to host (fully addressable values only — on a real multi-host
+mesh you would gather or save per-shard; this container is single-host).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.utils import flatten_dict, unflatten_dict
+
+
+def _manifest_path(ckpt_dir: str) -> str:
+    return os.path.join(ckpt_dir, "manifest.json")
+
+
+def _read_manifest(ckpt_dir: str) -> Dict:
+    path = _manifest_path(ckpt_dir)
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {"steps": [], "meta": {}}
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any, meta: Optional[Dict] = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = flatten_dict(tree)
+    host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    fname = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    np.savez(fname, **host)
+    manifest = _read_manifest(ckpt_dir)
+    if step not in manifest["steps"]:
+        manifest["steps"].append(step)
+        manifest["steps"].sort()
+    manifest["meta"][str(step)] = dict(meta or {}, keys=len(host))
+    with open(_manifest_path(ckpt_dir), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return fname
+
+
+def load_checkpoint(ckpt_dir: str, step: Optional[int] = None) -> Any:
+    manifest = _read_manifest(ckpt_dir)
+    if not manifest["steps"]:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    step = manifest["steps"][-1] if step is None else step
+    fname = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    with np.load(fname) as data:
+        flat = {k: data[k] for k in data.files}
+    return unflatten_dict(flat)
+
+
+def list_checkpoints(ckpt_dir: str) -> List[int]:
+    return list(_read_manifest(ckpt_dir)["steps"])

@@ -1,0 +1,24 @@
+from repro.config.model import ModelConfig, reduced_variant
+from repro.config.shapes import ShapeConfig, INPUT_SHAPES
+from repro.config.mesh import MeshConfig
+from repro.config.train import TrainConfig, OFLConfig
+from repro.config.registry import (
+    register_arch,
+    get_arch,
+    list_archs,
+    arch_supports_shape,
+)
+
+__all__ = [
+    "ModelConfig",
+    "reduced_variant",
+    "ShapeConfig",
+    "INPUT_SHAPES",
+    "MeshConfig",
+    "TrainConfig",
+    "OFLConfig",
+    "register_arch",
+    "get_arch",
+    "list_archs",
+    "arch_supports_shape",
+]

@@ -1,0 +1,41 @@
+"""Mesh configuration: logical axes and hardware constants (TPU v5e)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    @property
+    def data_axes(self) -> Tuple[str, ...]:
+        """Axes batch/FSDP shard over (pod folds into data parallel)."""
+        return tuple(a for a in self.axes if a in ("pod", "data"))
+
+    @property
+    def model_axis(self) -> str:
+        return "model"
+
+    def axis_size(self, name: str) -> int:
+        return self.shape[self.axes.index(name)]
+
+
+SINGLE_POD = MeshConfig((16, 16), ("data", "model"))
+MULTI_POD = MeshConfig((2, 16, 16), ("pod", "data", "model"))
+
+# TPU v5e hardware constants used by the roofline model.
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link (per the assignment sheet)
+HBM_BYTES = 16 * 1024**3
+VMEM_BYTES = 128 * 1024 * 1024

@@ -1,0 +1,206 @@
+"""Frozen model configuration covering every assigned architecture family.
+
+One dataclass describes dense, MoE, SSM (mamba / xlstm), hybrid, encoder-only
+(audio) and VLM decoders. Family-specific fields default to "off". Every
+config file in :mod:`repro.configs` instantiates exactly one of these and
+registers it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    # identity ---------------------------------------------------------------
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    source: str = ""  # citation for the assigned config
+
+    # trunk ------------------------------------------------------------------
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 0  # 0 => d_model // num_heads
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    act: str = "silu"  # silu (SwiGLU) | gelu (plain MLP, hubert)
+
+    # attention --------------------------------------------------------------
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+    causal: bool = True
+    sliding_window: int = 0  # 0 = full attention
+    attn_logit_softcap: float = 0.0
+
+    # MoE --------------------------------------------------------------------
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0  # expert hidden dim; 0 => d_ff
+    router_aux_coef: float = 0.01
+    shared_expert: bool = False
+    moe_impl: str = "einsum"  # einsum (GShard dispatch, baseline) | scatter (dropless-ish)
+    moe_capacity_factor: float = 1.25
+    moe_group_size: int = 0  # tokens per dispatch group; 0 => one group per sequence
+
+    # SSM / hybrid -----------------------------------------------------------
+    ssm_kind: str = ""  # "" | mamba | xlstm
+    ssm_state_dim: int = 16  # mamba N
+    ssm_conv_dim: int = 4  # mamba depthwise conv width
+    ssm_expand: int = 2  # mamba inner expansion
+    ssm_chunk: int = 128  # selective-scan chunk length (intra-chunk parallel)
+    dt_rank: int = 0  # mamba dt low-rank; 0 => ceil(d_model / 16)
+    attn_every: int = 0  # hybrid: one attention layer per this many (jamba=8)
+    moe_every: int = 0  # hybrid: MoE MLP every this many layers (jamba=2)
+    slstm_every: int = 0  # xlstm: one sLSTM block per this many (rest mLSTM)
+    xlstm_heads: int = 4
+
+    # modality frontend stub ---------------------------------------------------
+    frontend: str = ""  # "" | vision | audio
+    frontend_dim: int = 0  # raw patch/frame embedding dim fed to the projector
+    num_prefix_tokens: int = 0  # patch/frame embeddings provided by input_specs
+
+    # numerics -----------------------------------------------------------------
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    remat: bool = True
+    scan_layers: bool = True
+    logit_dtype: str = "float32"
+
+    # derived -------------------------------------------------------------------
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    @property
+    def is_encoder_only(self) -> bool:
+        return self.family == "audio"
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True if the arch can decode at 500k+ context (SSM/hybrid state or SWA)."""
+        return self.ssm_kind != "" or self.sliding_window > 0
+
+    @property
+    def expert_d_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    @property
+    def dt_rank_(self) -> int:
+        return self.dt_rank or max(1, -(-self.d_model // 16))
+
+    @property
+    def ssm_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    def validate(self) -> None:
+        assert self.family in ("dense", "moe", "ssm", "hybrid", "audio", "vlm"), self.family
+        assert self.num_heads % max(self.num_kv_heads, 1) == 0, (
+            f"{self.name}: heads {self.num_heads} not divisible by kv {self.num_kv_heads}"
+        )
+        if self.family == "moe":
+            assert self.num_experts > 0 and self.experts_per_token > 0
+        if self.family == "hybrid":
+            assert self.ssm_kind and self.attn_every > 0
+        if self.family == "ssm":
+            assert self.ssm_kind in ("mamba", "xlstm")
+        if self.frontend:
+            assert self.num_prefix_tokens > 0
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # parameter count estimate (for roofline MODEL_FLOPS = 6 N D) --------------
+    def param_count(self, active_only: bool = False) -> int:
+        d, h = self.d_model, self.head_dim_
+        attn = d * h * self.num_heads + 2 * d * h * self.num_kv_heads + self.num_heads * h * d
+        if self.act == "silu":
+            mlp_dense = 3 * d * self.d_ff
+        else:
+            mlp_dense = 2 * d * self.d_ff
+        n_layers = self.num_layers
+        per_layer = 0
+        for i in range(n_layers):
+            is_attn = True
+            if self.family in ("ssm",) or (
+                self.family == "hybrid" and self.attn_every and (i % self.attn_every) != (self.attn_every - 1)
+            ):
+                is_attn = self.family != "ssm" and False
+            layer = 0
+            if self.family == "ssm" and self.ssm_kind == "mamba":
+                inner = self.ssm_expand * d
+                layer += 2 * d * inner + inner * self.ssm_conv_dim
+                layer += inner * (2 * self.ssm_state_dim + 1) + inner * d
+            elif self.family == "ssm" and self.ssm_kind == "xlstm":
+                inner = self.ssm_expand * d
+                layer += 2 * d * inner + 4 * inner * inner // max(self.xlstm_heads, 1) + inner * d
+            elif self.family == "hybrid" and not is_attn:
+                inner = self.ssm_expand * d
+                layer += 2 * d * inner + inner * self.ssm_conv_dim
+                layer += inner * (2 * self.ssm_state_dim + 1) + inner * d
+            else:
+                layer += attn
+            # MLP
+            use_moe = self.num_experts > 0 and (
+                self.family == "moe"
+                or (self.family == "hybrid" and self.moe_every and i % self.moe_every == self.moe_every - 1)
+            )
+            if use_moe:
+                e = self.num_experts if not active_only else self.experts_per_token
+                layer += e * 3 * d * self.expert_d_ff + d * self.num_experts
+            elif self.family not in ("ssm",):
+                layer += mlp_dense
+            layer += 2 * d  # norms
+            per_layer += layer
+        embed = self.vocab_size * d
+        head = 0 if self.tie_embeddings or self.is_encoder_only else self.vocab_size * d
+        if self.is_encoder_only:
+            head = self.vocab_size * d  # frame-codebook prediction head
+        return per_layer + embed + head + d
+
+
+def reduced_variant(cfg: ModelConfig) -> ModelConfig:
+    """The CPU-smoke-test variant: <=2 layers (or one full interleave group for
+    hybrids), d_model<=512, <=4 experts — same family and code paths."""
+    d_model = min(cfg.d_model, 128)
+    heads = min(cfg.num_heads, 4)
+    kv = max(1, min(cfg.num_kv_heads, heads))
+    while heads % kv:
+        kv -= 1
+    layers = 2
+    kw = dict(
+        num_layers=layers,
+        d_model=d_model,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=32,
+        d_ff=min(cfg.d_ff, 256) or 0,
+        vocab_size=min(cfg.vocab_size, 512),
+        num_experts=min(cfg.num_experts, 4) if cfg.num_experts else 0,
+        experts_per_token=min(cfg.experts_per_token, 2) if cfg.experts_per_token else 0,
+        moe_d_ff=min(cfg.moe_d_ff, 128) if cfg.moe_d_ff else 0,
+        num_prefix_tokens=min(cfg.num_prefix_tokens, 16) if cfg.num_prefix_tokens else 0,
+        sliding_window=min(cfg.sliding_window, 64) if cfg.sliding_window else 0,
+        ssm_chunk=16,
+        moe_group_size=0,
+        scan_layers=False,
+        remat=False,
+        name=cfg.name + "-smoke",
+    )
+    if cfg.family == "hybrid":
+        kw["num_layers"] = cfg.attn_every  # one full interleave group
+        kw["attn_every"] = cfg.attn_every
+        kw["moe_every"] = cfg.moe_every
+    if cfg.family == "ssm" and cfg.ssm_kind == "xlstm" and cfg.slstm_every:
+        kw["num_layers"] = max(2, cfg.slstm_every)
+        kw["xlstm_heads"] = min(cfg.xlstm_heads, 4)
+    return cfg.replace(**kw)

@@ -1,0 +1,53 @@
+"""Architecture registry.
+
+Configs register themselves at import; ``get_arch`` lazily imports
+``repro.configs`` so the registry is populated on first use. Arch ids use
+dashes (CLI form); module names use underscores.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.config.model import ModelConfig
+from repro.config.shapes import ShapeConfig
+
+_REGISTRY: Dict[str, ModelConfig] = {}
+
+
+def register_arch(cfg: ModelConfig) -> ModelConfig:
+    cfg.validate()
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def _ensure_loaded() -> None:
+    if not _REGISTRY:
+        importlib.import_module("repro.configs")
+
+
+def get_arch(name: str) -> ModelConfig:
+    _ensure_loaded()
+    key = name.replace("_", "-")
+    if key not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[key]
+
+
+def list_archs() -> List[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def arch_supports_shape(cfg: ModelConfig, shape: ShapeConfig) -> str:
+    """Return "" if supported, else a human-readable skip reason.
+
+    Skip rules (documented in DESIGN.md):
+      * encoder-only archs have no decode step;
+      * long_500k decode requires a sub-quadratic path (SSM state or SWA).
+    """
+    if cfg.is_encoder_only and shape.kind == "decode":
+        return "encoder-only: no autoregressive decode step"
+    if shape.kind == "decode" and shape.seq_len > 100_000 and not cfg.is_subquadratic:
+        return "long_500k needs sub-quadratic attention (no SWA/SSM path)"
+    return ""

@@ -1,0 +1,28 @@
+"""Assigned-architecture configs. Importing this package registers every
+architecture with :mod:`repro.config.registry` (``--arch <id>`` in the
+launchers)."""
+from repro.configs import (
+    qwen3_moe_235b_a22b,
+    mixtral_8x7b,
+    xlstm_125m,
+    hubert_xlarge,
+    smollm_135m,
+    phi_3_vision_4_2b,
+    qwen3_32b,
+    granite_3_2b,
+    internlm2_20b,
+    jamba_v0_1_52b,
+)
+
+ASSIGNED_ARCHS = [
+    "qwen3-moe-235b-a22b",
+    "mixtral-8x7b",
+    "xlstm-125m",
+    "hubert-xlarge",
+    "smollm-135m",
+    "phi-3-vision-4.2b",
+    "qwen3-32b",
+    "granite-3-2b",
+    "internlm2-20b",
+    "jamba-v0.1-52b",
+]

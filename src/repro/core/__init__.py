@@ -1,0 +1,82 @@
+"""The paper's contribution: Co-Boosting one-shot federated distillation.
+
+Eq. 2        -> :mod:`repro.core.ensemble`
+Eq. 5-8      -> :mod:`repro.core.hardness`
+Eq. 9-10     -> :mod:`repro.core.hard_samples`
+Eq. 11-12    -> :mod:`repro.core.weight_search`
+Algorithm 1  -> :mod:`repro.core.coboosting`
+Baselines    -> :mod:`repro.core.baselines`
+LM-scale     -> :mod:`repro.core.distributed`
+"""
+from repro.core.losses import ce_loss, ce_per_sample, kl_loss, kl_per_sample, entropy
+from repro.core.ensemble import (
+    uniform_weights,
+    data_amount_weights,
+    make_logits_all,
+    make_logits_all_stacked,
+    ensemble_logits,
+    ensemble_accuracy,
+)
+from repro.core.hardness import sample_difficulty, ghs_loss, adversarial_loss, generator_loss
+from repro.core.hard_samples import diversify
+from repro.core.weight_search import normalize_weights, weight_loss, update_weights
+from repro.core.coboosting import (
+    OFLState,
+    run_coboosting,
+    make_generator_phase,
+    make_distill_step,
+    make_ee_step,
+    default_image_setup,
+)
+from repro.core.baselines import (
+    fedavg,
+    run_generator_baseline,
+    run_adi_baseline,
+    run_feddf,
+)
+from repro.core.distributed import (
+    ensemble_lm_logits,
+    client_lm_logits,
+    dhs_embeds,
+    ee_update_lm,
+    coboost_distill_loss,
+    coboost_distill_step,
+)
+
+__all__ = [
+    "ce_loss",
+    "ce_per_sample",
+    "kl_loss",
+    "kl_per_sample",
+    "entropy",
+    "uniform_weights",
+    "data_amount_weights",
+    "make_logits_all",
+    "make_logits_all_stacked",
+    "ensemble_logits",
+    "ensemble_accuracy",
+    "sample_difficulty",
+    "ghs_loss",
+    "adversarial_loss",
+    "generator_loss",
+    "diversify",
+    "normalize_weights",
+    "weight_loss",
+    "update_weights",
+    "OFLState",
+    "run_coboosting",
+    "make_generator_phase",
+    "make_distill_step",
+    "make_ee_step",
+    "default_image_setup",
+    "fedavg",
+    "run_generator_baseline",
+    "run_adi_baseline",
+    "run_feddf",
+    "ensemble_lm_logits",
+    "client_lm_logits",
+    "dhs_embeds",
+    "ee_update_lm",
+    "coboost_distill_loss",
+    "coboost_distill_step",
+]

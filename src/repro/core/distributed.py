@@ -1,0 +1,189 @@
+"""Distributed (LM-scale) Co-Boosting — the paper's technique promoted to a
+first-class feature of the multi-pod framework.
+
+The paper runs Algorithm 1 over small CNNs. Here the clients are instances
+of the assigned LM architectures: client params are *stacked* along a
+leading K axis (they shard exactly like ordinary params — FSDP over `data`,
+tensor over `model` — because the sharding rules pad leading dims with
+``None``), and the ensemble forward is a ``lax.scan`` over clients
+accumulating weighted logits. One SPMD program, no per-client dispatch.
+
+Token models have no pixel space, so (DESIGN.md §5/§6):
+  * the generator synthesizes *embedding-space* sequences (B, S, d);
+  * DHS (Eq. 10) perturbs those embeddings;
+  * the EE labels y_s are target-token ids scored at the final position.
+
+Everything here is shape-polymorphic and jit/pjit-friendly — the multi-pod
+dry-run lowers :func:`coboost_distill_step` for the MoE/hybrid archs.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ensemble import ensemble_logits
+from repro.core.losses import kl_loss, kl_per_sample
+from repro.core.weight_search import normalize_weights
+from repro.models.transformer import lm_forward
+from repro.sharding import constrain
+from repro.utils import tree_index
+
+
+def ensemble_lm_logits(stacked_params: Any, cfg, batch: Dict, w: jax.Array) -> jax.Array:
+    """Weighted ensemble logits A_w (Eq. 2) over K stacked LM clients.
+
+    Scans over the client axis so activations for only one client are live
+    at a time (K× params, 1× activations)."""
+
+    def body(acc, inp):
+        w_k, p_k = inp
+        logits, _ = lm_forward(p_k, cfg, batch)
+        return acc + w_k * logits.astype(jnp.float32), None
+
+    k = w.shape[0]
+    sample = jax.eval_shape(lambda p: lm_forward(tree_index(p, 0), cfg, batch)[0], stacked_params)
+    acc0 = jnp.zeros(sample.shape, jnp.float32)
+    acc, _ = jax.lax.scan(body, acc0, (w.astype(jnp.float32), stacked_params))
+    return acc
+
+
+def client_lm_logits(stacked_params: Any, cfg, batch: Dict) -> jax.Array:
+    """Per-client final-position logits (K, B, V) — the EE weight search
+    operand. Only the last position is kept to bound memory."""
+
+    def body(_, p_k):
+        logits, _ = lm_forward(p_k, cfg, batch)
+        return None, logits[:, -1].astype(jnp.float32)
+
+    _, out = jax.lax.scan(body, None, stacked_params)
+    return out
+
+
+def dhs_embeds(
+    stacked_params: Any, cfg, batch: Dict, w: jax.Array, key: jax.Array, epsilon: float
+) -> Dict:
+    """Eq. 10 in embedding space: perturb batch["embeds"] along the gradient
+    of uᵀA_w at the final position."""
+    embeds = batch["embeds"]
+
+    def scalar(e):
+        b = dict(batch, embeds=e)
+        ens = ensemble_lm_logits(stacked_params, cfg, b, w)[:, -1]  # (B, V)
+        u = jax.random.uniform(key, ens.shape, jnp.float32, -1.0, 1.0)
+        return jnp.sum(u * ens)
+
+    g = jax.grad(scalar)(embeds)
+    flat = g.reshape(g.shape[0], -1).astype(jnp.float32)
+    norm = jnp.maximum(jnp.linalg.norm(flat, axis=-1), 1e-12)[:, None]
+    direction = (flat / norm).reshape(g.shape)
+    new = (embeds.astype(jnp.float32) + epsilon * direction).astype(embeds.dtype)
+    return dict(batch, embeds=new)
+
+
+def ee_update_lm(
+    w: jax.Array,
+    stacked_params: Any,
+    cfg,
+    batch: Dict,
+    labels: jax.Array,
+    mu: float,
+) -> jax.Array:
+    """Eq. 12 on LM clients: sign step on w against final-position CE."""
+    la = client_lm_logits(stacked_params, cfg, batch)  # (K, B, V)
+
+    def loss(w_):
+        ens = ensemble_logits(la, w_)  # (B, V)
+        logits = ens.astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(lse - ll)
+
+    g = jax.grad(loss)(w)
+    return normalize_weights(w - mu * jnp.sign(g))
+
+
+def coboost_distill_loss(
+    server_params: Any,
+    stacked_client_params: Any,
+    w: jax.Array,
+    cfg,
+    batch: Dict,
+    temperature: float = 4.0,
+    kl_chunk: int = 0,
+) -> jax.Array:
+    """Eq. 4 at LM scale: temperature-KL between the weighted client
+    ensemble and the server over every position.
+
+    ``kl_chunk > 0`` enables the §Perf memory lever: the LM heads are
+    factored out of the client/server forwards (``lm_features``), and the
+    (B, S, V) teacher/student logits are produced one sequence-chunk at a
+    time — the live vocab-sized tensors shrink from O(S·V) to O(chunk·V)
+    while the stored per-client features are only O(K·S·d)."""
+    if kl_chunk <= 0:
+        teacher = jax.lax.stop_gradient(ensemble_lm_logits(stacked_client_params, cfg, batch, w))
+        student, aux = lm_forward(server_params, cfg, batch)
+        loss = kl_loss(teacher, student, temperature)
+        return loss + cfg.router_aux_coef * aux
+
+    from repro.models.transformer import head_matrix, lm_features
+
+    def feats_of(p):
+        f, _ = lm_features(p, cfg, batch)
+        return f.astype(jnp.bfloat16)
+
+    def body(_, p_k):
+        return None, (feats_of(p_k), head_matrix(p_k, cfg).astype(jnp.bfloat16))
+
+    _, (cfeats, cheads) = jax.lax.scan(body, None, stacked_client_params)  # (K,B,S,d),(K,d,V)
+    cfeats = jax.lax.stop_gradient(cfeats)
+    cheads = jax.lax.stop_gradient(cheads)
+    sfeat, aux = lm_features(server_params, cfg, batch)
+    shead = head_matrix(server_params, cfg)
+
+    b, s, d = sfeat.shape
+    chunk = min(kl_chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    wf = w.astype(jnp.float32)
+
+    def chunk_body(acc, idx):
+        sl = jax.lax.dynamic_slice_in_dim(sfeat, idx * chunk, chunk, axis=1)
+        cl = jax.lax.dynamic_slice_in_dim(cfeats, idx * chunk, chunk, axis=2)
+        t = jnp.einsum("k,kbcd,kdv->bcv", wf, cl.astype(jnp.float32), cheads.astype(jnp.float32))
+        st = jnp.einsum("bcd,dv->bcv", sl, shead.astype(sl.dtype))
+        kl = kl_per_sample(t, st, temperature)  # (B, chunk)
+        return acc + jnp.sum(kl), None
+
+    total, _ = jax.lax.scan(chunk_body, jnp.zeros((), jnp.float32), jnp.arange(nc))
+    loss = total / (b * s)
+    return loss + cfg.router_aux_coef * aux
+
+
+def coboost_distill_step(
+    server_params: Any,
+    opt_state: Any,
+    stacked_client_params: Any,
+    w: jax.Array,
+    cfg,
+    batch: Dict,
+    opt,
+    step: jax.Array,
+    temperature: float = 4.0,
+    epsilon: float = 0.0,
+    key: Optional[jax.Array] = None,
+):
+    """One server distillation step (with optional in-step DHS). This is the
+    function the multi-pod dry-run lowers for the paper-technique shapes."""
+    if epsilon > 0.0 and key is not None and "embeds" in batch:
+        batch = dhs_embeds(stacked_client_params, cfg, batch, w, key, epsilon)
+    loss, grads = jax.value_and_grad(coboost_distill_loss)(
+        server_params, stacked_client_params, w, cfg, batch, temperature
+    )
+    updates, opt_state = opt.update(grads, opt_state, server_params, step)
+    from repro.optim.optimizers import apply_updates
+
+    server_params = apply_updates(server_params, updates)
+    return server_params, opt_state, loss

@@ -1,0 +1,49 @@
+"""GHM sample difficulty (Eq. 5) and the hard-sample-enhanced generator loss
+(Eq. 6–8)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.losses import ce_per_sample, kl_per_sample
+
+
+def sample_difficulty(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """d(x, f) = 1 − σ(f(x))_y  (Eq. 5). logits: (B, C); labels: (B,)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    py = jnp.take_along_axis(probs, labels[:, None], axis=-1)[:, 0]
+    return 1.0 - py
+
+
+def ghs_loss(ens_logits: jax.Array, labels: jax.Array, use_ghs: bool = True) -> jax.Array:
+    """L_H (Eq. 6): difficulty-weighted CE. With ``use_ghs=False`` this is the
+    plain CE of Eq. 3 (the ablation's base row). The difficulty weight is
+    treated as a constant (stop-gradient), matching GHM usage."""
+    ce = ce_per_sample(ens_logits, labels)
+    if not use_ghs:
+        return jnp.mean(ce)
+    d = jax.lax.stop_gradient(sample_difficulty(ens_logits, labels))
+    return jnp.mean(d * ce)
+
+
+def adversarial_loss(ens_logits: jax.Array, server_logits: jax.Array, temperature: float = 1.0) -> jax.Array:
+    """L_A (Eq. 7): −KL(A_w(x) || f_S(x)) — the generator *maximizes* the
+    ensemble/server disagreement."""
+    return -jnp.mean(kl_per_sample(ens_logits, server_logits, temperature))
+
+
+def generator_loss(
+    ens_logits: jax.Array,
+    server_logits: jax.Array,
+    labels: jax.Array,
+    *,
+    beta: float = 1.0,
+    use_ghs: bool = True,
+    use_adv: bool = True,
+    kl_temperature: float = 1.0,
+) -> jax.Array:
+    """L(θ_G) = L_H + β·L_A (Eq. 8)."""
+    loss = ghs_loss(ens_logits, labels, use_ghs)
+    if use_adv:
+        loss = loss + beta * adversarial_loss(ens_logits, server_logits, kl_temperature)
+    return loss

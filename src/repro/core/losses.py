@@ -1,0 +1,38 @@
+"""Distillation losses (Eq. 1, 4 of the paper) with temperature scaling."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ce_per_sample(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Per-sample cross entropy. logits: (B, C); labels: (B,) int."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return lse - ll
+
+
+def ce_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean(ce_per_sample(logits, labels))
+
+
+def kl_per_sample(teacher_logits: jax.Array, student_logits: jax.Array, temperature: float = 1.0) -> jax.Array:
+    """KL(softmax(t/T) || softmax(s/T)) · T² per sample. Shapes (B, C) (or
+    (..., C) — reduced over the last axis only)."""
+    t = teacher_logits.astype(jnp.float32) / temperature
+    s = student_logits.astype(jnp.float32) / temperature
+    pt = jax.nn.log_softmax(t, axis=-1)
+    ps = jax.nn.log_softmax(s, axis=-1)
+    kl = jnp.sum(jnp.exp(pt) * (pt - ps), axis=-1)
+    return kl * (temperature**2)
+
+
+def kl_loss(teacher_logits: jax.Array, student_logits: jax.Array, temperature: float = 1.0) -> jax.Array:
+    return jnp.mean(kl_per_sample(teacher_logits, student_logits, temperature))
+
+
+def entropy(logits: jax.Array) -> jax.Array:
+    """Mean predictive entropy (used by the F-DAFL baseline's info loss)."""
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.sum(jnp.exp(lp) * lp, axis=-1))

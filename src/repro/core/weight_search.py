@@ -1,0 +1,37 @@
+"""Ensemble-enhancement weight search (EE, Eq. 11–12).
+
+One sign-gradient step on the ensembling weights per synthetic batch:
+
+    w ← Normalize(w − μ · sign(∇_w L_w(w)))
+
+where L_w is the CE of the weighted ensemble on the (hard) synthetic batch
+and Normalize clips to [0, 1] and renormalizes to the simplex.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ensemble import ensemble_logits
+from repro.core.losses import ce_per_sample
+
+
+def normalize_weights(w: jax.Array) -> jax.Array:
+    w = jnp.clip(w, 0.0, 1.0)
+    return w / jnp.maximum(jnp.sum(w), 1e-12)
+
+
+def weight_loss(w: jax.Array, logits_all: jax.Array, labels: jax.Array) -> jax.Array:
+    """L_w (Eq. 11) on precomputed client logits (n, B, C)."""
+    ens = ensemble_logits(logits_all, w)
+    return jnp.mean(ce_per_sample(ens, labels))
+
+
+def update_weights(
+    w: jax.Array, logits_all: jax.Array, labels: jax.Array, mu: float
+) -> jax.Array:
+    """One Eq. 12 step. ``mu`` is the paper's step size (0.1/n by default)."""
+    g = jax.grad(weight_loss)(w, logits_all, labels)
+    return normalize_weights(w - mu * jnp.sign(g))

@@ -1,0 +1,26 @@
+from repro.data.synthetic import (
+    make_synth_images,
+    make_token_stream,
+    make_lm_distill_batch,
+)
+from repro.data.partitions import (
+    dirichlet_partition,
+    c_cls_partition,
+    iid_partition,
+    lognormal_resize,
+    partition_dataset,
+)
+from repro.data.loader import batch_iterator, shuffle_arrays
+
+__all__ = [
+    "make_synth_images",
+    "make_token_stream",
+    "make_lm_distill_batch",
+    "dirichlet_partition",
+    "c_cls_partition",
+    "iid_partition",
+    "lognormal_resize",
+    "partition_dataset",
+    "batch_iterator",
+    "shuffle_arrays",
+]

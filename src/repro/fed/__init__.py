@@ -1,0 +1,4 @@
+from repro.fed.client import local_train, evaluate_cnn
+from repro.fed.market import build_market, market_eval_fn
+
+__all__ = ["local_train", "evaluate_cnn", "build_market", "market_eval_fn"]

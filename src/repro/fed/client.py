@@ -1,0 +1,64 @@
+"""Client-side local training (the phase that happens *before* the single
+communication round — Co-Boosting never touches it, per the model-market
+constraint)."""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.train import TrainConfig
+from repro.core.losses import ce_loss
+from repro.data.loader import batch_iterator
+from repro.optim import make_optimizer
+from repro.optim.optimizers import apply_updates, clip_by_global_norm
+
+
+def local_train(
+    apply_fn: Callable,
+    params: Any,
+    x: np.ndarray,
+    y: np.ndarray,
+    tc: TrainConfig,
+    epochs: int,
+) -> Any:
+    """SGD-momentum local training on one client's shard (paper App. B.1:
+    lr=0.01, momentum=0.9)."""
+    opt = make_optimizer(tc)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(params, opt_state, xb, yb, i):
+        def loss_fn(p):
+            return ce_loss(apply_fn(p, xb), yb)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        if tc.grad_clip_norm > 0:
+            grads = clip_by_global_norm(grads, tc.grad_clip_norm)
+        updates, opt_state2 = opt.update(grads, opt_state, params, i)
+        return apply_updates(params, updates), opt_state2, loss
+
+    i = 0
+    for xb, yb in batch_iterator(x, y, tc.batch_size, seed=tc.seed, epochs=epochs):
+        params, opt_state, _ = step(params, opt_state, jnp.asarray(xb), jnp.asarray(yb), jnp.asarray(i, jnp.int32))
+        i += 1
+    return params
+
+
+def evaluate_cnn(
+    apply_fn: Callable, params: Any, x: np.ndarray, y: np.ndarray, batch_size: int = 512
+) -> float:
+    """Top-1 accuracy."""
+
+    @jax.jit
+    def pred(params, xb):
+        return jnp.argmax(apply_fn(params, xb), axis=-1)
+
+    correct = 0
+    for i in range(0, len(x), batch_size):
+        xb = jnp.asarray(x[i : i + batch_size])
+        p = np.asarray(pred(params, xb))
+        correct += int((p == y[i : i + batch_size]).sum())
+    return correct / len(x)

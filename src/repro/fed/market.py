@@ -1,0 +1,98 @@
+"""Model-market simulation: partition a dataset, locally train each client,
+and hand the server nothing but the pre-trained models (+ sizes).
+
+This is the setting of the whole paper — the server-side pipeline
+(:mod:`repro.core`) must work from these artifacts alone.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.train import OFLConfig, TrainConfig
+from repro.core.ensemble import ensemble_logits, make_logits_all
+from repro.data.partitions import partition_dataset
+from repro.fed.client import evaluate_cnn, local_train
+from repro.models.cnn import cnn_apply, init_cnn
+from repro.utils import get_logger
+
+log = get_logger("market")
+
+
+def build_market(
+    seed: int,
+    x: np.ndarray,
+    y: np.ndarray,
+    cfg: OFLConfig,
+    num_classes: int,
+    archs: Optional[Sequence[str]] = None,
+    local_epochs: Optional[int] = None,
+) -> Tuple[List[Callable], List[Any], List[int], List[np.ndarray]]:
+    """Returns (client_apply_fns, client_params, shard_sizes, shard_indices).
+
+    ``archs``: one CNN arch id per client (heterogeneous market) or None for
+    all-``cnn5``."""
+    n = cfg.num_clients
+    archs = list(archs) if archs else ["cnn5"] * n
+    assert len(archs) == n
+    parts = partition_dataset(seed, y, cfg)
+    in_shape = x.shape[1:]
+    tc = TrainConfig(
+        optimizer="sgdm",
+        learning_rate=cfg.local_lr,
+        momentum=cfg.local_momentum,
+        batch_size=cfg.local_batch_size,
+        seed=seed,
+    )
+    applies, params_list, sizes = [], [], []
+    epochs = cfg.local_epochs if local_epochs is None else local_epochs
+    for k in range(n):
+        key = jax.random.fold_in(jax.random.key(seed), k)
+        p0 = init_cnn(key, archs[k], num_classes, in_shape)
+        xb, yb = x[parts[k]], y[parts[k]]
+        pk = local_train(partial(cnn_apply, archs[k]), p0, xb, yb, tc, epochs)
+        applies.append(partial(cnn_apply, archs[k]))
+        params_list.append(pk)
+        sizes.append(len(parts[k]))
+        acc = evaluate_cnn(applies[-1], pk, xb[: min(512, len(xb))], yb[: min(512, len(yb))])
+        log.info("client %d (%s): shard=%d train-acc=%.3f", k, archs[k], len(parts[k]), acc)
+    return applies, params_list, sizes, parts
+
+
+def market_eval_fn(
+    client_applies: List[Callable],
+    client_params: List[Any],
+    server_apply: Callable,
+    test_x: np.ndarray,
+    test_y: np.ndarray,
+    batch_size: int = 512,
+) -> Callable:
+    """Builds eval_fn(server_params, w) -> {server_acc, ensemble_acc}."""
+    logits_all_fn = make_logits_all(client_applies)
+    client_params = tuple(client_params)
+
+    @jax.jit
+    def _batch_preds(server_params, w, xb):
+        la = logits_all_fn(client_params, xb)
+        ens_pred = jnp.argmax(ensemble_logits(la, w), axis=-1)
+        srv_pred = jnp.argmax(server_apply(server_params, xb), axis=-1)
+        return ens_pred, srv_pred
+
+    def eval_fn(server_params, w) -> Dict[str, float]:
+        ens_ok = srv_ok = 0
+        for i in range(0, len(test_x), batch_size):
+            xb = jnp.asarray(test_x[i : i + batch_size])
+            ep, sp = _batch_preds(server_params, w, xb)
+            yb = test_y[i : i + batch_size]
+            ens_ok += int((np.asarray(ep) == yb).sum())
+            srv_ok += int((np.asarray(sp) == yb).sum())
+        return {
+            "ensemble_acc": ens_ok / len(test_x),
+            "server_acc": srv_ok / len(test_x),
+        }
+
+    return eval_fn

@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+* :mod:`repro.kernels.ensemble_kl`     — fused weighted-ensemble + KL (Eq. 4)
+* :mod:`repro.kernels.ghm_ce`          — fused GHM-difficulty CE (Eq. 5-6)
+* :mod:`repro.kernels.flash_attention` — blocked causal/SWA attention
+
+Each subpackage: ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(jit'd wrapper, interpret-mode on CPU), ``ref.py`` (pure-jnp oracle).
+"""
+from repro.kernels.ensemble_kl import ensemble_kl, ensemble_kl_ref
+from repro.kernels.ghm_ce import ghm_ce, ghm_ce_ref
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+
+__all__ = [
+    "ensemble_kl",
+    "ensemble_kl_ref",
+    "ghm_ce",
+    "ghm_ce_ref",
+    "flash_attention",
+    "flash_attention_ref",
+]

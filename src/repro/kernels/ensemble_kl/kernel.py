@@ -1,0 +1,121 @@
+"""Fused weighted-ensemble + temperature-KL Pallas TPU kernel.
+
+Eq. 4 of the paper evaluates KL(A_w(x) ‖ f_S(x)) where A_w = Σ_k w_k·f_k is
+the weighted client-logit ensemble. Materializing A_w for an LLM vocab
+(e.g. 151,936) means an extra K×(B,V) + (B,V) HBM round-trip per step. This
+kernel streams (K, bb, bv) client-logit tiles and (bb, bv) student tiles
+through VMEM, combines them with w on the fly, and maintains *online*
+softmax statistics so the KL per sample is produced in a single pass:
+
+    KL·T² where  KL = N/D − (log D + m_t) + (log D_s + m_s)
+    N  = Σ_v e^{t_v−m_t}·(t_v − s_v),  D = Σ_v e^{t_v−m_t}
+    (t, s are the temperature-scaled teacher/student logits)
+
+Grid: (batch_tiles, vocab_tiles); vocab is the minor (fastest) grid dim so
+the five (bb,) accumulators live in VMEM scratch across a vocab sweep.
+Blocks are (8·n, 128·m)-aligned for the VPU; the combine is a K-step fma,
+not an MXU matmul — this kernel is memory-bound by design (the roofline win
+is removing the A_w HBM materialization).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(w_ref, client_ref, student_ref, out_ref, mt_ref, dt_ref, nt_ref, ms_ref, ds_ref, *, temperature: float, num_vocab_tiles: int, vocab: int, block_v: int):
+    vi = pl.program_id(1)
+
+    @pl.when(vi == 0)
+    def _init():
+        mt_ref[...] = jnp.full_like(mt_ref, NEG)
+        dt_ref[...] = jnp.zeros_like(dt_ref)
+        nt_ref[...] = jnp.zeros_like(nt_ref)
+        ms_ref[...] = jnp.full_like(ms_ref, NEG)
+        ds_ref[...] = jnp.zeros_like(ds_ref)
+
+    w = w_ref[...]  # (K, 1) f32
+    cl = client_ref[...].astype(jnp.float32)  # (K, bb, bv)
+    t = jnp.sum(w[:, :, None] * cl, axis=0) / temperature  # (bb, bv)
+    s = student_ref[...].astype(jnp.float32) / temperature
+
+    # mask the padded vocab tail
+    col = vi * block_v + jax.lax.broadcasted_iota(jnp.int32, t.shape, 1)
+    valid = col < vocab
+    t = jnp.where(valid, t, NEG)
+    s_for_lse = jnp.where(valid, s, NEG)
+    diff = jnp.where(valid, t - s, 0.0)
+
+    # online teacher stats
+    mt_old = mt_ref[...]
+    mt_new = jnp.maximum(mt_old, jnp.max(t, axis=-1, keepdims=True))
+    corr_t = jnp.exp(mt_old - mt_new)
+    p = jnp.exp(t - mt_new)
+    dt_ref[...] = dt_ref[...] * corr_t + jnp.sum(p, axis=-1, keepdims=True)
+    nt_ref[...] = nt_ref[...] * corr_t + jnp.sum(p * diff, axis=-1, keepdims=True)
+    mt_ref[...] = mt_new
+
+    # online student logsumexp
+    ms_old = ms_ref[...]
+    ms_new = jnp.maximum(ms_old, jnp.max(s_for_lse, axis=-1, keepdims=True))
+    ds_ref[...] = ds_ref[...] * jnp.exp(ms_old - ms_new) + jnp.sum(
+        jnp.exp(s_for_lse - ms_new), axis=-1, keepdims=True
+    )
+    ms_ref[...] = ms_new
+
+    @pl.when(vi == num_vocab_tiles - 1)
+    def _final():
+        d = dt_ref[...]
+        kl = nt_ref[...] / d - (jnp.log(d) + mt_ref[...]) + (jnp.log(ds_ref[...]) + ms_ref[...])
+        out_ref[...] = (kl * (temperature**2)).astype(out_ref.dtype)
+
+
+def ensemble_kl_pallas(
+    client_logits: jax.Array,
+    student_logits: jax.Array,
+    w: jax.Array,
+    temperature: float = 1.0,
+    *,
+    block_b: int = 8,
+    block_v: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """client_logits: (K, B, V); student_logits: (B, V); w: (K,).
+    Returns per-sample KL·T² of shape (B,)."""
+    k, b, v = client_logits.shape
+    block_b = min(block_b, b)
+    block_v = min(block_v, v)
+    pb = (-b) % block_b
+    pv = (-v) % block_v
+    if pb or pv:
+        client_logits = jnp.pad(client_logits, ((0, 0), (0, pb), (0, pv)))
+        student_logits = jnp.pad(student_logits, ((0, pb), (0, pv)))
+    bp, vp = b + pb, v + pv
+    nb, nv = bp // block_b, vp // block_v
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel,
+            temperature=float(temperature),
+            num_vocab_tiles=nv,
+            vocab=v,
+            block_v=block_v,
+        ),
+        grid=(nb, nv),
+        in_specs=[
+            pl.BlockSpec((k, 1), lambda bi, vi: (0, 0)),
+            pl.BlockSpec((k, block_b, block_v), lambda bi, vi: (0, bi, vi)),
+            pl.BlockSpec((block_b, block_v), lambda bi, vi: (bi, vi)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda bi, vi: (bi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, 1), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_b, 1), jnp.float32) for _ in range(5)],
+        interpret=interpret,
+    )(w.astype(jnp.float32).reshape(k, 1), client_logits, student_logits)
+    return out[:b, 0]

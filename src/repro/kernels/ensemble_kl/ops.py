@@ -1,0 +1,43 @@
+"""Jitted public wrapper for the fused ensemble-KL kernel.
+
+On CPU (this container) the Pallas body executes in interpret mode; on TPU
+the same BlockSpecs tile VMEM. ``use_kernel=False`` falls back to the
+pure-jnp reference (used by XLA-fusion comparison benchmarks).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ensemble_kl.kernel import ensemble_kl_pallas
+from repro.kernels.ensemble_kl.ref import ensemble_kl_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("temperature", "use_kernel", "block_b", "block_v"))
+def ensemble_kl(
+    client_logits: jax.Array,
+    student_logits: jax.Array,
+    w: jax.Array,
+    temperature: float = 1.0,
+    use_kernel: bool = True,
+    block_b: int = 8,
+    block_v: int = 512,
+) -> jax.Array:
+    """Per-sample KL(A_w ‖ student)·T². client_logits: (K, B, V)."""
+    if not use_kernel:
+        return ensemble_kl_ref(client_logits, student_logits, w, temperature)
+    return ensemble_kl_pallas(
+        client_logits,
+        student_logits,
+        w,
+        temperature,
+        block_b=block_b,
+        block_v=block_v,
+        interpret=not _on_tpu(),
+    )

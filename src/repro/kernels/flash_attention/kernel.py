@@ -1,0 +1,154 @@
+"""Blocked causal / sliding-window attention Pallas TPU kernel.
+
+The long-context shapes (prefill_32k, long_500k SWA) make attention the
+compute hot spot; this kernel is the TPU tiling of the online-softmax
+algorithm (same math as :func:`repro.models.attention.flash_attn_jax`, its
+lowering-friendly jnp twin):
+
+  * grid (batch·kv_head·q_per_kv, q_tiles, kv_tiles) — kv minor so the
+    (m, l, acc) statistics stay in VMEM scratch across a kv sweep;
+  * blocks (block_q, head_dim) / (block_kv, head_dim) — head_dim padded to
+    the 128-lane width, block_q a multiple of 8 sublanes; the s·v product
+    hits the MXU with both contraction dims 128-aligned;
+  * causal and sliding-window masks are computed from program ids, and
+    fully-masked kv tiles are skipped via the mask check inside @pl.when
+    (interpret mode runs them; on TPU the compiler hoists the branch).
+
+GQA is handled by folding q_per_kv into the grid's batch dim so each kernel
+instance sees exactly one (q-head, kv-head) pair — no head broadcast inside.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    causal: bool,
+    window: int,
+    softcap: float,
+    block_q: int,
+    block_kv: int,
+    num_kv_tiles: int,
+    seq_k: int,
+    scale: float,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)  # (bkv, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bkv)
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    ok = k_pos < seq_k
+    if causal:
+        ok &= k_pos <= q_pos
+    if window > 0:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok, s, NEG)
+
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_old - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ()))
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == num_kv_tiles - 1)
+    def _final():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_q: int = 256,
+    block_kv: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KH, hd), H % KH == 0.
+    Returns (B, Sq, H, hd)."""
+    b, sq, h, hd = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = 1.0 / (hd**0.5)
+    block_q = min(block_q, max(8, sq))
+    block_kv = min(block_kv, max(8, sk))
+    pq = (-sq) % block_q
+    pk = (-sk) % block_kv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    sqp, skp = sq + pq, sk + pk
+    nq, nk = sqp // block_q, skp // block_kv
+
+    # fold (B, KH, G) into one grid dim; layout (BHG, S, hd)
+    qf = q.reshape(b, sqp, kh, g, hd).transpose(0, 2, 3, 1, 4).reshape(b * kh * g, sqp, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kh, skp, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kh, skp, hd)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel,
+            causal=causal,
+            window=window,
+            softcap=softcap,
+            block_q=block_q,
+            block_kv=block_kv,
+            num_kv_tiles=nk,
+            seq_k=sk,
+            scale=scale,
+        ),
+        grid=(b * kh * g, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda bh, qi, ki: (bh // g, ki, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda bh, qi, ki: (bh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kh * g, sqp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out.reshape(b, kh, g, sqp, hd).transpose(0, 3, 1, 2, 4).reshape(b, sqp, h, hd)
+    return out[:, :sq]

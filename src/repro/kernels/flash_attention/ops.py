@@ -1,0 +1,44 @@
+"""Jitted public wrapper for the flash-attention kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "use_kernel", "block_q", "block_kv"),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    use_kernel: bool = True,
+    block_q: int = 256,
+    block_kv: int = 256,
+) -> jax.Array:
+    """Blocked causal/SWA attention. q: (B,Sq,H,hd); k,v: (B,Sk,KH,hd)."""
+    if not use_kernel:
+        return flash_attention_ref(q, k, v, causal=causal, window=window, softcap=softcap)
+    return flash_attention_pallas(
+        q,
+        k,
+        v,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        block_q=block_q,
+        block_kv=block_kv,
+        interpret=not _on_tpu(),
+    )

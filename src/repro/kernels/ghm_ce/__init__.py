@@ -1,0 +1,4 @@
+from repro.kernels.ghm_ce.ops import ghm_ce
+from repro.kernels.ghm_ce.ref import ghm_ce_ref
+
+__all__ = ["ghm_ce", "ghm_ce_ref"]

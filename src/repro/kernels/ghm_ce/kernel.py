@@ -1,0 +1,122 @@
+"""Fused GHM-difficulty-weighted cross-entropy (Eq. 5–6) Pallas TPU kernel.
+
+The hard-sample generator loss weights each sample's CE by its difficulty
+d = 1 − softmax(A_w(x))_y. Both quantities come from the same softmax
+statistics, so the kernel computes the weighted ensemble tile, the online
+logsumexp, and the label logit in one vocab sweep:
+
+    lse  = m + log Σ e^{t−m}        (online across vocab tiles)
+    l_y  = t[label]                 (picked up in the tile that owns label)
+    out  = (1 − e^{l_y − lse}) · (lse − l_y)
+
+Grid: (batch_tiles, vocab_tiles), vocab minor; scratch: m, d, ly per row.
+Labels ride along as a (bb, 1) int32 block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(
+    w_ref,
+    client_ref,
+    label_ref,
+    out_ref,
+    m_ref,
+    d_ref,
+    ly_ref,
+    *,
+    num_vocab_tiles: int,
+    vocab: int,
+    block_v: int,
+    weighted: bool,
+):
+    vi = pl.program_id(1)
+
+    @pl.when(vi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        d_ref[...] = jnp.zeros_like(d_ref)
+        ly_ref[...] = jnp.zeros_like(ly_ref)
+
+    w = w_ref[...]  # (K, 1)
+    cl = client_ref[...].astype(jnp.float32)  # (K, bb, bv)
+    t = jnp.sum(w[:, :, None] * cl, axis=0)  # (bb, bv)
+
+    col = vi * block_v + jax.lax.broadcasted_iota(jnp.int32, t.shape, 1)
+    valid = col < vocab
+    t = jnp.where(valid, t, NEG)
+
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, jnp.max(t, axis=-1, keepdims=True))
+    d_ref[...] = d_ref[...] * jnp.exp(m_old - m_new) + jnp.sum(
+        jnp.exp(t - m_new), axis=-1, keepdims=True
+    )
+    m_ref[...] = m_new
+
+    labels = label_ref[...]  # (bb, 1) int32
+    hit = col == labels  # (bb, bv)
+    ly_ref[...] += jnp.sum(jnp.where(hit, t, 0.0), axis=-1, keepdims=True)
+
+    @pl.when(vi == num_vocab_tiles - 1)
+    def _final():
+        lse = jnp.log(d_ref[...]) + m_ref[...]
+        ly = ly_ref[...]
+        nll = lse - ly
+        if weighted:
+            d_hard = 1.0 - jnp.exp(ly - lse)  # Eq. 5
+            nll = d_hard * nll  # Eq. 6
+        out_ref[...] = nll.astype(out_ref.dtype)
+
+
+def ghm_ce_pallas(
+    client_logits: jax.Array,
+    labels: jax.Array,
+    w: jax.Array,
+    *,
+    weighted: bool = True,
+    block_b: int = 8,
+    block_v: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """client_logits: (K, B, V); labels: (B,) int32; w: (K,).
+    Returns per-sample d·CE (or plain CE when ``weighted=False``), (B,)."""
+    k, b, v = client_logits.shape
+    block_b = min(block_b, b)
+    block_v = min(block_v, v)
+    pb = (-b) % block_b
+    pv = (-v) % block_v
+    if pb or pv:
+        client_logits = jnp.pad(client_logits, ((0, 0), (0, pb), (0, pv)))
+    if pb:
+        labels = jnp.pad(labels, ((0, pb),))
+    bp, vp = b + pb, v + pv
+    nb, nv = bp // block_b, vp // block_v
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, num_vocab_tiles=nv, vocab=v, block_v=block_v, weighted=weighted
+        ),
+        grid=(nb, nv),
+        in_specs=[
+            pl.BlockSpec((k, 1), lambda bi, vi: (0, 0)),
+            pl.BlockSpec((k, block_b, block_v), lambda bi, vi: (0, bi, vi)),
+            pl.BlockSpec((block_b, 1), lambda bi, vi: (bi, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda bi, vi: (bi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, 1), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_b, 1), jnp.float32) for _ in range(3)],
+        interpret=interpret,
+    )(
+        w.astype(jnp.float32).reshape(k, 1),
+        client_logits,
+        labels.astype(jnp.int32).reshape(bp, 1),
+    )
+    return out[:b, 0]

@@ -1,0 +1,37 @@
+"""Jitted public wrapper for the fused GHM-weighted CE kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.ghm_ce.kernel import ghm_ce_pallas
+from repro.kernels.ghm_ce.ref import ghm_ce_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("weighted", "use_kernel", "block_b", "block_v"))
+def ghm_ce(
+    client_logits: jax.Array,
+    labels: jax.Array,
+    w: jax.Array,
+    weighted: bool = True,
+    use_kernel: bool = True,
+    block_b: int = 8,
+    block_v: int = 512,
+) -> jax.Array:
+    """Per-sample difficulty-weighted CE of the weighted ensemble (Eq. 6)."""
+    if not use_kernel:
+        return ghm_ce_ref(client_logits, labels, w, weighted)
+    return ghm_ce_pallas(
+        client_logits,
+        labels,
+        w,
+        weighted=weighted,
+        block_b=block_b,
+        block_v=block_v,
+        interpret=not _on_tpu(),
+    )

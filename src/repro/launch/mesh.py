@@ -1,0 +1,25 @@
+"""Production mesh construction (TPU v5e).
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run sets
+``xla_force_host_platform_device_count`` before any jax init, and smoke
+tests must keep seeing one device.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 (one 256-chip v5e pod) or 2×16×16 (two pods; the leading
+    ``pod`` axis carries data-parallel replication across the DCN/ICI
+    boundary)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """A 1×1 mesh over the single real device (tests / examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)

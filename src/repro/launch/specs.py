@@ -1,0 +1,186 @@
+"""ShapeDtypeStruct input specs + jit program builders for every
+(architecture × input shape) combination.
+
+``input_specs`` produces weak-type-correct, shardable stand-ins for every
+model input — no device allocation ever happens; params come from
+``jax.eval_shape`` over the real initializer. ``build_program`` returns
+(fn, arg_specs, in_shardings, out_shardings) ready for
+``jax.jit(fn, ...).lower(*args).compile()`` under a mesh context.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeConfig, TrainConfig
+from repro.models import init_lm, init_lm_state
+from repro.runtime import make_decode_step, make_prefill_step, make_train_step
+from repro.sharding import decode_state_specs, infer_param_specs, resolve_rule
+from repro.sharding.partition import _mesh_axes
+
+SDS = jax.ShapeDtypeStruct
+
+# dry-run trainer: the paper's own optimizer (SGD momentum, App. B.1) — one
+# f32 slot; this is also what keeps the 235B MoE inside 16 GB/chip.
+DRYRUN_TC = TrainConfig(optimizer="sgdm", learning_rate=0.01, momentum=0.9)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, SDS]:
+    """Model-input stand-ins for one input shape. Training/prefill get the
+    full sequence; decode gets ONE token (the KV cache carries seq_len)."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"tokens": SDS((b, 1), jnp.int32)}
+    if cfg.family == "audio":
+        return {
+            "frames": SDS((b, s, cfg.frontend_dim), jnp.float32),
+            "labels": SDS((b, s), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        p = cfg.num_prefix_tokens
+        return {
+            "tokens": SDS((b, s - p), jnp.int32),
+            "prefix": SDS((b, p, cfg.frontend_dim), jnp.float32),
+            "labels": SDS((b, s - p), jnp.int32),
+        }
+    batch = {"tokens": SDS((b, s), jnp.int32), "labels": SDS((b, s), jnp.int32)}
+    if shape.kind == "prefill":
+        del batch["labels"]
+    return batch
+
+
+def param_specs(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(partial(init_lm, cfg), jax.random.key(0))
+
+
+def state_specs(cfg: ModelConfig, shape: ShapeConfig) -> Any:
+    return jax.eval_shape(
+        partial(init_lm_state, cfg, shape.global_batch, shape.seq_len)
+    )
+
+
+def _named(tree_specs) -> Any:
+    """PartitionSpec tree -> NamedSharding tree against the current mesh."""
+    mesh = jax.sharding.get_mesh()
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def batch_shardings(batch: Dict[str, SDS]) -> Dict[str, Any]:
+    axes = _mesh_axes()
+    out = {}
+    for k, v in batch.items():
+        if k in ("tokens", "labels") and v.ndim == 2:
+            spec = resolve_rule(("batch", "seq"), v.shape, axes)
+            if v.shape[1] == 1:  # decode token
+                spec = P(spec[0], None)
+        elif v.ndim == 3:
+            spec = resolve_rule(("batch", "seq", None), v.shape, axes)
+        else:
+            spec = P(*([None] * v.ndim))
+        out[k] = spec
+    return _named(out)
+
+
+def replicated(tree) -> Any:
+    mesh = jax.sharding.get_mesh()
+    return jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def build_program(
+    cfg: ModelConfig, shape: ShapeConfig, tc: TrainConfig = DRYRUN_TC
+) -> Tuple[Callable, Tuple, Any, Any]:
+    """Returns (fn, arg_specs, in_shardings, out_shardings) for the step
+    this input shape exercises (train / prefill / decode)."""
+    psds = param_specs(cfg)
+    pspecs = infer_param_specs(psds)
+    pshard = _named(pspecs)
+    batch = input_specs(cfg, shape)
+    bshard = batch_shardings(batch)
+
+    if shape.kind == "train":
+        step = make_train_step(cfg, tc)
+        opt_sds = jax.eval_shape(step.optimizer.init, psds)
+        oshard = _named(infer_param_specs(opt_sds))
+        idx = SDS((), jnp.int32)
+        args = (psds, opt_sds, batch, idx)
+        in_sh = (pshard, oshard, bshard, NamedSharding(jax.sharding.get_mesh(), P()))
+        metrics_sds = jax.eval_shape(step, *args)[2]
+        out_sh = (pshard, oshard, replicated(metrics_sds))
+        return step, args, in_sh, out_sh
+
+    ssds = state_specs(cfg, shape)
+    sshard = _named(decode_state_specs(ssds))
+    mesh = jax.sharding.get_mesh()
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg)
+        args = (psds, batch, ssds)
+        in_sh = (pshard, bshard, sshard)
+        logit_sh = NamedSharding(mesh, resolve_rule(("batch", None, "vocab"), (shape.global_batch, 1, cfg.vocab_size), _mesh_axes()))
+        out_sh = (logit_sh, sshard)
+        return step, args, in_sh, out_sh
+
+    # decode
+    step = make_decode_step(cfg)
+    tok = batch["tokens"]
+    pos = SDS((), jnp.int32)
+    args = (psds, tok, ssds, pos)
+    in_sh = (pshard, bshard["tokens"], sshard, NamedSharding(mesh, P()))
+    logit_sh = NamedSharding(mesh, resolve_rule(("batch", None, "vocab"), (shape.global_batch, 1, cfg.vocab_size), _mesh_axes()))
+    out_sh = (logit_sh, sshard)
+    return step, args, in_sh, out_sh
+
+
+def build_coboost_program(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    num_clients: int = 4,
+    tc: TrainConfig = DRYRUN_TC,
+    kl_chunk: int = 0,
+) -> Tuple[Callable, Tuple, Any, Any]:
+    """The paper-technique program at LM scale: one server-distillation step
+    (Eq. 4) against a K-client stacked ensemble on synthetic embedding
+    batches. This is the (most-representative) dry-run/hillclimb target."""
+    from repro.runtime import make_distill_step_lm
+
+    psds = param_specs(cfg)
+    pspecs = infer_param_specs(psds)
+    pshard = _named(pspecs)
+    stacked_sds = jax.tree_util.tree_map(
+        lambda x: SDS((num_clients, *x.shape), x.dtype), psds
+    )
+    # stacked client params shard like ordinary params (leading K dim is
+    # padded with None by the divisibility-aware rules)
+    stacked_shard = _named(infer_param_specs(stacked_sds))
+    mesh = jax.sharding.get_mesh()
+    axes = _mesh_axes()
+    b, s = shape.global_batch, shape.seq_len
+    batch = {
+        "embeds": SDS((b, s, cfg.d_model), jnp.float32),
+        "labels": SDS((b, s), jnp.int32),  # unused by KL but keeps shapes uniform
+    }
+    bshard = {
+        "embeds": NamedSharding(mesh, resolve_rule(("batch", "seq", None), (b, s, cfg.d_model), axes)),
+        "labels": NamedSharding(mesh, resolve_rule(("batch", "seq"), (b, s), axes)),
+    }
+    step = make_distill_step_lm(cfg, tc, kl_chunk=kl_chunk)
+    opt_sds = jax.eval_shape(step.optimizer.init, psds)
+    oshard = _named(infer_param_specs(opt_sds))
+    w_sds = SDS((num_clients,), jnp.float32)
+    idx = SDS((), jnp.int32)
+    args = (psds, opt_sds, stacked_sds, w_sds, batch, idx)
+    rep = NamedSharding(mesh, P())
+    in_sh = (pshard, oshard, stacked_shard, rep, bshard, rep)
+    metrics_sds = jax.eval_shape(step, *args)[2]
+    out_sh = (pshard, oshard, replicated(metrics_sds))
+    return step, args, in_sh, out_sh

@@ -1,0 +1,51 @@
+"""Pure-JAX functional model zoo.
+
+LM families (dense/moe/ssm/hybrid/audio/vlm) live in
+:mod:`repro.models.transformer`; the paper's own CNN client zoo in
+:mod:`repro.models.cnn`; data-free generators in
+:mod:`repro.models.generator`.
+"""
+from repro.models.transformer import (
+    init_lm,
+    lm_forward,
+    lm_loss,
+    lm_logits,
+    lm_prefill,
+    lm_decode,
+    init_lm_state,
+    layer_kinds,
+    group_period,
+    group_pattern,
+    num_groups,
+    cross_entropy,
+)
+from repro.models.cnn import CNN_ARCHS, init_cnn, cnn_apply, make_cnn
+from repro.models.generator import (
+    init_image_generator,
+    image_generator,
+    init_embedding_generator,
+    embedding_generator,
+)
+
+__all__ = [
+    "init_lm",
+    "lm_forward",
+    "lm_loss",
+    "lm_logits",
+    "lm_prefill",
+    "lm_decode",
+    "init_lm_state",
+    "layer_kinds",
+    "group_period",
+    "group_pattern",
+    "num_groups",
+    "cross_entropy",
+    "CNN_ARCHS",
+    "init_cnn",
+    "cnn_apply",
+    "make_cnn",
+    "init_image_generator",
+    "image_generator",
+    "init_embedding_generator",
+    "embedding_generator",
+]

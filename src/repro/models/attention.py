@@ -1,0 +1,400 @@
+"""Grouped-query attention with RoPE, optional qk-norm, sliding window, and a
+ring-buffer KV cache for decode.
+
+Training/prefill attention is *blocked* (flash-style online softmax over KV
+chunks inside a scan over Q chunks) so a 32k-token prefill never materializes
+an (S, S) score matrix — memory is O(S · block). The Pallas kernel in
+:mod:`repro.kernels.flash_attention` is the TPU-tiled version of the same
+algorithm; this module is its lowering-friendly pure-JAX twin.
+
+Entry points:
+  * :func:`attn_train`   — full-sequence causal (or bidirectional) attention;
+  * :func:`attn_prefill` — like train but also returns the filled KV cache;
+  * :func:`attn_decode`  — one-token step against an existing cache.
+
+The cache for sliding-window layers is a ring buffer of ``window`` slots so a
+500k-token context costs O(window) memory for SWA archs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, rms_norm
+from repro.sharding import constrain
+
+NEG_INF = -1e30
+DEFAULT_Q_BLOCK = 512
+DEFAULT_KV_BLOCK = 1024
+
+
+def init_attention(key, cfg, dtype):
+    d, h, k, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    keys = jax.random.split(key, 4)
+    params = {
+        "wq": dense_init(keys[0], d, (h, hd), dtype),
+        "wk": dense_init(keys[1], d, (k, hd), dtype),
+        "wv": dense_init(keys[2], d, (k, hd), dtype),
+        "wo": dense_init(keys[3], h * hd, (d,), dtype).reshape(h, hd, d),
+    }
+    if cfg.qk_norm:
+        params["q_norm"] = jnp.zeros((hd,), dtype)
+        params["k_norm"] = jnp.zeros((hd,), dtype)
+    return params
+
+
+def _project_qkv(params, x, cfg, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "heads", None)
+    v = constrain(v, "batch", None, "heads", None)
+    return q, k, v
+
+
+def _block_bias(q_pos, k_pos, causal: bool, window: int) -> jax.Array:
+    """(cq, ck) additive bias for one (q-block, kv-block) pair."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _pad_blocks(q, k, v, q_block, kv_block):
+    """Blocked layout with K/V broadcast to the FULL head count.
+
+    GQA archs whose (kv_heads, q_per_kv) split cannot shard the model axis
+    (granite: 8×4 over 16 devices) would replicate every score tile if the
+    blocked tensors carried separate (kh, g) dims — measured 27+ GB/device
+    temps. Broadcasting K/V to h = kh·g heads keeps ONE head dim that
+    shards cleanly whenever h divides the axis; the broadcast itself is
+    tiny (K/V are the small operands) and dk/dv are reduced back over g at
+    the end."""
+    b, sq, h, hd = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)  # h ordered (kh major, g minor)
+        v = jnp.repeat(v, g, axis=2)
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, sk)
+    pq = (-sq) % q_block
+    pk = (-sk) % kv_block
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = q.shape[1] // q_block, k.shape[1] // kv_block
+    qb = q.reshape(b, nq, q_block, h, hd).transpose(1, 0, 3, 2, 4)  # (nq,B,H,cq,hd)
+    kb = k.reshape(b, nk, kv_block, h, hd).transpose(1, 0, 3, 2, 4)  # (nk,B,H,ck,hd)
+    vb = v.reshape(b, nk, kv_block, h, hd).transpose(1, 0, 3, 2, 4)
+    return qb, kb, vb, (b, sq, sk, h, kh, g, hd, nq, nk, q_block, kv_block)
+
+
+def _scores(qblk, kblk, qi, ki, dims, causal, window, softcap, q_offset, scale):
+    """One (q-block, kv-block) score tile with masking. Returns (s, dact)
+    where dact is the softcap chain factor (1 where no softcap)."""
+    b, sq, sk, h, kh, g, hd, nq, nk, q_block, kv_block = dims
+    s = jnp.einsum("bhqd,bhcd->bhqc", qblk, kblk).astype(jnp.float32) * scale
+    if softcap > 0:
+        t = jnp.tanh(s / softcap)
+        dact = 1.0 - t * t
+        s = t * softcap
+    else:
+        dact = jnp.ones_like(s)
+    q_pos = q_offset + qi * q_block + jnp.arange(q_block, dtype=jnp.int32)
+    k_pos = ki * kv_block + jnp.arange(kv_block, dtype=jnp.int32)
+    bias = _block_bias(q_pos, k_pos, causal, window)
+    bias = jnp.where((k_pos < sk)[None, :], bias, NEG_INF)
+    return s + bias[None, None], dact
+
+
+def _constrain_blocked(x, total_heads: int):
+    """Shard a (n_blocks, B, H, ...) blocked tensor over the model axis:
+    prefer the head dim (dim 2) when it divides; otherwise fall back to the
+    vmapped BLOCK dim (smollm's 9 heads would otherwise replicate the whole
+    sequence on all model-axis devices — measured 13–16× attention
+    overcompute). A lax.scan over blocks is inherently sequential and
+    cannot split this way, which is why blocks are vmapped."""
+    from repro.sharding import constrain as _c
+    from repro.sharding.partition import _mesh_axes
+
+    axes = _mesh_axes()
+    model = axes.get("model", 1)
+    if model > 1 and total_heads % model == 0:
+        return _c(x, None, "batch", "heads", *([None] * (x.ndim - 3)))
+    return _c(x, "seq", "batch", *([None] * (x.ndim - 2)))
+
+
+def _flash_fwd_impl(q, k, v, causal, window, softcap, q_block, kv_block, q_offset):
+    qb, kb, vb, dims = _pad_blocks(q, k, v, q_block, kv_block)
+    b, sq, sk, h, kh, g, hd, nq, nk, q_block, kv_block = dims
+    scale = 1.0 / float(hd) ** 0.5
+    qb = _constrain_blocked(qb, h)
+    kb = _constrain_blocked(kb, h)
+    vb = _constrain_blocked(vb, h)
+
+    def q_row(qi, qblk):
+        def kv_step(carry, ki_and_blocks):
+            m, l, acc = carry
+            ki, kblk, vblk = ki_and_blocks
+            s, _ = _scores(qblk, kblk, qi, ki, dims, causal, window, softcap, q_offset, scale)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhqc,bhcd->bhqd", p.astype(vblk.dtype), vblk)
+            acc_new = acc * corr[..., None] + pv.astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, q_block), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, h, q_block), jnp.float32)
+        a0 = jnp.zeros((b, h, q_block, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk, dtype=jnp.int32), kb, vb)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)), 1e30)
+        return out.astype(q.dtype), lse
+
+    outs, lses = jax.vmap(q_row)(jnp.arange(nq, dtype=jnp.int32), qb)
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, nq * q_block, h, hd)
+    return out[:, :sq], lses  # lses: (nq, B, H, cq)
+
+
+def _flash_bwd_impl(res, dout, causal, window, softcap, q_block, kv_block, q_offset):
+    """Flash-attention backward: recompute scores block-by-block — O(block)
+    live memory instead of O(S²) saved probabilities. Two vmapped passes
+    (dq over q-blocks; dk/dv over kv-blocks), standard for flash VJPs."""
+    q, k, v, out, lses = res
+    qb, kb, vb, dims = _pad_blocks(q, k, v, q_block, kv_block)
+    b, sq, sk, h, kh, g, hd, nq, nk, q_block, kv_block = dims
+    scale = 1.0 / float(hd) ** 0.5
+    pq = nq * q_block - sq
+    if pq:
+        dout = jnp.pad(dout, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        out = jnp.pad(out, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    dob = dout.reshape(b, nq, q_block, h, hd).transpose(1, 0, 3, 2, 4)
+    ob = out.reshape(b, nq, q_block, h, hd).transpose(1, 0, 3, 2, 4)
+    dsum = jnp.sum(dob.astype(jnp.float32) * ob.astype(jnp.float32), axis=-1)  # (nq,B,H,cq)
+    qb = _constrain_blocked(qb, h)
+    kb = _constrain_blocked(kb, h)
+    vb = _constrain_blocked(vb, h)
+    dob = _constrain_blocked(dob, h)
+
+    qis = jnp.arange(nq, dtype=jnp.int32)
+    kis = jnp.arange(nk, dtype=jnp.int32)
+
+    def _block_grads(qi, ki, qblk, kblk, vblk, doutb, lseb, db):
+        """Recomputed (p, ds) for one (q-block, kv-block) tile."""
+        s, dact = _scores(qblk, kblk, qi, ki, dims, causal, window, softcap, q_offset, scale)
+        p = jnp.exp(s - lseb[..., None])  # (B,H,cq,ck)
+        doutf = doutb.astype(jnp.float32)
+        dp = jnp.einsum("bhqd,bhcd->bhqc", doutf, vblk.astype(jnp.float32))
+        ds = p * (dp - db[..., None]) * dact
+        return p, ds, doutf
+
+    # pass 1 — dq: vmap over q blocks (shardable), scan over kv blocks.
+    def dq_row(qi, qblk, doutb, lseb, db):
+        def kv_step(dq, kv_in):
+            ki, kblk, vblk = kv_in
+            _, ds, _ = _block_grads(qi, ki, qblk, kblk, vblk, doutb, lseb, db)
+            return dq + scale * jnp.einsum("bhqc,bhcd->bhqd", ds, kblk.astype(jnp.float32)), None
+
+        dq0 = jnp.zeros((b, h, q_block, hd), jnp.float32)
+        dq, _ = jax.lax.scan(kv_step, dq0, (kis, kb, vb))
+        return dq
+
+    dq = jax.vmap(dq_row)(qis, qb, dob, lses, dsum)
+
+    # pass 2 — dk, dv: vmap over kv blocks (shardable), scan over q blocks.
+    def dkv_col(ki, kblk, vblk):
+        def q_step(carry, q_in):
+            dk_b, dv_b = carry
+            qi, qblk, doutb, lseb, db = q_in
+            p, ds, doutf = _block_grads(qi, ki, qblk, kblk, vblk, doutb, lseb, db)
+            dv_b = dv_b + jnp.einsum("bhqc,bhqd->bhcd", p, doutf)
+            dk_b = dk_b + scale * jnp.einsum("bhqc,bhqd->bhcd", ds, qblk.astype(jnp.float32))
+            return (dk_b, dv_b), None
+
+        zeros = jnp.zeros((b, h, kv_block, hd), jnp.float32)
+        (dk_b, dv_b), _ = jax.lax.scan(q_step, (zeros, zeros), (qis, qb, dob, lses, dsum))
+        return dk_b, dv_b
+
+    dkb, dvb = jax.vmap(dkv_col)(kis, kb, vb)
+
+    dq = dq.transpose(1, 0, 3, 2, 4).reshape(b, nq * q_block, h, hd)[:, :sq]
+    dk_h = dkb.transpose(1, 0, 3, 2, 4).reshape(b, nk * kv_block, h, hd)[:, : k.shape[1]]
+    dv_h = dvb.transpose(1, 0, 3, 2, 4).reshape(b, nk * kv_block, h, hd)[:, : v.shape[1]]
+    # reduce the g broadcast copies back onto the kv heads
+    dk = dk_h.reshape(*dk_h.shape[:2], kh, g, hd).sum(3)
+    dv = dv_h.reshape(*dv_h.shape[:2], kh, g, hd).sum(3)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash(q, k, v, causal, window, softcap, q_block, kv_block, q_offset):
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, softcap, q_block, kv_block, q_offset)
+    return out
+
+
+def _flash_fwd_rule(q, k, v, causal, window, softcap, q_block, kv_block, q_offset):
+    out, lses = _flash_fwd_impl(q, k, v, causal, window, softcap, q_block, kv_block, q_offset)
+    return out, (q, k, v, out, lses)
+
+
+def _flash_bwd_rule(causal, window, softcap, q_block, kv_block, q_offset, res, dout):
+    return _flash_bwd_impl(res, dout, causal, window, softcap, q_block, kv_block, q_offset)
+
+
+_flash.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def flash_attn_jax(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_block: int = 0,
+    kv_block: int = 0,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Blocked attention with online softmax and a flash-style custom VJP.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, K, hd) with H % K == 0.
+    Returns (B, Sq, H, hd). Never materializes (Sq, Sk) — in either pass:
+    the custom backward recomputes score blocks instead of letting autodiff
+    save every block's probabilities as scan residuals (which would be
+    O(S²) and was measured at ~30 GB/device for a 4k-token train step).
+
+    Default block sizes adapt so the number of q/kv blocks is a multiple of
+    16 where possible — the blocks are vmapped and sharded over the model
+    axis (see _constrain_blocked), so block count must divide the axis."""
+    if q_block <= 0:
+        q_block = min(DEFAULT_Q_BLOCK, max(128, q.shape[1] // 16))
+    if kv_block <= 0:
+        kv_block = min(DEFAULT_KV_BLOCK, max(128, k.shape[1] // 16))
+    return _flash(q, k, v, causal, window, softcap, q_block, kv_block, q_offset)
+
+
+def _sdpa_small(q, k, v, bias, cfg):
+    """Unblocked attention for decode (Sq == 1) and tiny test shapes.
+    q:(B,Sq,H,hd) k,v:(B,Sk,K,hd); bias broadcastable to (Sq, Sk)."""
+    b, sq, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    q = q.reshape(b, sq, kh, g, hd)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32)).astype(q.dtype)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q * scale, k).astype(jnp.float32)
+    if cfg.attn_logit_softcap > 0:
+        c = cfg.attn_logit_softcap
+        scores = jnp.tanh(scores / c) * c
+    scores = scores + bias[None, None, None]
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def attn_train(params, x, cfg, positions=None):
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    out = flash_attn_jax(
+        q, k, v, causal=cfg.causal, window=cfg.sliding_window, softcap=cfg.attn_logit_softcap
+    )
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return constrain(out, "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+
+
+def cache_len(cfg, max_seq: int) -> int:
+    if cfg.sliding_window > 0:
+        return min(cfg.sliding_window, max_seq)
+    return max_seq
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype) -> Dict[str, jax.Array]:
+    s = cache_len(cfg, max_seq)
+    kv, hd = cfg.num_kv_heads, cfg.head_dim_
+    return {
+        "k": jnp.zeros((batch, s, kv, hd), dtype),
+        "v": jnp.zeros((batch, s, kv, hd), dtype),
+    }
+
+
+def attn_prefill(params, x, cfg, cache):
+    """Full-sequence attention that also fills the cache.
+
+    The cache keeps its allocated length ``cl`` (which may exceed the prompt
+    — decode continues into the tail; returning a prompt-length cache was a
+    silent decode-corruption bug caught by
+    tests/test_models_property.py::test_decode_matches_full_forward). For
+    sliding-window layers whose prompt exceeds the ring length, the kept
+    tail lands on its ring slots (slot = position % cl) so
+    :func:`attn_decode`'s position reconstruction stays consistent."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    out = flash_attn_jax(
+        q, k, v, causal=cfg.causal, window=cfg.sliding_window, softcap=cfg.attn_logit_softcap
+    )
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    cl = cache["k"].shape[1]
+    if s < cl:
+        new_k = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+        new_v = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+    else:
+        tail_pos = jnp.arange(s - cl, s, dtype=jnp.int32)
+        slots = tail_pos % cl if cfg.sliding_window > 0 else jnp.arange(cl, dtype=jnp.int32)
+        new_k = jnp.zeros_like(cache["k"]).at[:, slots].set(k[:, -cl:].astype(cache["k"].dtype))
+        new_v = jnp.zeros_like(cache["v"]).at[:, slots].set(v[:, -cl:].astype(cache["v"].dtype))
+    return constrain(out, "batch", None, None), {"k": new_k, "v": new_v}
+
+
+def attn_decode(params, x, cfg, cache, pos):
+    """One-token decode. x: (B, 1, d); pos: scalar int32 — the index of this
+    token. Cache may be a ring buffer (SWA) or full length."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(params, x, cfg, positions)
+    cl = cache["k"].shape[1]
+    if cfg.sliding_window > 0 and cl < 2**31:
+        slot = pos % cl
+    else:
+        slot = jnp.minimum(pos, cl - 1)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+    k = constrain(k, "batch", "seq", None, None)
+    v = constrain(v, "batch", "seq", None, None)
+    # absolute position of every cache slot
+    if cfg.sliding_window > 0:
+        ring_idx = jnp.arange(cl, dtype=jnp.int32)
+        wrap = (pos // cl) * cl
+        k_pos = jnp.where(ring_idx <= slot, wrap + ring_idx, wrap - cl + ring_idx)
+        valid = (k_pos >= 0) & (k_pos <= pos) & (k_pos > pos - cfg.sliding_window)
+    else:
+        k_pos = jnp.arange(cl, dtype=jnp.int32)
+        valid = k_pos <= pos
+    bias = jnp.where(valid, 0.0, NEG_INF)[None, :]  # (1, cl)
+    out = _sdpa_small(q, k, v, bias, cfg)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return constrain(out, "batch", None, None), {"k": k, "v": v}

@@ -1,0 +1,94 @@
+"""Data-free synthesis generators.
+
+``image_generator`` — the paper's generator (same family as DENSE / DAFL): a
+label-conditional latent-to-image decoder (dense → 2× upsample conv stack →
+tanh). Normalization is batch-stat instance/batch norm computed on the fly
+(the generator is only ever run in training mode, so no running stats).
+
+``embedding_generator`` — our LLM-distillation extension (DESIGN.md §5):
+tokens are discrete, so for token models the generator synthesizes
+*embedding-space* sequences (B, S, d_model) that are fed to the client
+ensemble in place of embedded tokens. Losses (Eq. 5–12) are unchanged.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.cnn import _conv_init, _dense_init, conv2d
+
+
+def _bn(x, scale, bias, eps=1e-5):
+    """Batch norm over (B, H, W) with batch statistics (train-mode only)."""
+    mean = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    x = (x - mean) * jax.lax.rsqrt(var + eps)
+    return x * (1 + scale) + bias
+
+
+def _bn_params(c):
+    return {"scale": jnp.zeros((c,)), "bias": jnp.zeros((c,))}
+
+
+def _upsample2(x):
+    b, h, w, c = x.shape
+    x = jnp.broadcast_to(x[:, :, None, :, None, :], (b, h, 2, w, 2, c))
+    return x.reshape(b, 2 * h, 2 * w, c)
+
+
+def init_image_generator(
+    key, latent_dim: int, num_classes: int, out_shape: Tuple[int, int, int], base: int = 64
+):
+    h, w, c = out_shape
+    assert h % 4 == 0 and w % 4 == 0, out_shape
+    h0, w0 = h // 4, w // 4
+    ks = jax.random.split(key, 6)
+    return {
+        "label_embed": (jax.random.normal(ks[0], (num_classes, latent_dim)) * 0.1),
+        "fc": _dense_init(ks[1], 2 * latent_dim, h0 * w0 * 2 * base),
+        "bn0": _bn_params(2 * base),
+        "conv1": _conv_init(ks[2], 3, 2 * base, 2 * base),
+        "bn1": _bn_params(2 * base),
+        "conv2": _conv_init(ks[3], 3, 2 * base, base),
+        "bn2": _bn_params(base),
+        "conv3": _conv_init(ks[4], 3, base, c),
+    }
+
+
+def image_generator(params, z, y, out_shape: Tuple[int, int, int], base: int = 64):
+    """z: (B, nz); y: (B,) int labels. Returns images in [-1, 1], NHWC."""
+    h0, w0, c0 = out_shape[0] // 4, out_shape[1] // 4, 2 * base
+    emb = params["label_embed"][y]
+    x = jnp.concatenate([z, emb], axis=-1)
+    x = (x @ params["fc"]).reshape(-1, h0, w0, c0)
+    x = _bn(x, **params["bn0"])
+    x = _upsample2(x)
+    x = jax.nn.leaky_relu(_bn(conv2d(x, params["conv1"]), **params["bn1"]), 0.2)
+    x = _upsample2(x)
+    x = jax.nn.leaky_relu(_bn(conv2d(x, params["conv2"]), **params["bn2"]), 0.2)
+    x = jnp.tanh(conv2d(x, params["conv3"]))
+    return x
+
+
+def init_embedding_generator(key, latent_dim: int, num_classes: int, seq_len: int, d_model: int, hidden: int = 256):
+    ks = jax.random.split(key, 4)
+    return {
+        "label_embed": (jax.random.normal(ks[0], (num_classes, latent_dim)) * 0.1),
+        "fc1": _dense_init(ks[1], 2 * latent_dim, hidden),
+        "fc2": _dense_init(ks[2], hidden, seq_len * min(d_model, hidden)),
+        "proj": _dense_init(ks[3], min(d_model, hidden), d_model),
+    }
+
+
+def embedding_generator(params, z, y, seq_len: int, hidden: int = 256):
+    """z: (B, nz); y: (B,). Returns (B, S, d_model) synthetic embeddings."""
+    s = seq_len
+    dh = params["proj"].shape[0]
+    emb = params["label_embed"][y]
+    x = jnp.concatenate([z, emb], axis=-1)
+    x = jax.nn.relu(x @ params["fc1"])
+    x = (x @ params["fc2"]).reshape(-1, s, dh)
+    x = jnp.tanh(x)
+    return x @ params["proj"]

@@ -1,0 +1,90 @@
+"""Shared neural-net layers (pure-JAX functional; params are nested dicts)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+
+
+def dense_init(key, in_dim: int, out_shape: Tuple[int, ...], dtype=jnp.float32, scale: float = 1.0):
+    """Fan-in scaled normal initializer; ``out_shape`` may be multi-dim
+    (e.g. ``(H, hd)`` for per-head projections)."""
+    stddev = scale / jnp.sqrt(jnp.asarray(in_dim, jnp.float32))
+    return (jax.random.normal(key, (in_dim, *out_shape)) * stddev).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    x = (x - mean) * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32)) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, wi: jax.Array, wg: jax.Array, wo: jax.Array) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, wi.astype(x.dtype))
+    g = jnp.einsum("...d,df->...f", x, wg.astype(x.dtype))
+    h = h * jax.nn.silu(g)
+    h = constrain(h, "batch", None, "tp")
+    return jnp.einsum("...f,fd->...d", h, wo.astype(x.dtype))
+
+
+def gelu_mlp(x: jax.Array, wi: jax.Array, wo: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, wi.astype(x.dtype)))
+    h = constrain(h, "batch", None, "tp")
+    return jnp.einsum("...f,fd->...d", h, wo.astype(x.dtype))
+
+
+def init_mlp(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.act == "silu":
+        return {
+            "wi": dense_init(k1, d, (f,), dtype),
+            "wg": dense_init(k2, d, (f,), dtype),
+            "wo": dense_init(k3, f, (d,), dtype),
+        }
+    return {
+        "wi": dense_init(k1, d, (f,), dtype),
+        "wo": dense_init(k3, f, (d,), dtype),
+    }
+
+
+def apply_mlp(params, x, cfg):
+    if "wg" in params:
+        return swiglu(x, params["wi"], params["wg"], params["wo"])
+    return gelu_mlp(x, params["wi"], params["wo"])

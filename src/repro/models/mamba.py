@@ -1,0 +1,143 @@
+"""Mamba (S6) selective-state-space mixer.
+
+TPU adaptation: the reference CUDA implementation fuses the selective scan
+into a single kernel with warp-level parallel prefix sums. On TPU we express
+the same recurrence ``h_t = a_t * h_{t-1} + b_t`` as a *chunked* scan — a
+``lax.scan`` over chunks of ``cfg.ssm_chunk`` steps carrying the (B, inner,
+N) state, with a ``jax.lax.associative_scan`` (log-depth, VPU-friendly)
+inside each chunk. This bounds the materialized (chunk, inner, N) tensor to
+a VMEM-sized working set while keeping O(log chunk) sequential depth, which
+is the TPU-native analogue of the CUDA kernel's shared-memory scan.
+
+Decode is the plain O(1) recurrent step on state {conv tail, h}.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.sharding import constrain
+
+
+def init_mamba(key, cfg, dtype):
+    d = cfg.d_model
+    inner = cfg.ssm_inner
+    n = cfg.ssm_state_dim
+    r = cfg.dt_rank_
+    keys = jax.random.split(key, 6)
+    # A initialized to -[1..N] per channel (S4D-real), stored as log.
+    a_init = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (inner, 1))
+    return {
+        "in_proj": dense_init(keys[0], d, (2 * inner,), dtype),
+        "conv": dense_init(keys[1], cfg.ssm_conv_dim, (inner,), dtype, scale=1.0),
+        "x_proj": dense_init(keys[2], inner, (r + 2 * n,), dtype),
+        "dt_proj": dense_init(keys[3], r, (inner,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((inner,), 1e-2))).astype(jnp.float32),
+        "A_log": jnp.log(a_init),
+        "D": jnp.ones((inner,), jnp.float32),
+        "out_proj": dense_init(keys[4], inner, (d,), dtype),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv. x: (B, S, inner); w: (K, inner).
+    ``state``: (B, K-1, inner) tail of the previous segment (decode/prefill
+    carry) or None for zero history. Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(k))
+    return y, xp[:, -(k - 1) :] if k > 1 else jnp.zeros_like(state)
+
+
+def _ssm_params(params, xc, cfg):
+    """xc: (B, S, inner) post-conv activations -> (dt, B_ssm, C_ssm, A)."""
+    n, r = cfg.ssm_state_dim, cfg.dt_rank_
+    dbc = jnp.einsum("bsi,ip->bsp", xc, params["x_proj"].astype(xc.dtype))
+    dt, b_ssm, c_ssm = jnp.split(dbc, [r, r + n], axis=-1)
+    dt = jnp.einsum("bsr,ri->bsi", dt, params["dt_proj"].astype(xc.dtype))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])  # (inner, N)
+    return dt, b_ssm.astype(jnp.float32), c_ssm.astype(jnp.float32), a
+
+
+def _chunk_scan(dt, b_ssm, c_ssm, a, xc, h0):
+    """Selective scan over one chunk (parallel within the chunk).
+
+    dt: (B,Q,inner) f32;  b_ssm,c_ssm: (B,Q,N);  a: (inner,N);
+    xc: (B,Q,inner);  h0: (B,inner,N).  Returns (y (B,Q,inner) f32, hQ)."""
+    da = jnp.exp(dt[..., None] * a[None, None])  # (B,Q,inner,N) decay
+    db = dt[..., None] * b_ssm[:, :, None, :] * xc.astype(jnp.float32)[..., None]
+    # fold carry into the first step: h_1 = da_1 h0 + db_1
+    db = db.at[:, 0].add(da[:, 0] * h0)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (da, db), axis=1)
+    y = jnp.einsum("bqin,bqn->bqi", h, c_ssm)
+    return y, h[:, -1]
+
+
+def mamba_forward(params, x, cfg, state: Dict = None, return_state: bool = False):
+    """x: (B, S, d). Returns y (B, S, d) [, new_state]."""
+    b, s, d = x.shape
+    xz = jnp.einsum("bsd,di->bsi", x, params["in_proj"].astype(x.dtype))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = constrain(xin, "batch", None, "tp")
+    conv_state = None if state is None else state["conv"]
+    xc, conv_tail = _causal_conv(xin, params["conv"].astype(x.dtype), conv_state)
+    xc = jax.nn.silu(xc)
+    dt, b_ssm, c_ssm, a = _ssm_params(params, xc, cfg)
+
+    q = min(cfg.ssm_chunk, s)
+    pad = (-s) % q
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_ssm = jnp.pad(b_ssm, ((0, 0), (0, pad), (0, 0)))
+        c_ssm = jnp.pad(c_ssm, ((0, 0), (0, pad), (0, 0)))
+        xc = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+    nq = (s + pad) // q
+    inner, n = a.shape
+    h0 = jnp.zeros((b, inner, n), jnp.float32) if state is None else state["h"]
+
+    def step(h, blk):
+        dtq, bq, cq, xq = blk
+        y, hq = _chunk_scan(dtq, bq, cq, a, xq, h)
+        return hq, y
+
+    # checkpoint the chunk body: autodiff would otherwise save the (B, Q,
+    # inner, N) decay/input tensors of EVERY chunk as scan residuals; with
+    # the checkpoint only chunk-boundary states are kept and the backward
+    # recomputes one chunk at a time.
+    step = jax.checkpoint(step, prevent_cse=False)
+    reshape = lambda t: t.reshape(b, nq, q, *t.shape[2:]).swapaxes(0, 1)
+    hF, ys = jax.lax.scan(step, h0, (reshape(dt), reshape(b_ssm), reshape(c_ssm), reshape(xc)))
+    y = ys.swapaxes(0, 1).reshape(b, nq * q, inner)[:, :s]
+    y = y + xc[:, :s].astype(jnp.float32) * params["D"]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, params["out_proj"].astype(x.dtype))
+    out = constrain(out, "batch", None, None)
+    if return_state:
+        return out, {"conv": conv_tail, "h": hF}
+    return out
+
+
+def init_mamba_state(cfg, batch: int, dtype) -> Dict:
+    inner, n = cfg.ssm_inner, cfg.ssm_state_dim
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_dim - 1, inner), dtype),
+        "h": jnp.zeros((batch, inner, n), jnp.float32),
+    }
+
+
+def mamba_decode(params, x, cfg, state):
+    """One-token step. x: (B, 1, d)."""
+    out, new_state = mamba_forward(params, x, cfg, state=state, return_state=True)
+    return out, new_state

@@ -1,0 +1,390 @@
+"""Unified decoder/encoder LM covering all six assigned architecture
+families (dense, moe, ssm, hybrid, audio-encoder, vlm).
+
+A model is a sequence of *blocks*; each block is ``(mixer, ffn)`` where
+mixer ∈ {attn, mamba, mlstm, slstm} and ffn ∈ {mlp, moe, None}. The
+per-layer pattern is derived from the config (``layer_kinds``) and has a
+repeating period (``group_period``): dense/moe archs repeat every layer,
+jamba every ``attn_every`` layers, xlstm every ``slstm_every``. Layers are
+*stacked by group* so the forward pass is a single ``lax.scan`` over groups
+(optionally rematerialized) — the HLO stays O(period) regardless of depth,
+which keeps the 94-layer qwen3-moe dry-run compilable.
+
+Inputs are a ``batch`` dict:
+  * tokens:  (B, S) int32                      — LM text stream
+  * frames:  (B, S, frontend_dim)              — audio family (stub frontend)
+  * prefix:  (B, P, frontend_dim)              — vlm patch embeddings (stub)
+  * labels:  same shape as tokens/frames' time axis
+
+Decode state is a per-group stack of per-position mixer states (KV cache /
+SSM state), so decode is the same single scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import mamba as mamba_lib
+from repro.models import moe as moe_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.layers import apply_mlp, dense_init, embed_init, init_mlp, rms_norm
+from repro.sharding import constrain
+from repro.utils import tree_stack
+
+# ---------------------------------------------------------------------------
+# layer pattern
+
+
+def layer_kinds(cfg) -> List[Tuple[str, Optional[str]]]:
+    """Per-layer (mixer, ffn) pattern for the whole network."""
+    kinds: List[Tuple[str, Optional[str]]] = []
+    for i in range(cfg.num_layers):
+        if cfg.family == "ssm":
+            if cfg.ssm_kind == "mamba":
+                kinds.append(("mamba", None))
+            else:  # xlstm: sLSTM every `slstm_every`, rest mLSTM
+                if cfg.slstm_every and i % cfg.slstm_every == cfg.slstm_every - 1:
+                    kinds.append(("slstm", None))
+                else:
+                    kinds.append(("mlstm", None))
+        elif cfg.family == "hybrid":
+            mixer = "attn" if i % cfg.attn_every == cfg.attn_every // 2 else "mamba"
+            ffn = (
+                "moe"
+                if cfg.moe_every and i % cfg.moe_every == cfg.moe_every - 1 and cfg.num_experts
+                else "mlp"
+            )
+            kinds.append((mixer, ffn))
+        elif cfg.family == "moe":
+            kinds.append(("attn", "moe"))
+        else:  # dense, audio, vlm
+            kinds.append(("attn", "mlp"))
+    return kinds
+
+
+def group_period(cfg) -> int:
+    if cfg.family == "hybrid":
+        period = cfg.attn_every
+        if cfg.moe_every:
+            while period % cfg.moe_every:
+                period += cfg.attn_every
+        return period
+    if cfg.family == "ssm" and cfg.ssm_kind == "xlstm" and cfg.slstm_every:
+        return cfg.slstm_every
+    return 1
+
+
+def group_pattern(cfg) -> List[Tuple[str, Optional[str]]]:
+    return layer_kinds(cfg)[: group_period(cfg)]
+
+
+def num_groups(cfg) -> int:
+    p = group_period(cfg)
+    assert cfg.num_layers % p == 0, (cfg.name, cfg.num_layers, p)
+    return cfg.num_layers // p
+
+
+# ---------------------------------------------------------------------------
+# block init / apply
+
+_MIXER_INIT = {
+    "attn": attn_lib.init_attention,
+    "mamba": mamba_lib.init_mamba,
+    "mlstm": xlstm_lib.init_mlstm,
+    "slstm": xlstm_lib.init_slstm,
+}
+
+_MIXER_KEY = {"attn": "attn", "mamba": "mamba", "mlstm": "xlstm", "slstm": "xlstm"}
+
+
+def _init_block(key, cfg, mixer: str, ffn: Optional[str], dtype):
+    k1, k2 = jax.random.split(key)
+    p: Dict[str, Any] = {
+        _MIXER_KEY[mixer]: _MIXER_INIT[mixer](k1, cfg, dtype),
+        "norm1": {"scale": jnp.zeros((cfg.d_model,), dtype)},
+    }
+    if ffn == "mlp":
+        p["mlp"] = init_mlp(k2, cfg, dtype)
+        p["norm2"] = {"scale": jnp.zeros((cfg.d_model,), dtype)}
+    elif ffn == "moe":
+        p["moe"] = moe_lib.init_moe(k2, cfg, dtype)
+        p["norm2"] = {"scale": jnp.zeros((cfg.d_model,), dtype)}
+    return p
+
+
+def _apply_mixer(p, x, cfg, mixer, mode, state, pos):
+    """mode: train | prefill | decode. Returns (y, new_state)."""
+    if mixer == "attn":
+        if mode == "train":
+            return attn_lib.attn_train(p["attn"], x, cfg), None
+        if mode == "prefill":
+            return attn_lib.attn_prefill(p["attn"], x, cfg, state)
+        return attn_lib.attn_decode(p["attn"], x, cfg, state, pos)
+    if mixer == "mamba":
+        if mode == "train":
+            return mamba_lib.mamba_forward(p["mamba"], x, cfg), None
+        return mamba_lib.mamba_forward(
+            p["mamba"], x, cfg, state=state if mode == "decode" else None, return_state=True
+        )
+    fwd = xlstm_lib.mlstm_forward if mixer == "mlstm" else xlstm_lib.slstm_forward
+    if mode == "train":
+        return fwd(p["xlstm"], x, cfg), None
+    return fwd(p["xlstm"], x, cfg, state=state if mode == "decode" else None, return_state=True)
+
+
+def _apply_block(p, x, cfg, mixer, ffn, mode, state, pos):
+    h = rms_norm(x, p["norm1"]["scale"], cfg.norm_eps)
+    y, new_state = _apply_mixer(p, h, cfg, mixer, mode, state, pos)
+    x = x + y
+    aux = jnp.zeros((), jnp.float32)
+    if ffn == "mlp":
+        x = x + apply_mlp(p["mlp"], rms_norm(x, p["norm2"]["scale"], cfg.norm_eps), cfg)
+    elif ffn == "moe":
+        y, aux = moe_lib.moe_apply(p["moe"], rms_norm(x, p["norm2"]["scale"], cfg.norm_eps), cfg)
+        x = x + y
+    return x, aux, new_state
+
+
+# ---------------------------------------------------------------------------
+# model init
+
+
+def init_lm(cfg, key, param_dtype=None):
+    dtype = jnp.dtype(param_dtype or cfg.param_dtype)
+    pattern = group_pattern(cfg)
+    g = num_groups(cfg)
+    keys = jax.random.split(key, g + 3)
+
+    def one_group(k):
+        ks = jax.random.split(k, len(pattern))
+        return {
+            f"p{i}": _init_block(ks[i], cfg, mixer, ffn, dtype)
+            for i, (mixer, ffn) in enumerate(pattern)
+        }
+
+    groups = tree_stack([one_group(keys[i]) for i in range(g)])
+    params: Dict[str, Any] = {
+        "groups": groups,
+        "final_norm": {"scale": jnp.zeros((cfg.d_model,), dtype)},
+    }
+    if cfg.is_encoder_only:
+        params["frames_proj"] = {"projector": {"kernel": dense_init(keys[g], cfg.frontend_dim, (cfg.d_model,), dtype)}}
+        params["pred_head"] = {"kernel": dense_init(keys[g + 1], cfg.d_model, (cfg.vocab_size,), dtype)}
+    else:
+        params["embed"] = {"table": embed_init(keys[g], cfg.vocab_size, cfg.d_model, dtype)}
+        if not cfg.tie_embeddings:
+            params["lm_head"] = {"kernel": dense_init(keys[g + 1], cfg.d_model, (cfg.vocab_size,), dtype)}
+    if cfg.frontend == "vision":
+        params["prefix_proj"] = {"projector": {"kernel": dense_init(keys[g + 2], cfg.frontend_dim, (cfg.d_model,), dtype)}}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+
+
+def _embed_inputs(params, cfg, batch) -> jax.Array:
+    dtype = jnp.dtype(cfg.dtype)
+    if "embeds" in batch:
+        # synthetic embedding-space inputs (the LM-scale Co-Boosting
+        # generator path, DESIGN.md §5) — bypass the token embedding.
+        return constrain(batch["embeds"].astype(dtype), "batch", "seq", None)
+    if cfg.is_encoder_only:
+        x = jnp.einsum(
+            "bsf,fd->bsd", batch["frames"].astype(dtype), params["frames_proj"]["projector"]["kernel"].astype(dtype)
+        )
+    else:
+        x = params["embed"]["table"].astype(dtype)[batch["tokens"]]
+        if cfg.frontend == "vision" and "prefix" in batch:
+            pre = jnp.einsum(
+                "bpf,fd->bpd",
+                batch["prefix"].astype(dtype),
+                params["prefix_proj"]["projector"]["kernel"].astype(dtype),
+            )
+            x = jnp.concatenate([pre, x], axis=1)
+    return constrain(x, "batch", "seq", None)
+
+
+def head_matrix(params, cfg) -> jax.Array:
+    """The (d, V) output-projection matrix."""
+    if cfg.is_encoder_only:
+        return params["pred_head"]["kernel"]
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T
+    return params["lm_head"]["kernel"]
+
+
+def lm_logits(params, cfg, x) -> jax.Array:
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    w = head_matrix(params, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype)).astype(jnp.dtype(cfg.logit_dtype))
+    # Shard the (B, S, V) logits over the model axis by vocab when it
+    # divides, else by SEQUENCE. granite's odd 49155 vocab cannot shard a
+    # 16-wide axis; without the fallback the full logits replicate on every
+    # model-axis device (measured: 12 GiB/device f32 buffers ×17, 29 GiB
+    # temp — the entire HBM overrun of the granite train dry-run).
+    from repro.sharding.partition import _mesh_axes
+
+    axes = _mesh_axes()
+    model = axes.get("model", 1)
+    if model > 1 and cfg.vocab_size % model and logits.shape[1] > 1:
+        return constrain(logits, "batch", "seq", None)
+    return constrain(logits, "batch", None, "vocab")
+
+
+# ---------------------------------------------------------------------------
+# forward (train)
+
+
+def _scan_blocks(params, cfg, x, mode: str, state=None, pos=None):
+    """Run all groups. Returns (x, aux_sum, new_state_stack_or_None)."""
+    pattern = group_pattern(cfg)
+
+    def body(x, inp):
+        gp, st = inp
+        aux_total = jnp.zeros((), jnp.float32)
+        new_st = {}
+        for i, (mixer, ffn) in enumerate(pattern):
+            s_i = None if st is None else st.get(f"p{i}")
+            x, aux, ns = _apply_block(gp[f"p{i}"], x, cfg, mixer, ffn, mode, s_i, pos)
+            aux_total = aux_total + aux
+            if ns is not None:
+                new_st[f"p{i}"] = ns
+        return x, (aux_total, new_st)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    groups = params["groups"]
+    g = num_groups(cfg)
+    if cfg.scan_layers:
+        if state is None:
+            x, (auxs, _) = jax.lax.scan(lambda c, gp: body(c, (gp, None)), x, groups)
+            return x, jnp.sum(auxs), None
+        x, (auxs, new_states) = jax.lax.scan(body, x, (groups, state))
+        return x, jnp.sum(auxs), new_states
+    # unrolled (smoke tests)
+    from repro.utils import tree_index
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_states = []
+    for gi in range(g):
+        gp = tree_index(groups, gi)
+        st = None if state is None else tree_index(state, gi)
+        x, (aux, ns) = body(x, (gp, st))
+        aux_total = aux_total + aux
+        new_states.append(ns)
+    stacked = tree_stack(new_states) if state is not None else None
+    return x, aux_total, stacked
+
+
+def lm_forward(params, cfg, batch) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. Returns (logits, moe_aux_loss)."""
+    x = _embed_inputs(params, cfg, batch)
+    x, aux, _ = _scan_blocks(params, cfg, x, "train")
+    return lm_logits(params, cfg, x), aux
+
+
+def lm_features(params, cfg, batch) -> Tuple[jax.Array, jax.Array]:
+    """Post-final-norm trunk features (B, S, d) — the LM head factored out
+    so vocab-sized tensors can be produced chunk-by-chunk (distillation
+    memory lever, core.distributed.coboost_distill_loss kl_chunk)."""
+    x = _embed_inputs(params, cfg, batch)
+    x, aux, _ = _scan_blocks(params, cfg, x, "train")
+    return rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps), aux
+
+
+def cross_entropy(logits, labels, mask=None):
+    """logits: (B,S,V) any float dtype; labels: (B,S) int32.
+
+    The label logit is picked with an iota-compare + masked sum rather than
+    ``take_along_axis``: a gather along the vocab-sharded axis forces the
+    SPMD partitioner to all-gather the full (B,S,V) logits (observed 13 GB/
+    device at 152k vocab), whereas the compare/sum form stays elementwise
+    and inherits the ("batch", None, "vocab") sharding."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    hit = (
+        jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        == labels[..., None]
+    )
+    ll = jnp.sum(jnp.where(hit, logits, 0.0), axis=-1)
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def lm_loss(params, cfg, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux = lm_forward(params, cfg, batch)
+    labels = batch["labels"]
+    if cfg.frontend == "vision" and "prefix" in batch:
+        logits = logits[:, batch["prefix"].shape[1] :]  # loss on text positions only
+    loss = cross_entropy(logits, labels, batch.get("mask"))
+    total = loss + cfg.router_aux_coef * aux
+    return total, {"ce": loss, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode state
+
+
+def _init_mixer_state(cfg, mixer: str, batch: int, max_seq: int, dtype):
+    if mixer == "attn":
+        return attn_lib.init_cache(cfg, batch, max_seq, dtype)
+    if mixer == "mamba":
+        return mamba_lib.init_mamba_state(cfg, batch, dtype)
+    if mixer == "mlstm":
+        return xlstm_lib.init_mlstm_state(cfg, batch)
+    return xlstm_lib.init_slstm_state(cfg, batch)
+
+
+def init_lm_state(cfg, batch: int, max_seq: int, dtype=None):
+    """Per-group stacked mixer states (the KV-cache / SSM-state pytree)."""
+    dtype = jnp.dtype(dtype or cfg.dtype)
+    pattern = group_pattern(cfg)
+    g = num_groups(cfg)
+    one = {
+        f"p{i}": _init_mixer_state(cfg, mixer, batch, max_seq, dtype)
+        for i, (mixer, _) in enumerate(pattern)
+    }
+    return tree_stack([one] * g)
+
+
+def shard_lm_state(state):
+    """Apply the decode-state sharding constraints (KV cache seq-sharded)."""
+
+    def f(path, x):
+        if x.ndim == 5 and ("/k" in path or "/v" in path):  # (G,B,S,K,hd)
+            from repro.sharding import logical_to_pspec
+
+            return jax.lax.with_sharding_constraint(
+                x, logical_to_pspec((None, "batch", "seq", None, None), x.shape)
+            )
+        return x
+
+    from repro.utils import tree_map_with_path
+
+    return tree_map_with_path(f, state)
+
+
+def lm_prefill(params, cfg, batch, state):
+    """Consume the full prompt, fill the state, return last-position logits."""
+    x = _embed_inputs(params, cfg, batch)
+    x, aux, new_state = _scan_blocks(params, cfg, x, "prefill", state=state)
+    logits = lm_logits(params, cfg, x[:, -1:])
+    return logits, new_state
+
+
+def lm_decode(params, cfg, token, state, pos):
+    """One decode step. token: (B, 1) int32; pos: scalar int32 (absolute)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"]["table"].astype(dtype)[token]
+    x = constrain(x, "batch", None, None)
+    x, aux, new_state = _scan_blocks(params, cfg, x, "decode", state=state, pos=pos)
+    logits = lm_logits(params, cfg, x)
+    return logits, new_state

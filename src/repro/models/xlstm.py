@@ -1,0 +1,175 @@
+"""xLSTM blocks: mLSTM (matrix memory, stabilized exponential gating) and
+sLSTM (scalar memory with hidden-to-hidden recurrence), per arXiv:2405.04517.
+
+Both cells are true recurrences; we express them as ``lax.scan`` over time.
+The mLSTM scan carries the per-head matrix state (C: hd×hd, n: hd, m: scalar)
+and the sLSTM scan carries (h, c, n, m). On TPU the scan lowers to a single
+while-loop HLO whose body is a batch of small MXU matmuls — sequential in
+time but O(1) memory in sequence length, which is exactly why the ssm family
+is the one that serves the 500k-token decode shape.
+
+Decode reuses the same cell functions one step at a time.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.sharding import constrain
+from repro.utils.scan import chunked_scan
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+
+
+def init_mlstm(key, cfg, dtype):
+    d = cfg.d_model
+    inner = cfg.ssm_inner
+    h = cfg.xlstm_heads
+    hd = inner // h
+    keys = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(keys[0], d, (2 * inner,), dtype),
+        "wq": dense_init(keys[1], inner, (h, hd), dtype),
+        "wk": dense_init(keys[2], inner, (h, hd), dtype),
+        "wv": dense_init(keys[3], inner, (h, hd), dtype),
+        "gates": dense_init(keys[4], inner, (2 * h,), jnp.float32),  # i, f pre-acts
+        "out_proj": dense_init(keys[5], inner, (d,), dtype),
+    }
+
+
+def _mlstm_cell(carry, qkvif):
+    """One time step, vectorized over (B, H).
+
+    carry: C (B,H,hd,hd), n (B,H,hd), m (B,H).
+    qkvif: q,k,v (B,H,hd) f32; i_pre, f_pre (B,H) f32."""
+    c, n, m = carry
+    q, k, v, i_pre, f_pre = qkvif
+    log_f = -jax.nn.softplus(-f_pre)  # log sigmoid(f)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    c_new = f_g[..., None, None] * c + i_g[..., None, None] * (v[..., :, None] * k[..., None, :])
+    n_new = f_g[..., None] * n + i_g[..., None] * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, q)), jnp.exp(-m_new))
+    h_out = jnp.einsum("bhde,bhe->bhd", c_new, q) / denom[..., None]
+    return (c_new, n_new, m_new), h_out
+
+
+def mlstm_forward(params, x, cfg, state: Dict = None, return_state: bool = False):
+    b, s, d = x.shape
+    h, inner = cfg.xlstm_heads, cfg.ssm_inner
+    hd = inner // h
+    xz = jnp.einsum("bsd,di->bsi", x, params["in_proj"].astype(x.dtype))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = constrain(xin, "batch", None, "tp")
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    q = jnp.einsum("bsi,ihd->bshd", xin, params["wq"].astype(x.dtype)).astype(jnp.float32) * scale
+    k = jnp.einsum("bsi,ihd->bshd", xin, params["wk"].astype(x.dtype)).astype(jnp.float32) * scale
+    v = jnp.einsum("bsi,ihd->bshd", xin, params["wv"].astype(x.dtype)).astype(jnp.float32)
+    gates = jnp.einsum("bsi,ig->bsg", xin.astype(jnp.float32), params["gates"])
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)  # (B,S,H)
+
+    if state is None:
+        c0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, h, hd), jnp.float32)
+        m0 = jnp.zeros((b, h), jnp.float32)
+    else:
+        c0, n0, m0 = state["C"], state["n"], state["m"]
+
+    tfirst = lambda t: t.swapaxes(0, 1)  # (S, B, ...)
+    # chunk-checkpointed: the carry C is (B,H,hd,hd) — per-step residuals
+    # for 4k tokens would be tens of GB; chunking keeps O(S/chunk) carries.
+    (cF, nF, mF), hs = chunked_scan(
+        _mlstm_cell,
+        (c0, n0, m0),
+        (tfirst(q), tfirst(k), tfirst(v), tfirst(i_pre), tfirst(f_pre)),
+        chunk=cfg.ssm_chunk,
+    )
+    hs = hs.swapaxes(0, 1).reshape(b, s, inner).astype(x.dtype)  # (B,S,H*hd)
+    y = hs * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, params["out_proj"].astype(x.dtype))
+    out = constrain(out, "batch", None, None)
+    if return_state:
+        return out, {"C": cF, "n": nF, "m": mF}
+    return out
+
+
+def init_mlstm_state(cfg, batch: int) -> Dict:
+    h = cfg.xlstm_heads
+    hd = cfg.ssm_inner // h
+    return {
+        "C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.zeros((batch, h), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+
+
+def init_slstm(key, cfg, dtype):
+    d = cfg.d_model
+    h = cfg.xlstm_heads
+    hd = d // h
+    keys = jax.random.split(key, 3)
+    return {
+        # input projections for the 4 gates (z, i, f, o), fused
+        "w": dense_init(keys[0], d, (4 * d,), dtype),
+        # block-diagonal (per-head) hidden-to-hidden recurrence for the 4 gates
+        "r": dense_init(keys[1], hd, (4, h, hd), jnp.float32, scale=0.5).transpose(1, 2, 0, 3),
+        # (4, H, hd, hd)
+        "out_proj": dense_init(keys[2], d, (d,), dtype),
+    }
+
+
+def _slstm_cell(params_r, carry, wx):
+    """carry: h, c, n (B,H,hd), m (B,H). wx: (B, 4, H, hd) input pre-acts."""
+    h, c, n, m = carry
+    rec = jnp.einsum("ghde,bhe->bghd", params_r, h)  # (B,4,H,hd)
+    pre = wx + rec
+    z_pre, i_pre, f_pre, o_pre = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    log_f = -jax.nn.softplus(-f_pre)  # exponential-gate stabilized via m
+    # per-head scalar stabilizer: track max over gate pre-acts
+    i_max = jnp.max(i_pre, axis=-1)
+    f_shift = jnp.max(log_f, axis=-1) + m
+    m_new = jnp.maximum(f_shift, i_max)
+    i_g = jnp.exp(i_pre - m_new[..., None])
+    f_g = jnp.exp(log_f + (m - m_new)[..., None])
+    c_new = f_g * c + i_g * jnp.tanh(z_pre)
+    n_new = f_g * n + i_g
+    h_new = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1e-6)
+    return (h_new, c_new, n_new, m_new), h_new
+
+
+def slstm_forward(params, x, cfg, state: Dict = None, return_state: bool = False):
+    b, s, d = x.shape
+    h = cfg.xlstm_heads
+    hd = d // h
+    wx = jnp.einsum("bsd,dg->bsg", x, params["w"].astype(x.dtype)).astype(jnp.float32)
+    wx = wx.reshape(b, s, 4, h, hd)
+    if state is None:
+        zeros = jnp.zeros((b, h, hd), jnp.float32)
+        carry = (zeros, zeros, zeros, jnp.zeros((b, h), jnp.float32))
+    else:
+        carry = (state["h"], state["c"], state["n"], state["m"])
+    cell = lambda cr, w_t: _slstm_cell(params["r"], cr, w_t)
+    (hF, cF, nF, mF), hs = chunked_scan(cell, carry, wx.swapaxes(0, 1), chunk=cfg.ssm_chunk)
+    hs = hs.swapaxes(0, 1).reshape(b, s, d).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", hs, params["out_proj"].astype(x.dtype))
+    out = constrain(out, "batch", None, None)
+    if return_state:
+        return out, {"h": hF, "c": cF, "n": nF, "m": mF}
+    return out
+
+
+def init_slstm_state(cfg, batch: int) -> Dict:
+    h = cfg.xlstm_heads
+    hd = cfg.d_model // h
+    z = jnp.zeros((batch, h, hd), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": jnp.zeros((batch, h), jnp.float32)}

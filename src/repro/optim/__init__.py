@@ -1,0 +1,29 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    sgd,
+    sgdm,
+    adam,
+    adamw,
+    make_optimizer,
+    clip_by_global_norm,
+)
+from repro.optim.schedules import (
+    constant_schedule,
+    cosine_schedule,
+    linear_warmup_cosine,
+    make_schedule,
+)
+
+__all__ = [
+    "Optimizer",
+    "sgd",
+    "sgdm",
+    "adam",
+    "adamw",
+    "make_optimizer",
+    "clip_by_global_norm",
+    "constant_schedule",
+    "cosine_schedule",
+    "linear_warmup_cosine",
+    "make_schedule",
+]

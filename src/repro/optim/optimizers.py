@@ -1,0 +1,140 @@
+"""Minimal optax-style optimizers, built in-house per the substrate mandate.
+
+An :class:`Optimizer` is an ``(init, update)`` pair over pytrees:
+
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, step)
+    params = apply_updates(params, updates)
+
+All states are pytrees with the same structure (and hence the same
+PartitionSpecs) as the parameters, so FSDP sharding of optimizer state comes
+for free from :func:`repro.sharding.infer_param_specs`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.train import TrainConfig
+from repro.optim.schedules import make_schedule
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], Any]  # grads, state, params, step
+
+
+def apply_updates(params: Any, updates: Any) -> Any:
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Any:
+    if max_norm <= 0:
+        return grads
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+
+def sgd(lr: Schedule) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step):
+        del params
+        u = jax.tree_util.tree_map(lambda g: -lr(step) * g, grads)
+        return u, state
+
+    return Optimizer(init, update)
+
+
+def sgdm(
+    lr: Schedule,
+    momentum: float = 0.9,
+    weight_decay: float = 0.0,
+    state_dtype: Optional[str] = None,
+) -> Optimizer:
+    """SGD with (heavy-ball) momentum — the paper's client/server optimizer.
+
+    ``state_dtype`` (e.g. "bfloat16") stores the momentum slot at reduced
+    precision — a §Perf memory lever for the 235B-param dry-runs; the
+    accumulation itself happens in f32."""
+
+    def init(params):
+        def z(p):
+            dt = jnp.dtype(state_dtype) if state_dtype else p.dtype
+            return jnp.zeros(p.shape, dt)
+
+        return {"m": jax.tree_util.tree_map(z, params)}
+
+    def update(grads, state, params, step):
+        if weight_decay:
+            grads = jax.tree_util.tree_map(lambda g, p: g + weight_decay * p, grads, params)
+        m = jax.tree_util.tree_map(
+            lambda m_, g: (momentum * m_.astype(jnp.float32) + g.astype(jnp.float32)).astype(m_.dtype),
+            state["m"],
+            grads,
+        )
+        u = jax.tree_util.tree_map(lambda m_: -lr(step) * m_.astype(jnp.float32), m)
+        return u, {"m": m}
+
+    return Optimizer(init, update)
+
+
+def _adam_core(lr, b1, b2, eps, weight_decay, decoupled):
+    def init(params):
+        z = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, z)}
+
+    def update(grads, state, params, step):
+        step = step.astype(jnp.float32) + 1.0
+        if weight_decay and not decoupled:
+            grads = jax.tree_util.tree_map(lambda g, p: g + weight_decay * p, grads, params)
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state["m"], grads
+        )
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"],
+            grads,
+        )
+        bc1 = 1 - b1**step
+        bc2 = 1 - b2**step
+        def u_fn(m_, v_, p):
+            upd = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay and decoupled:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return (-lr(step - 1.0) * upd).astype(p.dtype)
+
+        u = jax.tree_util.tree_map(u_fn, m, v, params)
+        return u, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adam(lr: Schedule, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, weight_decay, decoupled=False)
+
+
+def adamw(lr: Schedule, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, weight_decay, decoupled=True)
+
+
+def make_optimizer(cfg: TrainConfig) -> Optimizer:
+    lr = make_schedule(cfg)
+    if cfg.optimizer == "sgd":
+        return sgd(lr)
+    if cfg.optimizer == "sgdm":
+        return sgdm(lr, cfg.momentum, cfg.weight_decay, state_dtype=cfg.state_dtype or None)
+    if cfg.optimizer == "adam":
+        return adam(lr, cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay)
+    if cfg.optimizer == "adamw":
+        return adamw(lr, cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay)
+    raise ValueError(f"unknown optimizer {cfg.optimizer!r}")

@@ -1,0 +1,41 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr: float, total_steps: int, final_frac: float = 0.0) -> Schedule:
+    def fn(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+
+    return fn
+
+
+def linear_warmup_cosine(lr: float, warmup: int, total_steps: int) -> Schedule:
+    cos = cosine_schedule(lr, max(total_steps - warmup, 1))
+
+    def fn(step):
+        warm = lr * (step + 1) / max(warmup, 1)
+        return jnp.where(step < warmup, warm, cos(step - warmup))
+
+    return fn
+
+
+def make_schedule(cfg) -> Schedule:
+    if cfg.schedule == "constant":
+        return constant_schedule(cfg.learning_rate)
+    if cfg.schedule == "cosine":
+        return cosine_schedule(cfg.learning_rate, cfg.total_steps)
+    if cfg.schedule == "linear_warmup_cosine":
+        return linear_warmup_cosine(cfg.learning_rate, cfg.warmup_steps, cfg.total_steps)
+    raise ValueError(f"unknown schedule {cfg.schedule!r}")

@@ -1,0 +1,9 @@
+from repro.roofline.analysis import (
+    V5E,
+    HardwareSpec,
+    collective_bytes,
+    roofline_report,
+    model_flops,
+)
+
+__all__ = ["V5E", "HardwareSpec", "collective_bytes", "roofline_report", "model_flops"]

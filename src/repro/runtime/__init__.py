@@ -1,0 +1,13 @@
+from repro.runtime.steps import (
+    make_train_step,
+    make_distill_step_lm,
+    make_prefill_step,
+    make_decode_step,
+)
+
+__all__ = [
+    "make_train_step",
+    "make_distill_step_lm",
+    "make_prefill_step",
+    "make_decode_step",
+]

@@ -1,0 +1,110 @@
+"""Jit-able runtime steps for the LM substrate.
+
+Every step is a *pure function factory*: ``make_*_step(cfg, ...)`` returns a
+function suitable for ``jax.jit`` / ``.lower().compile()`` under a mesh —
+these are exactly the programs the multi-pod dry-run lowers (launch/dryrun).
+
+* ``train_step``   — CE language-model training (the client-pretraining
+                     substrate and the e2e example driver), with optional
+                     gradient micro-batching.
+* ``distill_step`` — Co-Boosting server distillation at LM scale (Eq. 4 over
+                     the stacked client ensemble; the paper's technique).
+* ``prefill_step`` / ``decode_step`` — serving (inference shapes).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.train import TrainConfig
+from repro.core.distributed import coboost_distill_loss
+from repro.models.transformer import lm_decode, lm_forward, lm_loss, lm_prefill
+from repro.optim import make_optimizer
+from repro.optim.optimizers import apply_updates, clip_by_global_norm
+from repro.utils import tree_zeros_like
+
+
+def make_train_step(cfg, tc: TrainConfig) -> Callable:
+    """Returns step(params, opt_state, batch, step_idx) ->
+    (params, opt_state, metrics)."""
+    opt = make_optimizer(tc)
+
+    def loss_fn(params, batch):
+        return lm_loss(params, cfg, batch)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def step(params, opt_state, batch, step_idx):
+        if tc.microbatches > 1:
+            def split(x):
+                return x.reshape(tc.microbatches, x.shape[0] // tc.microbatches, *x.shape[1:])
+
+            micro = jax.tree_util.tree_map(split, batch)
+
+            def body(carry, mb):
+                loss_acc, grads_acc = carry
+                loss, metrics, grads = grads_of(params, mb)
+                grads_acc = jax.tree_util.tree_map(jnp.add, grads_acc, grads)
+                return (loss_acc + loss, grads_acc), None
+
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros(()), tree_zeros_like(params)), micro
+            )
+            loss = loss / tc.microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / tc.microbatches, grads)
+            metrics = {"ce": loss}
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+        if tc.grad_dtype:
+            grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.dtype(tc.grad_dtype)), grads)
+        if tc.grad_clip_norm > 0:
+            grads = clip_by_global_norm(grads, tc.grad_clip_norm)
+        updates, opt_state = opt.update(grads, opt_state, params, step_idx)
+        params = apply_updates(params, updates)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    step.optimizer = opt
+    return step
+
+
+def make_distill_step_lm(cfg, tc: TrainConfig, temperature: float = 4.0, kl_chunk: int = 0) -> Callable:
+    """Returns step(server_params, opt_state, stacked_client_params, w,
+    batch, step_idx) — the LM-scale Co-Boosting distillation step (the
+    paper-technique program the dry-run exercises). ``kl_chunk`` enables
+    the chunked-logits memory lever (§Perf)."""
+    opt = make_optimizer(tc)
+
+    def step(server_params, opt_state, stacked_client_params, w, batch, step_idx):
+        loss, grads = jax.value_and_grad(coboost_distill_loss)(
+            server_params, stacked_client_params, w, cfg, batch, temperature, kl_chunk
+        )
+        if tc.grad_dtype:
+            grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.dtype(tc.grad_dtype)), grads)
+        if tc.grad_clip_norm > 0:
+            grads = clip_by_global_norm(grads, tc.grad_clip_norm)
+        updates, opt_state = opt.update(grads, opt_state, server_params, step_idx)
+        server_params = apply_updates(server_params, updates)
+        return server_params, opt_state, {"kd": loss}
+
+    step.optimizer = opt
+    return step
+
+
+def make_prefill_step(cfg) -> Callable:
+    def step(params, batch, state):
+        return lm_prefill(params, cfg, batch, state)
+
+    return step
+
+
+def make_decode_step(cfg) -> Callable:
+    def step(params, token, state, pos):
+        return lm_decode(params, cfg, token, state, pos)
+
+    return step

@@ -1,0 +1,21 @@
+from repro.sharding.partition import (
+    LOGICAL_RULES,
+    constrain,
+    infer_param_specs,
+    logical_to_pspec,
+    resolve_rule,
+    batch_pspec,
+    activation_pspec,
+    decode_state_specs,
+)
+
+__all__ = [
+    "LOGICAL_RULES",
+    "constrain",
+    "infer_param_specs",
+    "logical_to_pspec",
+    "resolve_rule",
+    "batch_pspec",
+    "activation_pspec",
+    "decode_state_specs",
+]

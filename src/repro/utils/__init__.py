@@ -1,0 +1,39 @@
+"""Small shared utilities: pytree helpers, PRNG streams, logging."""
+from repro.utils.trees import (
+    tree_map_with_path,
+    tree_paths,
+    tree_size,
+    tree_bytes,
+    tree_stack,
+    tree_unstack,
+    tree_index,
+    tree_zeros_like,
+    tree_cast,
+    tree_add,
+    tree_scale,
+    tree_l2_norm,
+    flatten_dict,
+    unflatten_dict,
+)
+from repro.utils.prng import PRNGStream, split_like
+from repro.utils.logging import get_logger
+
+__all__ = [
+    "tree_map_with_path",
+    "tree_paths",
+    "tree_size",
+    "tree_bytes",
+    "tree_stack",
+    "tree_unstack",
+    "tree_index",
+    "tree_zeros_like",
+    "tree_cast",
+    "tree_add",
+    "tree_scale",
+    "tree_l2_norm",
+    "flatten_dict",
+    "unflatten_dict",
+    "PRNGStream",
+    "split_like",
+    "get_logger",
+]

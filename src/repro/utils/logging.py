@@ -1,0 +1,21 @@
+"""Thin stdlib logging wrapper with a consistent format."""
+from __future__ import annotations
+
+import logging
+import sys
+
+_FORMAT = "%(asctime)s %(name)s %(levelname).1s | %(message)s"
+_configured = False
+
+
+def get_logger(name: str) -> logging.Logger:
+    global _configured
+    if not _configured:
+        handler = logging.StreamHandler(sys.stderr)
+        handler.setFormatter(logging.Formatter(_FORMAT, datefmt="%H:%M:%S"))
+        root = logging.getLogger("repro")
+        root.addHandler(handler)
+        root.setLevel(logging.INFO)
+        root.propagate = False
+        _configured = True
+    return logging.getLogger(f"repro.{name}")

@@ -1,0 +1,39 @@
+"""Chunk-checkpointed scan for recurrent mixers.
+
+BPTT through ``lax.scan`` saves the carry at *every* step — for mLSTM the
+carry is the (B, H, hd, hd) matrix memory, i.e. O(T · B · d²) residuals for
+a T-step sequence (38 GB/device at 4k tokens). ``chunked_scan`` nests two
+scans: an outer scan over chunks whose body is ``jax.checkpoint``-ed, so
+only chunk-boundary carries are saved and the within-chunk states are
+recomputed during the backward pass. Memory: O(T/chunk · |carry| +
+chunk · |step residuals|).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_scan(cell: Callable, carry: Any, xs: Any, chunk: int, use_checkpoint: bool = True):
+    """Like ``jax.lax.scan(cell, carry, xs)`` but checkpointed at chunk
+    boundaries. xs leaves have leading time axis T; falls back to a plain
+    scan when T is not divisible by ``chunk``."""
+    leaves = jax.tree_util.tree_leaves(xs)
+    t = leaves[0].shape[0]
+    chunk = min(chunk, t)
+    if t % chunk or chunk == t:
+        return jax.lax.scan(cell, carry, xs)
+    n = t // chunk
+
+    def chunk_body(c, xs_chunk):
+        return jax.lax.scan(cell, c, xs_chunk)
+
+    if use_checkpoint:
+        chunk_body = jax.checkpoint(chunk_body, prevent_cse=False)
+
+    reshape = lambda x: x.reshape(n, chunk, *x.shape[1:])
+    carry, ys = jax.lax.scan(chunk_body, carry, jax.tree_util.tree_map(reshape, xs))
+    unshape = lambda y: y.reshape(n * chunk, *y.shape[2:])
+    return carry, jax.tree_util.tree_map(unshape, ys)

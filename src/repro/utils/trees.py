@@ -1,0 +1,118 @@
+"""Pytree utilities used across the framework.
+
+Params everywhere in repro are nested ``dict``s of ``jnp.ndarray`` leaves.
+Paths are "/"-joined key strings (e.g. ``"block/attn/wq"``); the sharding
+rules in :mod:`repro.sharding` match on these paths.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterator, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_map_with_path(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """Map ``fn(path_str, leaf)`` over a pytree."""
+    return jax.tree_util.tree_map_with_path(lambda p, x: fn(_path_str(p), x), tree)
+
+
+def tree_paths(tree: Any) -> List[str]:
+    """Return the "/"-joined path of every leaf."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [_path_str(p) for p, _ in flat]
+
+
+def tree_size(tree: Any) -> int:
+    """Total number of scalar elements in the tree."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes (uses leaf dtypes; works on ShapeDtypeStruct too)."""
+    total = 0
+    for x in jax.tree_util.tree_leaves(tree):
+        total += int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+    return total
+
+
+def tree_stack(trees: List[Any]) -> Any:
+    """Stack a list of identically-structured trees along a new axis 0."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_unstack(tree: Any, n: int) -> List[Any]:
+    """Inverse of :func:`tree_stack`."""
+    return [jax.tree_util.tree_map(lambda x, i=i: x[i], tree) for i in range(n)]
+
+
+def tree_index(tree: Any, i) -> Any:
+    """Index every leaf's axis 0 (traceable; ``i`` may be a tracer)."""
+    return jax.tree_util.tree_map(lambda x: x[i], tree)
+
+
+def tree_zeros_like(tree: Any) -> Any:
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_cast(tree: Any, dtype) -> Any:
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )
+
+
+def tree_add(a: Any, b: Any) -> Any:
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_scale(tree: Any, s) -> Any:
+    return jax.tree_util.tree_map(lambda x: x * s, tree)
+
+
+def tree_l2_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def flatten_dict(d: Dict[str, Any], prefix: str = "") -> Dict[str, Any]:
+    """Flatten a nested dict into {"a/b/c": leaf}."""
+    out: Dict[str, Any] = {}
+    for k, v in d.items():
+        key = f"{prefix}/{k}" if prefix else str(k)
+        if isinstance(v, dict):
+            out.update(flatten_dict(v, key))
+        else:
+            out[key] = v
+    return out
+
+
+def unflatten_dict(d: Dict[str, Any]) -> Dict[str, Any]:
+    """Inverse of :func:`flatten_dict`."""
+    out: Dict[str, Any] = {}
+    for k, v in d.items():
+        parts = k.split("/")
+        cur = out
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = v
+    return out
+
+
+def iter_leaves_with_path(tree: Any) -> Iterator[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for p, x in flat:
+        yield _path_str(p), x

@@ -1,0 +1,157 @@
+"""Unit + property tests for the paper's core equations (Eq. 2, 5-12)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    adversarial_loss,
+    ce_per_sample,
+    diversify,
+    ensemble_logits,
+    generator_loss,
+    ghs_loss,
+    kl_loss,
+    kl_per_sample,
+    make_logits_all,
+    normalize_weights,
+    sample_difficulty,
+    uniform_weights,
+    update_weights,
+)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# losses
+
+
+@given(st.integers(2, 40), st.integers(2, 8), st.floats(0.5, 8.0))
+@settings(**SETTINGS)
+def test_kl_properties(c, b, temp):
+    key = jax.random.key(c * 100 + b)
+    p = jax.random.normal(key, (b, c)) * 2
+    q = jax.random.normal(jax.random.fold_in(key, 1), (b, c)) * 2
+    kl = kl_per_sample(p, q, temp)
+    assert np.all(np.asarray(kl) >= -1e-5)  # KL non-negative
+    np.testing.assert_allclose(kl_per_sample(p, p, temp), np.zeros(b), atol=1e-5)
+
+
+@given(st.integers(2, 30), st.integers(1, 10))
+@settings(**SETTINGS)
+def test_sample_difficulty_in_unit_interval(c, b):
+    logits = jax.random.normal(jax.random.key(b), (b, c)) * 5
+    labels = jax.random.randint(jax.random.key(b + 1), (b,), 0, c)
+    d = np.asarray(sample_difficulty(logits, labels))
+    assert np.all(d >= 0) and np.all(d <= 1)
+
+
+def test_ghs_loss_equals_plain_ce_when_disabled():
+    logits = jax.random.normal(jax.random.key(0), (8, 10))
+    labels = jnp.arange(8) % 10
+    plain = float(jnp.mean(ce_per_sample(logits, labels)))
+    assert abs(float(ghs_loss(logits, labels, use_ghs=False)) - plain) < 1e-6
+    assert float(ghs_loss(logits, labels, use_ghs=True)) <= plain + 1e-6
+
+
+def test_adversarial_loss_sign():
+    """L_A = −KL ⇒ more disagreement ⇒ more negative loss."""
+    t = jax.random.normal(jax.random.key(0), (4, 10)) * 3
+    close = t + 0.01
+    far = -t
+    assert float(adversarial_loss(t, far)) < float(adversarial_loss(t, close))
+
+
+# ---------------------------------------------------------------------------
+# ensemble & weights
+
+
+def test_ensemble_logits_weighted_sum():
+    la = jax.random.normal(jax.random.key(0), (3, 5, 7))
+    w = jnp.asarray([0.5, 0.3, 0.2])
+    want = 0.5 * la[0] + 0.3 * la[1] + 0.2 * la[2]
+    np.testing.assert_allclose(ensemble_logits(la, w), want, rtol=1e-6)
+
+
+@given(st.lists(st.floats(-3, 3), min_size=2, max_size=16))
+@settings(**SETTINGS)
+def test_normalize_weights_simplex(ws):
+    w = normalize_weights(jnp.asarray(ws, jnp.float32))
+    w = np.asarray(w)
+    assert np.all(w >= 0) and np.all(w <= 1)
+    clipped_sum = np.clip(np.asarray(ws, np.float32), 0, 1).sum()
+    if clipped_sum > 1e-6:  # non-degenerate: must land on the simplex
+        np.testing.assert_allclose(w.sum(), 1.0, atol=1e-5)
+
+
+@given(st.integers(2, 8), st.floats(0.001, 0.2))
+@settings(**SETTINGS)
+def test_update_weights_stays_on_simplex(n, mu):
+    la = jax.random.normal(jax.random.key(n), (n, 16, 6)) * 2
+    labels = jax.random.randint(jax.random.key(n + 1), (16,), 0, 6)
+    w = uniform_weights(n)
+    for _ in range(3):
+        w = update_weights(w, la, labels, mu)
+    w = np.asarray(w)
+    assert np.all(w >= -1e-7) and np.all(w <= 1 + 1e-7)
+    np.testing.assert_allclose(w.sum(), 1.0, atol=1e-5)
+
+
+def test_update_weights_upweights_better_client():
+    """Client 0 predicts labels perfectly, client 1 is anti-correlated —
+    Eq. 12 must move weight toward client 0."""
+    b, c = 64, 5
+    labels = jnp.arange(b) % c
+    good = jax.nn.one_hot(labels, c) * 10.0
+    bad = jax.nn.one_hot((labels + 1) % c, c) * 10.0
+    la = jnp.stack([good, bad])
+    w = uniform_weights(2)
+    for _ in range(5):
+        w = update_weights(w, la, labels, 0.05)
+    assert float(w[0]) > float(w[1])
+
+
+# ---------------------------------------------------------------------------
+# DHS (Eq. 9-10)
+
+
+def test_diversify_perturbation_norm_and_shape():
+    def apply_fn(p, x):
+        return jnp.tanh(x.reshape(x.shape[0], -1) @ p)
+
+    p0 = jax.random.normal(jax.random.key(0), (12, 4))
+    logits_all_fn = make_logits_all([apply_fn])
+    x = jax.random.normal(jax.random.key(1), (6, 2, 2, 3))
+    eps = 8 / 255
+    x2 = diversify(logits_all_fn, (p0,), uniform_weights(1), x, jax.random.key(2), eps)
+    assert x2.shape == x.shape
+    delta = np.asarray(x2 - x).reshape(6, -1)
+    norms = np.linalg.norm(delta, axis=1)
+    np.testing.assert_allclose(norms, eps, rtol=1e-3)  # ε-normalized step
+
+
+def test_diversify_randomness_differs_by_key():
+    def apply_fn(p, x):
+        return x.reshape(x.shape[0], -1) @ p
+
+    p0 = jax.random.normal(jax.random.key(0), (12, 4))
+    fn = make_logits_all([apply_fn])
+    x = jax.random.normal(jax.random.key(1), (4, 2, 2, 3))
+    a = diversify(fn, (p0,), uniform_weights(1), x, jax.random.key(2), 0.1)
+    b = diversify(fn, (p0,), uniform_weights(1), x, jax.random.key(3), 0.1)
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_generator_loss_composition():
+    ens = jax.random.normal(jax.random.key(0), (8, 10)) * 2
+    srv = jax.random.normal(jax.random.key(1), (8, 10)) * 2
+    y = jnp.arange(8) % 10
+    base = float(generator_loss(ens, srv, y, use_ghs=True, use_adv=False))
+    with_adv = float(generator_loss(ens, srv, y, beta=1.0, use_ghs=True, use_adv=True))
+    adv = float(adversarial_loss(ens, srv))
+    np.testing.assert_allclose(with_adv, base + adv, rtol=1e-5)

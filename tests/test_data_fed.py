@@ -1,0 +1,116 @@
+"""Data pipeline + federated partition tests."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.config.train import OFLConfig
+from repro.data import (
+    c_cls_partition,
+    dirichlet_partition,
+    iid_partition,
+    lognormal_resize,
+    make_synth_images,
+    make_token_stream,
+    partition_dataset,
+)
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def test_synth_images_shapes_and_range():
+    x, y = make_synth_images(0, 6, 20, (16, 16, 3))
+    assert x.shape == (120, 16, 16, 3) and y.shape == (120,)
+    assert x.min() >= -1.0 and x.max() <= 1.0
+    assert sorted(np.unique(y)) == list(range(6))
+
+
+def test_synth_images_class_separability():
+    """Nearest-class-mean classification must beat chance by a wide margin —
+    otherwise the OFL benchmarks would be vacuous."""
+    x, y = make_synth_images(0, 6, 60, (16, 16, 3))
+    xt, yt = make_synth_images(1, 6, 30, (16, 16, 3))
+    means = np.stack([x[y == c].reshape(-1, 16 * 16 * 3).mean(0) for c in range(6)])
+    d = ((xt.reshape(-1, 16 * 16 * 3)[:, None] - means[None]) ** 2).sum(-1)
+    acc = (d.argmin(1) == yt).mean()
+    # ≥3× chance for a linear-in-pixels classifier (CNN clients reach ~1.0;
+    # see the market logs in tests/test_ofl_integration.py)
+    assert acc > 0.5, acc
+
+
+def test_synth_images_deterministic():
+    a = make_synth_images(3, 4, 10, (8, 8, 3))
+    b = make_synth_images(3, 4, 10, (8, 8, 3))
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_token_stream_learnable_structure():
+    d = make_token_stream(0, 128, 4, 64)
+    assert d["tokens"].shape == (4, 64)
+    np.testing.assert_array_equal(d["tokens"][:, 1:], d["labels"][:, :-1])
+    assert d["tokens"].max() < 128 and d["tokens"].min() >= 0
+
+
+@given(st.integers(2, 12), st.sampled_from([0.05, 0.1, 0.5, 10.0]))
+@settings(**SETTINGS)
+def test_dirichlet_partition_is_a_partition(n_clients, alpha):
+    rng = np.random.RandomState(0)
+    labels = rng.randint(0, 6, size=600)
+    parts = dirichlet_partition(0, labels, n_clients, alpha)
+    all_idx = np.concatenate(parts)
+    assert len(all_idx) == 600
+    assert len(np.unique(all_idx)) == 600  # disjoint cover
+    assert all(len(p) >= 2 for p in parts)
+
+
+def test_dirichlet_alpha_controls_skew():
+    rng = np.random.RandomState(0)
+    labels = rng.randint(0, 10, size=5000)
+
+    def skew(alpha):
+        parts = dirichlet_partition(0, labels, 10, alpha)
+        # mean per-client entropy of the label histogram (lower = more skew)
+        ents = []
+        for p in parts:
+            h = np.bincount(labels[p], minlength=10).astype(float)
+            h /= h.sum()
+            ents.append(-(h[h > 0] * np.log(h[h > 0])).sum())
+        return np.mean(ents)
+
+    assert skew(0.05) < skew(10.0)
+
+
+@given(st.integers(2, 8), st.integers(1, 5))
+@settings(**SETTINGS)
+def test_c_cls_partition_class_limit(n_clients, c):
+    rng = np.random.RandomState(1)
+    labels = rng.randint(0, 6, size=800)
+    parts = c_cls_partition(0, labels, n_clients, c)
+    all_idx = np.concatenate([p for p in parts if len(p)])
+    assert len(np.unique(all_idx)) == len(all_idx)
+    for p in parts:
+        if len(p):
+            assert len(np.unique(labels[p])) <= c
+
+
+def test_lognormal_resize_skews_sizes():
+    labels = np.random.RandomState(0).randint(0, 6, size=1200)
+    parts = iid_partition(0, labels, 8)
+    sized = lognormal_resize(0, parts, sigma=1.2)
+    sizes = np.array([len(p) for p in sized])
+    assert sizes.max() > 2 * sizes.min()
+    even = lognormal_resize(0, parts, sigma=0.0)
+    assert [len(p) for p in even] == [len(p) for p in parts]
+
+
+def test_partition_dispatch():
+    labels = np.random.RandomState(0).randint(0, 6, size=600)
+    for part, kw in (("dirichlet", {}), ("c_cls", {}), ("iid", {})):
+        cfg = OFLConfig(num_clients=4, partition=part)
+        parts = partition_dataset(0, labels, cfg)
+        assert len(parts) == 4
+    with pytest.raises(ValueError):
+        partition_dataset(0, labels, OFLConfig(partition="nope"))

@@ -1,0 +1,106 @@
+"""LM-scale Co-Boosting (core.distributed) + runtime step tests."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig, TrainConfig
+from repro.core.distributed import (
+    client_lm_logits,
+    coboost_distill_loss,
+    dhs_embeds,
+    ee_update_lm,
+    ensemble_lm_logits,
+)
+from repro.models import init_lm, lm_forward
+from repro.runtime import make_distill_step_lm, make_train_step
+from repro.utils import tree_stack
+
+CFG = ModelConfig(
+    name="tiny", family="dense", num_layers=2, d_model=32, num_heads=4,
+    num_kv_heads=2, head_dim=8, d_ff=64, vocab_size=96, scan_layers=True,
+    remat=False, dtype="float32", param_dtype="float32",
+)
+
+
+def _clients(k=3):
+    return tree_stack([init_lm(CFG, jax.random.key(i)) for i in range(k)])
+
+
+def test_ensemble_lm_logits_matches_manual():
+    stacked = _clients(3)
+    batch = {"tokens": jax.random.randint(jax.random.key(9), (2, 8), 0, CFG.vocab_size)}
+    w = jnp.asarray([0.5, 0.25, 0.25])
+    got = ensemble_lm_logits(stacked, CFG, batch, w)
+    manual = 0.0
+    for i, wi in enumerate([0.5, 0.25, 0.25]):
+        p_i = jax.tree_util.tree_map(lambda x: x[i], stacked)
+        manual = manual + wi * lm_forward(p_i, CFG, batch)[0].astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(manual), rtol=1e-5, atol=1e-5)
+
+
+def test_client_lm_logits_shape():
+    stacked = _clients(2)
+    batch = {"tokens": jnp.zeros((3, 6), jnp.int32)}
+    out = client_lm_logits(stacked, CFG, batch)
+    assert out.shape == (2, 3, CFG.vocab_size)
+
+
+def test_dhs_embeds_eps_norm():
+    stacked = _clients(2)
+    embeds = jax.random.normal(jax.random.key(0), (2, 6, CFG.d_model)) * 0.02
+    batch = {"embeds": embeds}
+    out = dhs_embeds(stacked, CFG, batch, jnp.asarray([0.5, 0.5]), jax.random.key(1), 0.1)
+    delta = np.asarray(out["embeds"] - embeds).reshape(2, -1)
+    np.testing.assert_allclose(np.linalg.norm(delta, axis=1), 0.1, rtol=1e-3)
+
+
+def test_ee_update_lm_simplex():
+    stacked = _clients(3)
+    batch = {"embeds": jax.random.normal(jax.random.key(0), (4, 6, CFG.d_model)) * 0.02}
+    labels = jax.random.randint(jax.random.key(1), (4,), 0, CFG.vocab_size)
+    w = jnp.full((3,), 1 / 3)
+    w2 = ee_update_lm(w, stacked, CFG, batch, labels, mu=0.05)
+    w2 = np.asarray(w2)
+    assert np.all(w2 >= 0) and abs(w2.sum() - 1) < 1e-5
+    assert not np.allclose(w2, 1 / 3)
+
+
+def test_distill_step_reduces_kd_loss():
+    stacked = _clients(2)
+    server = init_lm(CFG, jax.random.key(42))
+    tc = TrainConfig(optimizer="sgdm", learning_rate=0.2)
+    step = make_distill_step_lm(CFG, tc)
+    opt_state = step.optimizer.init(server)
+    w = jnp.asarray([0.5, 0.5])
+    batch = {"embeds": jax.random.normal(jax.random.key(3), (2, 8, CFG.d_model)) * 0.02}
+    jit_step = jax.jit(step)
+    losses = []
+    for i in range(5):
+        server, opt_state, m = jit_step(server, opt_state, stacked, w, batch, jnp.asarray(i))
+        losses.append(float(m["kd"]))
+    assert losses[-1] < losses[0], losses
+
+
+def test_train_step_microbatch_equivalence():
+    """microbatches=2 gradient accumulation must match the single-batch
+    step (same SGD update up to float tolerance)."""
+    tc1 = TrainConfig(optimizer="sgd", learning_rate=0.1, microbatches=1)
+    tc2 = TrainConfig(optimizer="sgd", learning_rate=0.1, microbatches=2)
+    params = init_lm(CFG, jax.random.key(0))
+    batch = {
+        "tokens": jax.random.randint(jax.random.key(1), (4, 8), 0, CFG.vocab_size),
+        "labels": jax.random.randint(jax.random.key(2), (4, 8), 0, CFG.vocab_size),
+    }
+    outs = []
+    for tc in (tc1, tc2):
+        step = make_train_step(CFG, tc)
+        st = step.optimizer.init(params)
+        p2, _, m = jax.jit(step)(params, st, batch, jnp.asarray(0))
+        outs.append(p2)
+    flat1 = jax.tree_util.tree_leaves(outs[0])
+    flat2 = jax.tree_util.tree_leaves(outs[1])
+    for a, b in zip(flat1, flat2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)

@@ -1,0 +1,95 @@
+"""Per-kernel allclose sweeps (shapes × dtypes) against the pure-jnp
+oracles, run in Pallas interpret mode on CPU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (
+    ensemble_kl,
+    ensemble_kl_ref,
+    flash_attention,
+    flash_attention_ref,
+    ghm_ce,
+    ghm_ce_ref,
+)
+
+
+@pytest.mark.parametrize("k,b,v", [(1, 4, 64), (3, 13, 700), (8, 32, 2048), (5, 8, 511)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("temp", [1.0, 4.0])
+def test_ensemble_kl_matches_ref(k, b, v, dtype, temp):
+    cl = (jax.random.normal(jax.random.key(0), (k, b, v)) * 3).astype(dtype)
+    st = (jax.random.normal(jax.random.key(1), (b, v)) * 3).astype(dtype)
+    w = jax.nn.softmax(jax.random.normal(jax.random.key(2), (k,)))
+    got = ensemble_kl(cl, st, w, temperature=temp)
+    want = ensemble_kl_ref(cl, st, w, temp)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_ensemble_kl_zero_for_identical():
+    cl = jnp.stack([jax.random.normal(jax.random.key(0), (6, 100))] * 3)
+    st = cl[0]
+    w = jnp.full((3,), 1 / 3)
+    got = ensemble_kl(cl, st, w, temperature=2.0)
+    np.testing.assert_allclose(got, np.zeros(6), atol=1e-5)
+
+
+@pytest.mark.parametrize("k,b,v", [(2, 5, 33), (4, 11, 531), (10, 16, 1024)])
+@pytest.mark.parametrize("weighted", [True, False])
+def test_ghm_ce_matches_ref(k, b, v, weighted):
+    cl = jax.random.normal(jax.random.key(0), (k, b, v)) * 2
+    lbl = jax.random.randint(jax.random.key(1), (b,), 0, v)
+    w = jax.nn.softmax(jax.random.normal(jax.random.key(2), (k,)))
+    got = ghm_ce(cl, lbl, w, weighted=weighted)
+    want = ghm_ce_ref(cl, lbl, w, weighted)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_ghm_ce_difficulty_weighting_downweights_easy():
+    """An easy sample (huge label logit) must contribute ~0 weighted CE."""
+    v = 64
+    cl = jnp.zeros((1, 2, v))
+    cl = cl.at[0, 0, 3].set(30.0)  # sample 0: trivially classified as 3
+    lbl = jnp.asarray([3, 5])
+    w = jnp.ones((1,))
+    out = np.asarray(ghm_ce(cl, lbl, w))
+    assert out[0] < 1e-6  # d≈0 ⇒ weighted CE ≈ 0
+    assert out[1] > 1.0  # hard sample keeps its CE
+
+
+@pytest.mark.parametrize(
+    "b,sq,h,kh,hd,causal,window,cap",
+    [
+        (2, 64, 4, 2, 32, True, 0, 0.0),
+        (1, 40, 4, 4, 16, True, 0, 0.0),
+        (2, 33, 2, 1, 32, False, 0, 0.0),
+        (1, 96, 4, 2, 32, True, 24, 0.0),
+        (1, 48, 2, 2, 64, True, 0, 20.0),
+        (3, 128, 8, 4, 64, True, 0, 0.0),
+    ],
+)
+def test_flash_attention_matches_ref(b, sq, h, kh, hd, causal, window, cap):
+    q = jax.random.normal(jax.random.key(0), (b, sq, h, hd))
+    k = jax.random.normal(jax.random.key(1), (b, sq, kh, hd))
+    v = jax.random.normal(jax.random.key(2), (b, sq, kh, hd))
+    got = flash_attention(q, k, v, causal=causal, window=window, softcap=cap, block_q=16, block_kv=32)
+    want = flash_attention_ref(q, k, v, causal=causal, window=window, softcap=cap)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    b, s, h, kh, hd = 1, 64, 4, 2, 32
+    q = jax.random.normal(jax.random.key(0), (b, s, h, hd)).astype(dtype)
+    k = jax.random.normal(jax.random.key(1), (b, s, kh, hd)).astype(dtype)
+    v = jax.random.normal(jax.random.key(2), (b, s, kh, hd)).astype(dtype)
+    got = flash_attention(q, k, v, causal=True, block_q=16, block_kv=16)
+    want = flash_attention_ref(q, k, v, causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), rtol=tol, atol=tol
+    )

@@ -1,0 +1,114 @@
+"""Optimizers, schedules, sharding rule resolution, checkpointing."""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import list_checkpoints, load_checkpoint, save_checkpoint
+from repro.config import TrainConfig
+from repro.optim import (
+    adam,
+    adamw,
+    clip_by_global_norm,
+    constant_schedule,
+    cosine_schedule,
+    linear_warmup_cosine,
+    make_optimizer,
+    sgd,
+    sgdm,
+)
+from repro.optim.optimizers import apply_updates
+from repro.sharding import resolve_rule
+from repro.sharding.partition import infer_param_specs
+
+
+@pytest.mark.parametrize("opt_name", ["sgd", "sgdm", "adam", "adamw"])
+def test_optimizers_descend_quadratic(opt_name):
+    tc = TrainConfig(optimizer=opt_name, learning_rate=0.1)
+    opt = make_optimizer(tc)
+    params = {"w": jnp.asarray([3.0, -2.0]), "b": jnp.asarray([1.0])}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"])) + jnp.sum(jnp.square(p["b"]))
+
+    l0 = float(loss(params))
+    for i in range(50):
+        g = jax.grad(loss)(params)
+        u, state = opt.update(g, state, params, jnp.asarray(i, jnp.int32))
+        params = apply_updates(params, u)
+    assert float(loss(params)) < 0.05 * l0, opt_name
+
+
+def test_grad_clip():
+    g = {"a": jnp.asarray([3.0, 4.0])}  # norm 5
+    clipped = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(clipped["a"])), 1.0, rtol=1e-5)
+    same = clip_by_global_norm(g, 10.0)
+    np.testing.assert_allclose(same["a"], g["a"], rtol=1e-5)
+
+
+def test_schedules():
+    c = constant_schedule(0.1)
+    assert float(c(jnp.asarray(0))) == pytest.approx(0.1)
+    cos = cosine_schedule(1.0, 100)
+    assert float(cos(jnp.asarray(0))) == pytest.approx(1.0)
+    assert float(cos(jnp.asarray(100))) == pytest.approx(0.0, abs=1e-6)
+    wc = linear_warmup_cosine(1.0, 10, 100)
+    assert float(wc(jnp.asarray(0))) < float(wc(jnp.asarray(9)))
+
+
+# ---------------------------------------------------------------------------
+# sharding
+
+
+def test_resolve_rule_divisibility_fallback():
+    axes = {"data": 16, "model": 16}
+    # 9 heads don't divide 16 -> replicated; 64 do -> model
+    assert resolve_rule(("fsdp", "heads", None), (576, 9, 64), axes)[1] is None
+    assert resolve_rule(("fsdp", "heads", None), (4096, 64, 128), axes)[1] == "model"
+    # experts 8 < 16 -> fall to None
+    assert resolve_rule(("experts", "fsdp", None), (8, 4096, 14336), axes)[0] is None
+    assert resolve_rule(("experts", "fsdp", None), (128, 4096, 1536), axes)[0] == "model"
+    # batch folds pod+data when both divide
+    axes3 = {"pod": 2, "data": 16, "model": 16}
+    spec = resolve_rule(("batch", None), (256, 128), axes3)
+    assert spec[0] == ("pod", "data")
+
+
+def test_resolve_rule_never_reuses_axis():
+    axes = {"data": 4, "model": 4}
+    spec = resolve_rule(("tp", "tp"), (8, 8), axes)
+    used = [s for s in spec if s is not None]
+    assert len(used) <= 1  # second dim cannot reuse "model"
+
+
+def test_infer_param_specs_no_mesh_is_replicated():
+    params = {"block": {"attn": {"wq": jnp.zeros((8, 4, 2))}}}
+    specs = infer_param_specs(params)
+    assert specs["block"]["attn"]["wq"] == P()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+
+
+def test_checkpoint_roundtrip():
+    tree = {
+        "layer": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3), "b": jnp.ones((3,))},
+        "step": jnp.asarray(7),
+    }
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 10, tree, {"note": "test"})
+        save_checkpoint(d, 20, tree)
+        assert list_checkpoints(d) == [10, 20]
+        loaded = load_checkpoint(d)  # latest
+        np.testing.assert_array_equal(loaded["layer"]["w"], np.asarray(tree["layer"]["w"]))
+        loaded10 = load_checkpoint(d, 10)
+        np.testing.assert_array_equal(loaded10["step"], 7)

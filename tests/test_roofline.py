@@ -1,0 +1,71 @@
+"""Roofline analysis unit tests: HLO collective parser + term math."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import INPUT_SHAPES, get_arch
+from repro.roofline import V5E, collective_bytes, model_flops, roofline_report
+
+HLO_SAMPLE = """
+HloModule test
+ENTRY main {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %ag = f32[128,4096]{1,0} all-gather(%p0), dimensions={1}
+  %ar.1 = bf16[64,64]{1,0} all-reduce(%x), to_apply=%add
+  %rs = f32[8,256]{1,0} reduce-scatter(%y), dimensions={0}
+  %a2a = f32[16,16]{1,0} all-to-all(%z), dimensions={0}
+  %cp = bf16[4,4]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %ags = (f32[2,2]{1,0}, f32[2,2]{1,0}) all-gather-start(%v), dimensions={0}
+  %agd = f32[2,2]{1,0} all-gather-done(%ags)
+  %dot = f32[128,256]{1,0} dot(%p0, %p0), lhs_contracting_dims={1}
+}
+"""
+
+
+def test_collective_parser_kinds_and_bytes():
+    out = collective_bytes(HLO_SAMPLE)
+    assert out["all-gather"] == 128 * 4096 * 4 + 2 * (2 * 2 * 4)  # ag + ag-start tuple
+    assert out["all-reduce"] == 64 * 64 * 2
+    assert out["reduce-scatter"] == 8 * 256 * 4
+    assert out["all-to-all"] == 16 * 16 * 4
+    assert out["collective-permute"] == 4 * 4 * 2
+    assert out["total"] == sum(
+        out[k] for k in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+    )
+
+
+def test_collective_parser_ignores_compute_ops():
+    out = collective_bytes("%d = f32[128,128]{1,0} dot(%a, %b)\n%c = f32[4]{0} add(%x, %y)")
+    assert out["total"] == 0
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_arch("smollm-135m")
+    tr = model_flops(cfg, INPUT_SHAPES["train_4k"])
+    de = model_flops(cfg, INPUT_SHAPES["decode_32k"])
+    n = cfg.param_count(active_only=True)
+    assert tr == pytest.approx(6 * n * 256 * 4096)
+    assert de == pytest.approx(2 * n * 128)
+
+
+def test_moe_uses_active_params():
+    cfg = get_arch("qwen3-moe-235b-a22b")
+    assert cfg.param_count(active_only=True) < 0.15 * cfg.param_count()
+
+
+def test_roofline_report_on_tiny_compiled():
+    """End-to-end on a real compiled program (1 device)."""
+
+    def f(a, b):
+        return jnp.tanh(a @ b)
+
+    a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    compiled = jax.jit(f).lower(a, a).compile()
+    rep = roofline_report(compiled, num_chips=1)
+    assert rep["hlo_flops_per_device"] >= 2 * 256**3
+    assert rep["dominant"] in ("compute", "memory", "collective")
+    assert rep["fits_hbm"]
+    assert rep["compute_s"] > 0 and rep["memory_s"] > 0
