@@ -14,11 +14,19 @@ os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_p
 
 import argparse
 import json
+import time
 
-from repro.launch.dryrun import dryrun_one
 from repro.utils import get_logger
 
 log = get_logger("hillclimb")
+
+
+def dryrun_one(*args, **kwargs):
+    """Deferred import: the dryrun stack needs a jax with sharding.AxisType;
+    keeping it lazy lets the live-market pairs (epochdrv) run everywhere."""
+    from repro.launch.dryrun import dryrun_one as _dryrun_one
+
+    return _dryrun_one(*args, **kwargs)
 
 
 def show(tag, rec):
@@ -153,7 +161,63 @@ def pair_coboost(out):
     )
 
 
-PAIRS = {"qwen3moe": pair_qwen3moe, "mixtral": pair_mixtral, "coboost": pair_coboost}
+def pair_epochdrv(out):
+    """Epoch-driver hillclimb (the device-resident buffer PR's headline
+    number): Co-Boosting epochs/sec, fused single-dispatch scan engine vs
+    the legacy per-batch dispatch loop, on a miniature live market. Timed as
+    the difference of two run lengths so compile + market setup cancel."""
+    import dataclasses
+    from functools import partial
+
+    import jax
+
+    from repro.config.train import OFLConfig
+    from repro.core import default_image_setup, run_coboosting
+    from repro.data import make_synth_images
+    from repro.fed import build_market
+    from repro.models.cnn import cnn_apply, init_cnn
+
+    classes, shape = 4, (8, 8, 3)
+    short, long = 4, 16
+    cfg = OFLConfig(
+        num_clients=3, local_epochs=2, local_batch_size=16,
+        epochs=long, gen_iters=4, batch_size=16, latent_dim=8, buffer_batches=6,
+    )
+    x, y = make_synth_images(0, classes, 40, shape)
+    applies, params, _, _ = build_market(0, x, y, cfg, classes, archs=["mlp"] * 3)
+    server_apply = partial(cnn_apply, "mlp")
+
+    def run(driver, epochs):
+        c = dataclasses.replace(cfg, epochs=epochs)
+        sp = init_cnn(jax.random.key(99), "mlp", classes, shape)
+        gen_apply, gp = default_image_setup(jax.random.key(5), c, classes, shape)
+        t0 = time.time()
+        st = run_coboosting(
+            applies, params, server_apply, sp, gen_apply, gp, c, classes,
+            jax.random.key(0), driver=driver,
+        )
+        jax.block_until_ready(st.server_params)
+        return time.time() - t0
+
+    rec = {"status": "ok", "epochs": long - short, "buffer_batches": cfg.buffer_batches}
+    for driver in ("legacy", "fused"):
+        dt = run(driver, long) - run(driver, short)
+        rec[f"{driver}_epochs_per_sec"] = round((long - short) / max(dt, 1e-9), 3)
+    rec["speedup"] = round(rec["fused_epochs_per_sec"] / rec["legacy_epochs_per_sec"], 3)
+    log.info(
+        "epochdrv: fused=%.2f ep/s legacy=%.2f ep/s speedup=%.2fx (buffer=%d)",
+        rec["fused_epochs_per_sec"], rec["legacy_epochs_per_sec"], rec["speedup"],
+        cfg.buffer_batches,
+    )
+    out["epochdrv:fused_vs_legacy"] = rec
+
+
+PAIRS = {
+    "qwen3moe": pair_qwen3moe,
+    "mixtral": pair_mixtral,
+    "coboost": pair_coboost,
+    "epochdrv": pair_epochdrv,
+}
 
 
 def main():

@@ -7,8 +7,25 @@ Eq. 11-12    -> :mod:`repro.core.weight_search`
 Algorithm 1  -> :mod:`repro.core.coboosting`
 Baselines    -> :mod:`repro.core.baselines`
 LM-scale     -> :mod:`repro.core.distributed`
+Replay ring  -> :mod:`repro.core.buffer`
+Fused epochs -> :mod:`repro.core.epoch`
 """
 from repro.core.losses import ce_loss, ce_per_sample, kl_loss, kl_per_sample, entropy
+from repro.core.buffer import (
+    ReplayBuffer,
+    buffer_init,
+    buffer_append,
+    buffer_get,
+    buffer_as_lists,
+    logical_to_slot,
+)
+from repro.core.epoch import (
+    distill_schedule,
+    make_distill_sweep,
+    make_coboost_epoch,
+    make_adi_epoch,
+    make_feddf_epoch,
+)
 from repro.core.ensemble import (
     uniform_weights,
     data_amount_weights,
@@ -23,6 +40,7 @@ from repro.core.weight_search import normalize_weights, weight_loss, update_weig
 from repro.core.coboosting import (
     OFLState,
     run_coboosting,
+    init_synth_buffer,
     make_generator_phase,
     make_distill_step,
     make_ee_step,
@@ -63,8 +81,20 @@ __all__ = [
     "normalize_weights",
     "weight_loss",
     "update_weights",
+    "ReplayBuffer",
+    "buffer_init",
+    "buffer_append",
+    "buffer_get",
+    "buffer_as_lists",
+    "logical_to_slot",
+    "distill_schedule",
+    "make_distill_sweep",
+    "make_coboost_epoch",
+    "make_adi_epoch",
+    "make_feddf_epoch",
     "OFLState",
     "run_coboosting",
+    "init_synth_buffer",
     "make_generator_phase",
     "make_distill_step",
     "make_ee_step",

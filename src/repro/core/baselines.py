@@ -26,7 +26,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config.train import OFLConfig
-from repro.core.coboosting import OFLState, _sample_zy, make_distill_step
+from repro.core.buffer import buffer_as_lists, buffer_init
+from repro.core.coboosting import OFLState, _sample_zy, init_synth_buffer, make_distill_step
+from repro.core.epoch import distill_schedule, make_adi_epoch, make_coboost_epoch, make_feddf_epoch
 from repro.core.ensemble import ensemble_logits, make_logits_all, uniform_weights
 from repro.core.losses import ce_loss, ce_per_sample, entropy, kl_loss
 from repro.optim import adam, constant_schedule
@@ -95,13 +97,48 @@ def run_generator_baseline(
     key: jax.Array,
     eval_fn: Optional[Callable] = None,
     eval_every: int = 50,
+    driver: str = "fused",
 ) -> OFLState:
-    """F-DAFL / DENSE: two-stage synth→distill with a fixed uniform ensemble."""
+    """F-DAFL / DENSE: two-stage synth→distill with a fixed uniform ensemble.
+    On accelerator backends the fused driver donates the caller's server/gen
+    params — invalidated after epoch 0; copy first if reused."""
     objective = GEN_OBJECTIVES[method]
     n = len(client_applies)
     logits_all_fn = make_logits_all(client_applies)
     client_params = tuple(client_params)
     w = uniform_weights(n)
+
+    if driver == "fused":
+        epoch_step, gen_opt, srv_opt = make_coboost_epoch(
+            logits_all_fn, server_apply, gen_apply, cfg, n, num_classes,
+            gen_objective=objective, use_ee=False, distill_dhs=False,
+        )
+        gen_opt_state = gen_opt.init(gen_params)
+        srv_opt_state = srv_opt.init(server_params)
+        buf = init_synth_buffer(gen_apply, gen_params, cfg)
+        state = OFLState(server_params, gen_params, w, [], [], [])
+        srv_steps = jnp.zeros((), jnp.int32)
+        for epoch in range(cfg.epochs):
+            slot_order, n_valid = distill_schedule(epoch, cfg.buffer_batches)
+            (
+                state.server_params, srv_opt_state, state.gen_params, gen_opt_state,
+                w, buf, key, srv_steps, gloss, dmean,
+            ) = epoch_step(
+                state.server_params, srv_opt_state, state.gen_params, gen_opt_state,
+                w, buf, key, srv_steps, slot_order, n_valid, client_params,
+            )
+            state.weights = w
+            state.dispatch_count += 1
+            if eval_fn is not None and ((epoch + 1) % eval_every == 0 or epoch == cfg.epochs - 1):
+                metrics = eval_fn(state.server_params, w)
+                metrics.update(epoch=epoch, gen_loss=float(gloss), distill_loss=float(dmean))
+                state.history.append(metrics)
+                log.info("[%s] epoch %d %s", method, epoch, {k: round(v, 4) for k, v in metrics.items() if isinstance(v, float)})
+        state.buffer = buf
+        state.buffer_x, state.buffer_y = buffer_as_lists(buf)
+        return state
+    if driver != "legacy":
+        raise ValueError(f"unknown driver {driver!r}")
 
     gen_opt = adam(constant_schedule(cfg.gen_lr))
 
@@ -152,10 +189,13 @@ def run_generator_baseline(
                 jnp.asarray(step_idx, jnp.int32),
             )
             step_idx += 1
-            dlosses.append(float(dl))
+            dlosses.append(dl)  # device scalar — no per-batch host sync
         if eval_fn is not None and ((epoch + 1) % eval_every == 0 or epoch == cfg.epochs - 1):
             metrics = eval_fn(state.server_params, w)
-            metrics.update(epoch=epoch, gen_loss=float(gloss), distill_loss=float(np.mean(dlosses)))
+            metrics.update(
+                epoch=epoch, gen_loss=float(gloss),
+                distill_loss=float(np.mean(jax.device_get(dlosses))),
+            )
             state.history.append(metrics)
             log.info("[%s] epoch %d %s", method, epoch, {k: round(v, 4) for k, v in metrics.items() if isinstance(v, float)})
     return state
@@ -172,6 +212,7 @@ def run_adi_baseline(
     key: jax.Array,
     eval_fn: Optional[Callable] = None,
     eval_every: int = 50,
+    driver: str = "fused",
 ) -> OFLState:
     """F-ADI: optimize pixel batches directly (DeepInversion without BN
     statistics — our clients are GroupNorm, so only image priors apply)."""
@@ -184,6 +225,32 @@ def run_adi_baseline(
     def inv_loss(x, y, cp):
         ens = ensemble_logits(logits_all_fn(cp, x), w)
         return ce_loss(ens, y) + 2.5e-2 * _tv_l2(x)
+
+    if driver == "fused":
+        epoch_step, srv_opt = make_adi_epoch(
+            logits_all_fn, server_apply, image_shape, cfg, num_classes, inv_loss
+        )
+        srv_opt_state = srv_opt.init(server_params)
+        buf = buffer_init(cfg.buffer_batches, (cfg.batch_size, *image_shape))
+        state = OFLState(server_params, None, w, [], [], [])
+        srv_steps = jnp.zeros((), jnp.int32)
+        for epoch in range(cfg.epochs):
+            slot_order, n_valid = distill_schedule(epoch, cfg.buffer_batches)
+            state.server_params, srv_opt_state, buf, key, srv_steps, _ = epoch_step(
+                state.server_params, srv_opt_state, w, buf, key, srv_steps,
+                slot_order, n_valid, client_params,
+            )
+            state.dispatch_count += 1
+            if eval_fn is not None and ((epoch + 1) % eval_every == 0 or epoch == cfg.epochs - 1):
+                metrics = eval_fn(state.server_params, w)
+                metrics["epoch"] = epoch
+                state.history.append(metrics)
+                log.info("[f_adi] epoch %d %s", epoch, {k: round(v, 4) for k, v in metrics.items() if isinstance(v, float)})
+        state.buffer = buf
+        state.buffer_x, state.buffer_y = buffer_as_lists(buf)
+        return state
+    if driver != "legacy":
+        raise ValueError(f"unknown driver {driver!r}")
 
     @jax.jit
     def synth_phase(x, y, cp):
@@ -239,6 +306,7 @@ def run_feddf(
     key: jax.Array,
     eval_fn: Optional[Callable] = None,
     eval_every: int = 50,
+    driver: str = "fused",
 ) -> OFLState:
     """FedDF: distill the uniform ensemble on real validation data (the
     paper marks this baseline as impractical — it needs data)."""
@@ -246,12 +314,34 @@ def run_feddf(
     logits_all_fn = make_logits_all(client_applies)
     client_params = tuple(client_params)
     w = uniform_weights(n)
+    nb = val_x.shape[0] // cfg.batch_size
+
+    if driver == "fused":
+        epoch_step, srv_opt = make_feddf_epoch(logits_all_fn, server_apply, cfg)
+        srv_opt_state = srv_opt.init(server_params)
+        val_batches = val_x[: nb * cfg.batch_size].reshape(nb, cfg.batch_size, *val_x.shape[1:])
+        state = OFLState(server_params, None, w, [], [], [])
+        srv_steps = jnp.zeros((), jnp.int32)
+        for epoch in range(cfg.epochs):
+            order = jnp.asarray(np.random.RandomState(epoch).permutation(nb).astype(np.int32))
+            state.server_params, srv_opt_state, key, srv_steps, _ = epoch_step(
+                state.server_params, srv_opt_state, key, srv_steps, order, val_batches, w, client_params
+            )
+            state.dispatch_count += 1
+            if eval_fn is not None and ((epoch + 1) % eval_every == 0 or epoch == cfg.epochs - 1):
+                metrics = eval_fn(state.server_params, w)
+                metrics["epoch"] = epoch
+                state.history.append(metrics)
+                log.info("[feddf] epoch %d %s", epoch, {k: round(v, 4) for k, v in metrics.items() if isinstance(v, float)})
+        return state
+    if driver != "legacy":
+        raise ValueError(f"unknown driver {driver!r}")
+
     distill_step, srv_opt = make_distill_step(
         logits_all_fn, server_apply, dataclasses.replace(cfg, use_dhs=False)
     )
     srv_opt_state = srv_opt.init(server_params)
     state = OFLState(server_params, None, w, [], [], [])
-    nb = val_x.shape[0] // cfg.batch_size
     step_idx = 0
     for epoch in range(cfg.epochs):
         key, k3 = jax.random.split(key)

@@ -1,0 +1,88 @@
+"""Device-resident replay ring buffer over synthetic batches (D_S).
+
+The legacy drivers keep D_S as a python list of device arrays and evict with
+``list.pop(0)`` — every buffer access crosses the host/device boundary and
+forces one dispatch per batch. Here D_S is a fixed-shape ``(capacity, B, …)``
+ring that lives on device and is a pytree, so it can be carried through (and
+donated to) a single jitted epoch program:
+
+  * ``buffer_append`` writes the new batch at ``ptr`` via
+    ``lax.dynamic_update_slice_in_dim`` and advances ``ptr``/``size`` —
+    once full, the oldest batch is overwritten, which is exactly the
+    ``append`` + ``pop(0)`` window semantics of the legacy list.
+  * during warm-up (``size < capacity``) the unwritten slots hold zeros;
+    consumers mask them out via ``size`` (see the fused distillation scan in
+    :mod:`repro.core.epoch`).
+  * logical order is oldest-first, matching list indexing:
+    logical index ``i`` lives at physical slot ``(ptr - size + i) % capacity``.
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ReplayBuffer(NamedTuple):
+    """Fixed-shape on-device ring buffer. ``x``: (capacity, B, *obs);
+    ``y``: (capacity, B); ``ptr``: next write slot; ``size``: valid slots."""
+
+    x: jax.Array
+    y: jax.Array
+    ptr: jax.Array
+    size: jax.Array
+
+    @property
+    def capacity(self) -> int:
+        return self.x.shape[0]
+
+
+def buffer_init(
+    capacity: int,
+    batch_shape: Sequence[int],
+    x_dtype=jnp.float32,
+    y_dtype=jnp.int32,
+) -> ReplayBuffer:
+    """Preallocate a ring over ``capacity`` batches of shape ``(B, *obs)``."""
+    batch_shape = tuple(batch_shape)
+    return ReplayBuffer(
+        x=jnp.zeros((capacity, *batch_shape), x_dtype),
+        y=jnp.zeros((capacity, batch_shape[0]), y_dtype),
+        ptr=jnp.zeros((), jnp.int32),
+        size=jnp.zeros((), jnp.int32),
+    )
+
+
+def buffer_append(buf: ReplayBuffer, x: jax.Array, y: jax.Array) -> ReplayBuffer:
+    """Insert one batch, evicting the oldest once full. Traceable (the write
+    position is a device scalar)."""
+    cap = buf.capacity
+    return ReplayBuffer(
+        x=jax.lax.dynamic_update_slice_in_dim(buf.x, x[None].astype(buf.x.dtype), buf.ptr, 0),
+        y=jax.lax.dynamic_update_slice_in_dim(buf.y, y[None].astype(buf.y.dtype), buf.ptr, 0),
+        ptr=(buf.ptr + 1) % cap,
+        size=jnp.minimum(buf.size + 1, cap),
+    )
+
+
+def buffer_get(buf: ReplayBuffer, slot) -> Tuple[jax.Array, jax.Array]:
+    """Read one physical slot (traced index OK)."""
+    return (
+        jax.lax.dynamic_index_in_dim(buf.x, slot, 0, keepdims=False),
+        jax.lax.dynamic_index_in_dim(buf.y, slot, 0, keepdims=False),
+    )
+
+
+def logical_to_slot(i, ptr, size, capacity: int):
+    """Physical slot of logical (oldest-first) index ``i``. Works on ints or
+    arrays; the identity the parity tests pin down."""
+    return (ptr - size + i) % capacity
+
+
+def buffer_as_lists(buf: ReplayBuffer) -> Tuple[List[jax.Array], List[jax.Array]]:
+    """Oldest-first python lists (the legacy ``OFLState.buffer_x/y`` view).
+    Host-syncs ``ptr``/``size`` — call once at end-of-run, not per epoch."""
+    ptr, size = int(buf.ptr), int(buf.size)
+    slots = [logical_to_slot(i, ptr, size, buf.capacity) for i in range(size)]
+    return [buf.x[s] for s in slots], [buf.y[s] for s in slots]

@@ -15,7 +15,13 @@ Component toggles (``use_ghs`` / ``use_dhs`` / ``use_ee`` / ``use_adv``)
 reproduce the Table 7 ablation; with all off the loop degenerates to the
 DENSE-style base pipeline (CE-only generator, uniform ensemble).
 
-The heavy stages are each a single jitted program; the epoch loop is python.
+Two epoch drivers share this module's loss machinery:
+
+  * ``driver="fused"`` (default) — the whole epoch is one jitted program
+    over the device-resident ring buffer (:mod:`repro.core.epoch`): O(1)
+    dispatches per epoch, losses synced only at eval boundaries.
+  * ``driver="legacy"`` — the original python loop, one jitted program per
+    stage and per replay batch; kept as the parity/benchmark baseline.
 """
 from __future__ import annotations
 
@@ -28,7 +34,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config.train import OFLConfig, TrainConfig
+from repro.core.buffer import ReplayBuffer, buffer_as_lists, buffer_init
 from repro.core.ensemble import ensemble_logits, make_logits_all, uniform_weights
+from repro.core.epoch import _sample_zy, distill_schedule, make_coboost_epoch
 from repro.core.hard_samples import diversify
 from repro.core.hardness import generator_loss
 from repro.core.losses import kl_loss
@@ -51,13 +59,16 @@ class OFLState:
     buffer_x: List[jax.Array]
     buffer_y: List[jax.Array]
     history: List[Dict[str, float]]
+    buffer: Optional[ReplayBuffer] = None
+    dispatch_count: int = 0  # fused-driver epoch_step calls (O(1)/epoch)
 
 
-def _sample_zy(key, batch: int, latent: int, num_classes: int):
-    kz, ky = jax.random.split(key)
-    z = jax.random.normal(kz, (batch, latent))
-    y = jax.random.randint(ky, (batch,), 0, num_classes)
-    return z, y
+def init_synth_buffer(gen_apply: Callable, gen_params: Any, cfg: OFLConfig) -> ReplayBuffer:
+    """Preallocate the ring from the generator's output spec (no forward)."""
+    z = jax.ShapeDtypeStruct((cfg.batch_size, cfg.latent_dim), jnp.float32)
+    y = jax.ShapeDtypeStruct((cfg.batch_size,), jnp.int32)
+    xs = jax.eval_shape(gen_apply, gen_params, z, y)
+    return buffer_init(cfg.buffer_batches, xs.shape, xs.dtype)
 
 
 def make_generator_phase(
@@ -156,12 +167,54 @@ def run_coboosting(
     eval_fn: Optional[Callable] = None,
     eval_every: int = 50,
     init_weights: Optional[jax.Array] = None,
+    driver: str = "fused",
 ) -> OFLState:
     """Algorithm 1. ``eval_fn(server_params, w) -> dict`` is called every
-    ``eval_every`` epochs for history logging."""
+    ``eval_every`` epochs for history logging. ``driver`` selects the fused
+    single-dispatch epoch program or the legacy per-batch python loop.
+
+    NOTE: on accelerator backends the fused driver donates the caller's
+    ``server_params`` / ``gen_params`` (and derived state) to the epoch
+    program — they are invalidated after the first epoch; copy them first if
+    you need them again (e.g. for a legacy A/B run from the same init)."""
     n = len(client_applies)
     logits_all_fn = make_logits_all(client_applies)
     client_params = tuple(client_params)
+    w = uniform_weights(n) if init_weights is None else init_weights
+
+    if driver == "fused":
+        epoch_step, gen_opt, srv_opt = make_coboost_epoch(
+            logits_all_fn, server_apply, gen_apply, cfg, n, num_classes
+        )
+        gen_opt_state = gen_opt.init(gen_params)
+        srv_opt_state = srv_opt.init(server_params)
+        buf = init_synth_buffer(gen_apply, gen_params, cfg)
+        state = OFLState(server_params, gen_params, w, [], [], [])
+        srv_steps = jnp.zeros((), jnp.int32)
+        for epoch in range(cfg.epochs):
+            slot_order, n_valid = distill_schedule(epoch, cfg.buffer_batches)
+            (
+                state.server_params, srv_opt_state, state.gen_params, gen_opt_state,
+                state.weights, buf, key, srv_steps, gloss, dmean,
+            ) = epoch_step(
+                state.server_params, srv_opt_state, state.gen_params, gen_opt_state,
+                state.weights, buf, key, srv_steps, slot_order, n_valid, client_params,
+            )
+            state.dispatch_count += 1
+            if eval_fn is not None and ((epoch + 1) % eval_every == 0 or epoch == cfg.epochs - 1):
+                metrics = eval_fn(state.server_params, state.weights)
+                metrics.update(epoch=epoch, gen_loss=float(gloss), distill_loss=float(dmean))
+                state.history.append(metrics)
+                log.info(
+                    "epoch %d gen=%.4f distill=%.4f %s",
+                    epoch, float(gloss), float(dmean),
+                    {k: round(v, 4) for k, v in metrics.items() if isinstance(v, float)},
+                )
+        state.buffer = buf
+        state.buffer_x, state.buffer_y = buffer_as_lists(buf)
+        return state
+    if driver != "legacy":
+        raise ValueError(f"unknown driver {driver!r}")
 
     gen_phase, gen_opt = make_generator_phase(logits_all_fn, server_apply, gen_apply, cfg)
     distill_step, srv_opt = make_distill_step(logits_all_fn, server_apply, cfg)
@@ -169,7 +222,6 @@ def run_coboosting(
 
     gen_opt_state = gen_opt.init(gen_params)
     srv_opt_state = srv_opt.init(server_params)
-    w = uniform_weights(n) if init_weights is None else init_weights
 
     state = OFLState(server_params, gen_params, w, [], [], [])
     srv_step_idx = 0
@@ -205,19 +257,18 @@ def run_coboosting(
                 jnp.asarray(srv_step_idx, jnp.int32),
             )
             srv_step_idx += 1
-            dlosses.append(float(dl))
+            dlosses.append(dl)  # device scalar — no per-batch host sync
 
         if eval_fn is not None and ((epoch + 1) % eval_every == 0 or epoch == cfg.epochs - 1):
+            dmean = float(np.mean(jax.device_get(dlosses)))
             metrics = eval_fn(state.server_params, state.weights)
-            metrics.update(
-                epoch=epoch, gen_loss=float(gloss), distill_loss=float(np.mean(dlosses))
-            )
+            metrics.update(epoch=epoch, gen_loss=float(gloss), distill_loss=dmean)
             state.history.append(metrics)
             log.info(
                 "epoch %d gen=%.4f distill=%.4f %s",
                 epoch,
                 float(gloss),
-                float(np.mean(dlosses)),
+                dmean,
                 {k: round(v, 4) for k, v in metrics.items() if isinstance(v, float)},
             )
     return state

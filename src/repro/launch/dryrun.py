@@ -48,9 +48,9 @@ def _parse_value(v: str):
 def _custom_mesh(spec: str):
     dims = tuple(int(d) for d in spec.split("x"))
     axes = {2: ("data", "model"), 3: ("pod", "data", "model")}[len(dims)]
-    from jax.sharding import AxisType
+    from repro.launch.mesh import compat_make_mesh
 
-    return jax.make_mesh(dims, axes, axis_types=(AxisType.Auto,) * len(dims))
+    return compat_make_mesh(dims, axes)
 
 
 def dryrun_one(

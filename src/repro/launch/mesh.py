@@ -8,7 +8,18 @@ tests must keep seeing one device.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit axis types
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - older pinned jax
+    AxisType = None
+
+
+def compat_make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -17,9 +28,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     boundary)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """A 1×1 mesh over the single real device (tests / examples)."""
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    return compat_make_mesh((1, 1), ("data", "model"))

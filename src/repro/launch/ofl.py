@@ -51,8 +51,11 @@ def run_method(
     server_arch: str,
     seed: int,
     eval_every: int = 50,
+    driver: str = "fused",
 ):
-    """Dispatch one OFL method; returns {'server_acc':…, 'ensemble_acc':…}."""
+    """Dispatch one OFL method; returns {'server_acc':…, 'ensemble_acc':…}.
+    ``driver`` selects the fused single-dispatch epoch engine (default) or
+    the legacy per-batch loop for every distillation-based method."""
     server_apply = partial(cnn_apply, server_arch)
     server_params = init_cnn(jax.random.key(seed + 77), server_arch, num_classes, image_shape)
     eval_fn = market_eval_fn(applies, params, server_apply, test_x, test_y)
@@ -64,25 +67,29 @@ def run_method(
     if method == "fedens":
         return eval_fn(server_params, uniform_weights(len(params)))
     if method == "feddf":
-        st = run_feddf(applies, params, server_apply, server_params, train_x, cfg, key, eval_fn, eval_every)
+        st = run_feddf(
+            applies, params, server_apply, server_params, train_x, cfg, key,
+            eval_fn, eval_every, driver=driver,
+        )
         return st.history[-1]
     if method == "f_adi":
         st = run_adi_baseline(
-            applies, params, server_apply, server_params, image_shape, cfg, num_classes, key, eval_fn, eval_every
+            applies, params, server_apply, server_params, image_shape, cfg, num_classes, key,
+            eval_fn, eval_every, driver=driver,
         )
         return st.history[-1]
     if method in ("dense", "f_dafl"):
         gen_apply, gen_params = default_image_setup(jax.random.key(seed + 5), cfg, num_classes, image_shape)
         st = run_generator_baseline(
             method, applies, params, server_apply, server_params, gen_apply, gen_params,
-            cfg, num_classes, key, eval_fn, eval_every,
+            cfg, num_classes, key, eval_fn, eval_every, driver=driver,
         )
         return st.history[-1]
     # coboosting (+ ablations via component flags on cfg)
     gen_apply, gen_params = default_image_setup(jax.random.key(seed + 5), cfg, num_classes, image_shape)
     st = run_coboosting(
         applies, params, server_apply, server_params, gen_apply, gen_params,
-        cfg, num_classes, key, eval_fn, eval_every,
+        cfg, num_classes, key, eval_fn, eval_every, driver=driver,
     )
     return st.history[-1]
 
@@ -104,6 +111,8 @@ def main() -> None:
     p.add_argument("--local-epochs", type=int, default=15)
     p.add_argument("--client-archs", default="", help="comma list (heterogeneous market)")
     p.add_argument("--server-arch", default="cnn5")
+    p.add_argument("--driver", default="fused", choices=("fused", "legacy"),
+                   help="epoch engine: fused scan (O(1) dispatch) or legacy per-batch loop")
     p.add_argument("--no-ghs", action="store_true")
     p.add_argument("--no-dhs", action="store_true")
     p.add_argument("--no-ee", action="store_true")
@@ -138,6 +147,7 @@ def main() -> None:
     result = run_method(
         args.method, cfg, args.classes, shape, applies, params, sizes,
         x, test_x, test_y, args.server_arch, args.seed, eval_every=max(args.epochs // 3, 1),
+        driver=args.driver,
     )
     result = {k: v for k, v in result.items() if isinstance(v, (int, float))}
     log.info("[%s] %s", args.method, result)

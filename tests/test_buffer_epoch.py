@@ -1,0 +1,165 @@
+"""Device ring buffer + fused scan epoch driver: parity with the legacy
+python-loop semantics.
+
+Pins the tentpole contracts:
+  * ring wraparound/eviction reproduces the legacy ``append`` + ``pop(0)``
+    list window at ``buffer_batches`` capacity;
+  * ``distill_schedule`` replays the legacy host-side batch permutation,
+    mapped to physical slots (valid-first so the PRNG split chain aligns);
+  * a fused epoch produces numerically equivalent server params to the
+    legacy per-batch loop on a tiny CNN config (same PRNG stream), for
+    Co-Boosting and the DENSE baseline;
+  * one epoch is O(1) jitted dispatches, independent of buffer size.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.train import OFLConfig
+from repro.core import (
+    buffer_append,
+    buffer_as_lists,
+    buffer_init,
+    default_image_setup,
+    distill_schedule,
+    logical_to_slot,
+    run_coboosting,
+    run_generator_baseline,
+)
+from repro.data import make_synth_images
+from repro.fed import build_market
+from repro.models.cnn import cnn_apply, init_cnn
+
+pytestmark = pytest.mark.tier1
+
+CLASSES = 4
+SHAPE = (8, 8, 3)
+
+
+# ---------------------------------------------------------------------------
+# ring buffer semantics
+
+
+@pytest.mark.parametrize("capacity", [1, 3, 4])
+def test_ring_matches_list_window(capacity):
+    """Appends through several wraparounds equal the legacy list's
+    append+pop(0) window, oldest-first."""
+    b, obs = 2, (3,)
+    buf = buffer_init(capacity, (b, *obs))
+    ref_x, ref_y = [], []
+    for t in range(3 * capacity + 1):
+        x = jnp.full((b, *obs), float(t))
+        y = jnp.full((b,), t, jnp.int32)
+        buf = buffer_append(buf, x, y)
+        ref_x.append(x)
+        ref_y.append(y)
+        if len(ref_x) > capacity:
+            ref_x.pop(0)
+            ref_y.pop(0)
+        got_x, got_y = buffer_as_lists(buf)
+        assert len(got_x) == len(ref_x) == min(t + 1, capacity)
+        for gx, rx, gy, ry in zip(got_x, ref_x, got_y, ref_y):
+            np.testing.assert_array_equal(np.asarray(gx), np.asarray(rx))
+            np.testing.assert_array_equal(np.asarray(gy), np.asarray(ry))
+
+
+def test_buffer_append_traceable_under_jit():
+    buf = buffer_init(3, (2, 4))
+    step = jax.jit(buffer_append)
+    for t in range(5):
+        buf = step(buf, jnp.full((2, 4), float(t)), jnp.full((2,), t, jnp.int32))
+    assert int(buf.size) == 3 and int(buf.ptr) == 5 % 3
+    xs, ys = buffer_as_lists(buf)
+    assert [int(y[0]) for y in ys] == [2, 3, 4]
+
+
+def test_distill_schedule_replays_legacy_permutation():
+    """slot_order[:size] must visit the same batches, in the same order, as
+    the legacy ``RandomState(epoch).permutation(len(buffer))`` over the
+    oldest-first list."""
+    capacity = 4
+    for epoch in range(11):
+        size = min(epoch + 1, capacity)
+        ptr = (epoch + 1) % capacity
+        order, n_valid = distill_schedule(epoch, capacity)
+        assert int(n_valid) == size
+        perm = np.random.RandomState(epoch).permutation(size)
+        want = [int(logical_to_slot(i, ptr, size, capacity)) for i in perm]
+        assert list(np.asarray(order)[:size]) == want
+
+
+# ---------------------------------------------------------------------------
+# fused epoch ≡ legacy loop
+
+
+@pytest.fixture(scope="module")
+def tiny_market():
+    cfg = OFLConfig(
+        num_clients=2, local_epochs=2, local_batch_size=16,
+        epochs=7, gen_iters=3, batch_size=8, latent_dim=8, buffer_batches=3,
+    )
+    x, y = make_synth_images(0, CLASSES, 30, SHAPE)
+    applies, params, _, _ = build_market(0, x, y, cfg, CLASSES, archs=["mlp", "mlp"])
+    return cfg, applies, params
+
+
+def _max_diff(a, b):
+    return max(
+        float(jnp.max(jnp.abs(u.astype(jnp.float32) - v.astype(jnp.float32))))
+        for u, v in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
+    )
+
+
+def _run(driver, cfg, applies, params, method="coboosting"):
+    server_apply = partial(cnn_apply, "mlp")
+    server_params = init_cnn(jax.random.key(99), "mlp", CLASSES, SHAPE)
+    gen_apply, gen_params = default_image_setup(jax.random.key(5), cfg, CLASSES, SHAPE)
+    if method == "coboosting":
+        return run_coboosting(
+            applies, params, server_apply, server_params, gen_apply, gen_params,
+            cfg, CLASSES, jax.random.key(0), driver=driver,
+        )
+    return run_generator_baseline(
+        method, applies, params, server_apply, server_params, gen_apply, gen_params,
+        cfg, CLASSES, jax.random.key(0), driver=driver,
+    )
+
+
+def test_fused_epoch_matches_legacy_coboosting(tiny_market):
+    cfg, applies, params = tiny_market
+    fused = _run("fused", cfg, applies, params)
+    legacy = _run("legacy", cfg, applies, params)
+    # same PRNG stream + same batch order => same trajectory, up to float
+    # reassociation between the fused scan and the per-batch dispatches
+    assert _max_diff(fused.server_params, legacy.server_params) < 1e-4
+    np.testing.assert_allclose(
+        np.asarray(fused.weights), np.asarray(legacy.weights), atol=1e-5
+    )
+    assert len(fused.buffer_x) == len(legacy.buffer_x) == cfg.buffer_batches
+    for fx, lx in zip(fused.buffer_x, legacy.buffer_x):
+        np.testing.assert_allclose(np.asarray(fx), np.asarray(lx), atol=1e-4)
+
+
+def test_fused_epoch_matches_legacy_dense(tiny_market):
+    cfg, applies, params = tiny_market
+    fused = _run("fused", cfg, applies, params, method="dense")
+    legacy = _run("legacy", cfg, applies, params, method="dense")
+    assert _max_diff(fused.server_params, legacy.server_params) < 1e-4
+
+
+def test_fused_driver_dispatches_constant_in_buffer_size(tiny_market):
+    """O(1) dispatches per epoch: the epoch_step call count equals the epoch
+    count whatever the buffer capacity (the legacy loop's per-epoch dispatch
+    count grows with the buffer instead)."""
+    cfg, applies, params = tiny_market
+    counts = {}
+    for cap in (2, 5):
+        scaled = dataclasses.replace(cfg, buffer_batches=cap, epochs=6)
+        counts[cap] = _run("fused", scaled, applies, params).dispatch_count
+    assert counts[2] == counts[5] == 6

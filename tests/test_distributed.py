@@ -59,13 +59,18 @@ def test_dhs_embeds_eps_norm():
 
 def test_ee_update_lm_simplex():
     stacked = _clients(3)
-    batch = {"embeds": jax.random.normal(jax.random.key(0), (4, 6, CFG.d_model)) * 0.02}
-    labels = jax.random.randint(jax.random.key(1), (4,), 0, CFG.vocab_size)
     w = jnp.full((3,), 1 / 3)
-    w2 = ee_update_lm(w, stacked, CFG, batch, labels, mu=0.05)
-    w2 = np.asarray(w2)
-    assert np.all(w2 >= 0) and abs(w2.sum() - 1) < 1e-5
-    assert not np.allclose(w2, 1 / 3)
+    moved = False
+    # when every per-client gradient shares a sign, the sign step renormalizes
+    # back to uniform — a valid fixed point that depends on the PRNG draw, so
+    # probe a few batches and require at least one to move the weights
+    for seed in range(5):
+        batch = {"embeds": jax.random.normal(jax.random.key(2 * seed), (4, 6, CFG.d_model)) * 0.02}
+        labels = jax.random.randint(jax.random.key(2 * seed + 1), (4,), 0, CFG.vocab_size)
+        w2 = np.asarray(ee_update_lm(w, stacked, CFG, batch, labels, mu=0.05))
+        assert np.all(w2 >= 0) and abs(w2.sum() - 1) < 1e-5
+        moved = moved or not np.allclose(w2, 1 / 3)
+    assert moved
 
 
 def test_distill_step_reduces_kd_loss():

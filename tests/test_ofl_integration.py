@@ -26,6 +26,10 @@ from repro.data import make_synth_images
 from repro.fed import build_market, evaluate_cnn, market_eval_fn
 from repro.models.cnn import cnn_apply, init_cnn
 
+# full pipeline at miniature scale — minutes of wall time, so excluded from
+# the default tier-1 lane (run with `pytest -m ""` or `-m slow`)
+pytestmark = pytest.mark.slow
+
 CLASSES = 5
 SHAPE = (16, 16, 3)
 
