@@ -161,48 +161,61 @@ def pair_coboost(out):
     )
 
 
-def pair_epochdrv(out):
-    """Epoch-driver hillclimb (the device-resident buffer PR's headline
-    number): Co-Boosting epochs/sec, fused single-dispatch scan engine vs
-    the legacy per-batch dispatch loop, on a miniature live market. Timed as
-    the difference of two run lengths so compile + market setup cancel."""
+def _coboost_ab(arms, cfg, classes, shape, short, long):
+    """Shared live-market Co-Boosting A/B harness: each arm is
+    ``(name, cfg_overrides, run_kwargs)``, timed as the difference of a long
+    and a short run so compile + market setup cancel. Returns the epochs/sec
+    record plus each arm's final server params (for parity checks)."""
     import dataclasses
     from functools import partial
 
     import jax
 
-    from repro.config.train import OFLConfig
     from repro.core import default_image_setup, run_coboosting
     from repro.data import make_synth_images
     from repro.fed import build_market
     from repro.models.cnn import cnn_apply, init_cnn
 
-    classes, shape = 4, (8, 8, 3)
-    short, long = 4, 16
-    cfg = OFLConfig(
-        num_clients=3, local_epochs=2, local_batch_size=16,
-        epochs=long, gen_iters=4, batch_size=16, latent_dim=8, buffer_batches=6,
-    )
     x, y = make_synth_images(0, classes, 40, shape)
-    applies, params, _, _ = build_market(0, x, y, cfg, classes, archs=["mlp"] * 3)
+    applies, params, _, _ = build_market(0, x, y, cfg, classes, archs=["mlp"] * cfg.num_clients)
     server_apply = partial(cnn_apply, "mlp")
 
-    def run(driver, epochs):
-        c = dataclasses.replace(cfg, epochs=epochs)
+    def run(cfg_overrides, run_kwargs, epochs):
+        c = dataclasses.replace(cfg, epochs=epochs, **cfg_overrides)
         sp = init_cnn(jax.random.key(99), "mlp", classes, shape)
         gen_apply, gp = default_image_setup(jax.random.key(5), c, classes, shape)
         t0 = time.time()
         st = run_coboosting(
             applies, params, server_apply, sp, gen_apply, gp, c, classes,
-            jax.random.key(0), driver=driver,
+            jax.random.key(0), **run_kwargs,
         )
         jax.block_until_ready(st.server_params)
-        return time.time() - t0
+        return time.time() - t0, st
 
-    rec = {"status": "ok", "epochs": long - short, "buffer_batches": cfg.buffer_batches}
-    for driver in ("legacy", "fused"):
-        dt = run(driver, long) - run(driver, short)
-        rec[f"{driver}_epochs_per_sec"] = round((long - short) / max(dt, 1e-9), 3)
+    rec, finals = {"status": "ok", "epochs": long - short}, {}
+    for name, cfg_overrides, run_kwargs in arms:
+        dt_long, st = run(cfg_overrides, run_kwargs, long)
+        dt_short, _ = run(cfg_overrides, run_kwargs, short)
+        finals[name] = st.server_params
+        rec[f"{name}_epochs_per_sec"] = round((long - short) / max(dt_long - dt_short, 1e-9), 3)
+    return rec, finals
+
+
+def pair_epochdrv(out):
+    """Epoch-driver hillclimb (the device-resident buffer PR's headline
+    number): Co-Boosting epochs/sec, fused single-dispatch scan engine vs
+    the legacy per-batch dispatch loop, on a miniature live market."""
+    from repro.config.train import OFLConfig
+
+    cfg = OFLConfig(
+        num_clients=3, local_epochs=2, local_batch_size=16,
+        gen_iters=4, batch_size=16, latent_dim=8, buffer_batches=6,
+    )
+    rec, _ = _coboost_ab(
+        [("legacy", {}, {"driver": "legacy"}), ("fused", {}, {"driver": "fused"})],
+        cfg, classes=4, shape=(8, 8, 3), short=4, long=16,
+    )
+    rec["buffer_batches"] = cfg.buffer_batches
     rec["speedup"] = round(rec["fused_epochs_per_sec"] / rec["legacy_epochs_per_sec"], 3)
     log.info(
         "epochdrv: fused=%.2f ep/s legacy=%.2f ep/s speedup=%.2fx (buffer=%d)",
@@ -212,11 +225,57 @@ def pair_epochdrv(out):
     out["epochdrv:fused_vs_legacy"] = rec
 
 
+def pair_kernelpath(out):
+    """Kernel-vs-ref loss path A/B under the fused epoch engine: Co-Boosting
+    with the Eq. 4/Eq. 6 losses routed through the differentiable Pallas
+    kernels (compiled on TPU, interpreter elsewhere) vs the pure-jnp ref
+    composition, same PRNG stream. Reports epochs/sec for both arms plus the
+    final-server-params parity gap. Off-TPU the interpreter arm is expected
+    to be much slower — the number that matters there is the parity gap; the
+    speed story is the TPU run."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.config.train import OFLConfig
+    from repro.kernels import kernel_arm
+
+    arm = kernel_arm()
+    cfg = OFLConfig(
+        num_clients=3, local_epochs=2, local_batch_size=16,
+        gen_iters=3, batch_size=16, latent_dim=8, buffer_batches=4,
+    )
+    rec, finals = _coboost_ab(
+        [("ref", {"kernel_backend": "ref"}, {}), ("kernel", {"kernel_backend": arm}, {})],
+        cfg, classes=4, shape=(8, 8, 3), short=2, long=6,
+    )
+    rec["kernel_arm"] = arm
+    rec["jax_backend"] = jax.default_backend()
+    rec["kernel_vs_ref_speedup"] = round(
+        rec["kernel_epochs_per_sec"] / rec["ref_epochs_per_sec"], 3
+    )
+    rec["server_params_max_diff"] = float(
+        max(
+            jnp.max(jnp.abs(u.astype(jnp.float32) - v.astype(jnp.float32)))
+            for u, v in zip(
+                jax.tree_util.tree_leaves(finals["ref"]),
+                jax.tree_util.tree_leaves(finals["kernel"]),
+            )
+        )
+    )
+    log.info(
+        "kernelpath: kernel(%s)=%.2f ep/s ref=%.2f ep/s speedup=%.2fx parity=%.2e",
+        arm, rec["kernel_epochs_per_sec"], rec["ref_epochs_per_sec"],
+        rec["kernel_vs_ref_speedup"], rec["server_params_max_diff"],
+    )
+    out["kernelpath:kernel_vs_ref"] = rec
+
+
 PAIRS = {
     "qwen3moe": pair_qwen3moe,
     "mixtral": pair_mixtral,
     "coboost": pair_coboost,
     "epochdrv": pair_epochdrv,
+    "kernelpath": pair_kernelpath,
 }
 
 

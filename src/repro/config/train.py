@@ -66,4 +66,9 @@ class OFLConfig:
     use_ee: bool = True  # ensemble enhancement (Eq. 12)
     use_adv: bool = True  # adversarial term (Eq. 7); part of GHS in ablations
 
+    # fused-loss kernel backend for the Eq. 4/Eq. 6 hot path in the fused
+    # epoch engine: "auto" (pallas on TPU, jnp ref elsewhere) | "pallas" |
+    # "pallas-interpret" (debug/parity) | "ref" — see repro.kernels.dispatch
+    kernel_backend: str = "auto"
+
     seed: int = 0

@@ -13,7 +13,10 @@
 All reuse the distillation machinery of :mod:`repro.core.coboosting`; the
 only differences are the synthesis objective and the fixed uniform weights,
 which is exactly the contrast the paper draws (no co-boosting of data and
-ensemble).
+ensemble). Under ``driver="fused"`` every distillation sweep here (DENSE,
+F-DAFL, F-ADI, FedDF) runs the Eq. 4 loss through the ``cfg.kernel_backend``
+kernel path of :func:`repro.core.epoch.make_kd_loss`; the legacy loops stay
+pure jnp as the parity baseline.
 """
 from __future__ import annotations
 

@@ -19,9 +19,12 @@ Two epoch drivers share this module's loss machinery:
 
   * ``driver="fused"`` (default) — the whole epoch is one jitted program
     over the device-resident ring buffer (:mod:`repro.core.epoch`): O(1)
-    dispatches per epoch, losses synced only at eval boundaries.
+    dispatches per epoch, losses synced only at eval boundaries. Its Eq. 4 /
+    Eq. 6 losses follow ``cfg.kernel_backend`` (the fused differentiable
+    Pallas kernels on TPU, the jnp composition elsewhere).
   * ``driver="legacy"`` — the original python loop, one jitted program per
-    stage and per replay batch; kept as the parity/benchmark baseline.
+    stage and per replay batch; kept as the pure-jnp parity/benchmark
+    baseline (it never routes through the Pallas kernels).
 """
 from __future__ import annotations
 
@@ -171,7 +174,9 @@ def run_coboosting(
 ) -> OFLState:
     """Algorithm 1. ``eval_fn(server_params, w) -> dict`` is called every
     ``eval_every`` epochs for history logging. ``driver`` selects the fused
-    single-dispatch epoch program or the legacy per-batch python loop.
+    single-dispatch epoch program (whose distillation/generator losses run
+    the ``cfg.kernel_backend`` kernel path) or the legacy per-batch python
+    loop (always pure jnp — the parity baseline).
 
     NOTE: on accelerator backends the fused driver donates the caller's
     ``server_params`` / ``gen_params`` (and derived state) to the epoch

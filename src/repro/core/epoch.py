@@ -24,6 +24,12 @@ Parity contract with the legacy loops (pinned by tests/test_buffer_epoch.py):
 
 Server/optimizer/buffer state is donated back to the program on accelerator
 backends (donation is a no-op on CPU, so we skip it there to avoid warnings).
+
+The Eq. 4 / Eq. 6 losses inside these programs route through the
+differentiable fused Pallas kernels (:mod:`repro.kernels`) according to
+``cfg.kernel_backend`` — "auto" runs the compiled kernels on TPU and the
+pure-jnp composition elsewhere (see :mod:`repro.kernels.dispatch`), so the
+CPU parity contract with the legacy loops below is preserved bit-for-bit.
 """
 from __future__ import annotations
 
@@ -41,6 +47,7 @@ from repro.core.hard_samples import diversify
 from repro.core.hardness import generator_loss
 from repro.core.losses import kl_loss
 from repro.core.weight_search import update_weights
+from repro.kernels import ensemble_kl, ghm_ce, resolve_backend
 from repro.optim import adam, constant_schedule, sgdm
 from repro.optim.optimizers import apply_updates
 
@@ -74,12 +81,32 @@ def _masked_update(valid, old, new):
     return jax.tree_util.tree_map(lambda a, b: jnp.where(valid, b, a), old, new)
 
 
-def make_kd_loss(logits_all_fn: Callable, server_apply: Callable, temperature: float):
-    """Eq. 4: temperature-KL between the re-weighted ensemble and the server."""
+def make_kd_loss(
+    logits_all_fn: Callable,
+    server_apply: Callable,
+    temperature: float,
+    kernel_backend: str = "auto",
+):
+    """Eq. 4: temperature-KL between the re-weighted ensemble and the server.
 
-    def loss_fn(server_params, x, client_params, w):
-        ens = ensemble_logits(logits_all_fn(client_params, x), w)
-        return kl_loss(ens, server_apply(server_params, x), temperature)
+    ``kernel_backend`` (resolved once, at make time) routes the loss through
+    the differentiable fused :func:`repro.kernels.ensemble_kl` kernel — the
+    Pallas paths never materialize A_w in the forward pass — or through the
+    legacy jnp composition (``"ref"``; the auto choice off-TPU)."""
+    backend = resolve_backend(kernel_backend)
+
+    if backend == "ref":
+
+        def loss_fn(server_params, x, client_params, w):
+            ens = ensemble_logits(logits_all_fn(client_params, x), w)
+            return kl_loss(ens, server_apply(server_params, x), temperature)
+
+    else:
+
+        def loss_fn(server_params, x, client_params, w):
+            la = logits_all_fn(client_params, x)
+            s_logits = server_apply(server_params, x)
+            return jnp.mean(ensemble_kl(la, s_logits, w, temperature=temperature, backend=backend))
 
     return loss_fn
 
@@ -93,7 +120,7 @@ def make_distill_sweep(
 ):
     """The fused replacement for the per-batch ``distill_step`` loop: one
     ``lax.scan`` over ring slots, masked while the buffer warms up."""
-    loss_fn = make_kd_loss(logits_all_fn, server_apply, cfg.kd_temperature)
+    loss_fn = make_kd_loss(logits_all_fn, server_apply, cfg.kd_temperature, cfg.kernel_backend)
 
     def sweep(server_params, srv_opt_state, buf, k3, w, client_params, slot_order, n_valid, srv_step0):
         def body(carry, xs):
@@ -170,21 +197,36 @@ def make_coboost_epoch(
     # any EE variant needs the 4th key so k2 never aliases the distill chain
     nsplit = 4 if (gen_objective is None or use_ee) else 3
 
+    backend = resolve_backend(cfg.kernel_backend)
+
     def gen_loss_fn(gp, z, y, client_params, w, server_params):
         x = gen_apply(gp, z, y)
-        ens = ensemble_logits(logits_all_fn(client_params, x), w)
+        la = logits_all_fn(client_params, x)
         if gen_objective is not None:
-            return gen_objective(ens, y, x)
-        s_logits = server_apply(server_params, x)
-        return generator_loss(
-            ens,
-            s_logits,
-            y,
-            beta=cfg.beta,
-            use_ghs=cfg.use_ghs,
-            use_adv=cfg.use_adv,
-            kl_temperature=cfg.gen_kl_temperature,
+            return gen_objective(ensemble_logits(la, w), y, x)
+        if backend == "ref":
+            s_logits = server_apply(server_params, x)
+            return generator_loss(
+                ensemble_logits(la, w),
+                s_logits,
+                y,
+                beta=cfg.beta,
+                use_ghs=cfg.use_ghs,
+                use_adv=cfg.use_adv,
+                kl_temperature=cfg.gen_kl_temperature,
+            )
+        # kernel path for Eq. 8: L_H via the fused GHM-CE (difficulty is
+        # stop-gradiented, matching ghs_loss) + β·L_A via the fused KL, both
+        # without materializing A_w in the forward pass
+        loss = jnp.mean(
+            ghm_ce(la, y, w, weighted=cfg.use_ghs, backend=backend, stop_difficulty_grad=True)
         )
+        if cfg.use_adv:
+            s_logits = server_apply(server_params, x)
+            loss = loss - cfg.beta * jnp.mean(
+                ensemble_kl(la, s_logits, w, temperature=cfg.gen_kl_temperature, backend=backend)
+            )
+        return loss
 
     sweep = make_distill_sweep(logits_all_fn, server_apply, srv_opt, cfg, distill_dhs)
 
@@ -270,7 +312,7 @@ def make_feddf_epoch(logits_all_fn: Callable, server_apply: Callable, cfg: OFLCo
     """FedDF fused epoch: one scan over the (pre-stacked, fixed-size) real
     validation batches in a host-supplied permutation — no buffer, no mask."""
     srv_opt = sgdm(constant_schedule(cfg.server_lr), momentum=0.9)
-    loss_fn = make_kd_loss(logits_all_fn, server_apply, cfg.kd_temperature)
+    loss_fn = make_kd_loss(logits_all_fn, server_apply, cfg.kd_temperature, cfg.kernel_backend)
 
     def epoch_step(server_params, srv_opt_state, key, srv_step0, order, val_batches, w, client_params):
         key, k3 = jax.random.split(key)

@@ -71,28 +71,37 @@ def market_eval_fn(
     test_y: np.ndarray,
     batch_size: int = 512,
 ) -> Callable:
-    """Builds eval_fn(server_params, w) -> {server_acc, ensemble_acc}."""
+    """Builds eval_fn(server_params, w) -> {server_acc, ensemble_acc}.
+    ``server_params=None`` skips the server forward entirely and returns only
+    ``ensemble_acc`` (ensemble-only methods like FedENS have no trained
+    server — evaluating a random init would be wasted work and a misleading
+    number)."""
     logits_all_fn = make_logits_all(client_applies)
     client_params = tuple(client_params)
 
     @jax.jit
-    def _batch_preds(server_params, w, xb):
+    def _ens_preds(w, xb):
         la = logits_all_fn(client_params, xb)
-        ens_pred = jnp.argmax(ensemble_logits(la, w), axis=-1)
+        return jnp.argmax(ensemble_logits(la, w), axis=-1)
+
+    @jax.jit
+    def _batch_preds(server_params, w, xb):
         srv_pred = jnp.argmax(server_apply(server_params, xb), axis=-1)
-        return ens_pred, srv_pred
+        return _ens_preds(w, xb), srv_pred
 
     def eval_fn(server_params, w) -> Dict[str, float]:
         ens_ok = srv_ok = 0
         for i in range(0, len(test_x), batch_size):
             xb = jnp.asarray(test_x[i : i + batch_size])
-            ep, sp = _batch_preds(server_params, w, xb)
-            yb = test_y[i : i + batch_size]
-            ens_ok += int((np.asarray(ep) == yb).sum())
-            srv_ok += int((np.asarray(sp) == yb).sum())
-        return {
-            "ensemble_acc": ens_ok / len(test_x),
-            "server_acc": srv_ok / len(test_x),
-        }
+            if server_params is None:
+                ep = _ens_preds(w, xb)
+            else:
+                ep, sp = _batch_preds(server_params, w, xb)
+                srv_ok += int((np.asarray(sp) == test_y[i : i + batch_size]).sum())
+            ens_ok += int((np.asarray(ep) == test_y[i : i + batch_size]).sum())
+        out = {"ensemble_acc": ens_ok / len(test_x)}
+        if server_params is not None:
+            out["server_acc"] = srv_ok / len(test_x)
+        return out
 
     return eval_fn

@@ -5,13 +5,21 @@
 * :mod:`repro.kernels.flash_attention` — blocked causal/SWA attention
 
 Each subpackage: ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
-(jit'd wrapper, interpret-mode on CPU), ``ref.py`` (pure-jnp oracle).
+(jit'd differentiable wrapper), ``ref.py`` (pure-jnp oracle).
+:mod:`repro.kernels.dispatch` maps the ``backend`` knob ("auto" | "pallas" |
+"pallas-interpret" | "ref") to a concrete implementation per JAX backend;
+``ensemble_kl`` and ``ghm_ce`` carry ``jax.custom_vjp`` rules on the Pallas
+paths so they are loss-grade (used in the fused epoch engine's hot path).
 """
+from repro.kernels.dispatch import KERNEL_BACKENDS, kernel_arm, resolve_backend
 from repro.kernels.ensemble_kl import ensemble_kl, ensemble_kl_ref
 from repro.kernels.ghm_ce import ghm_ce, ghm_ce_ref
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
 
 __all__ = [
+    "KERNEL_BACKENDS",
+    "kernel_arm",
+    "resolve_backend",
     "ensemble_kl",
     "ensemble_kl_ref",
     "ghm_ce",

@@ -1,0 +1,57 @@
+"""Kernel backend dispatch: which implementation of the fused loss kernels
+actually runs on this process' default JAX backend.
+
+Values (the ``kernel_backend`` knob on :class:`repro.config.train.OFLConfig`
+and the ``backend=`` kwarg of :func:`repro.kernels.ensemble_kl` /
+:func:`repro.kernels.ghm_ce`):
+
+* ``"auto"``             — ``"pallas"`` on TPU, ``"ref"`` everywhere else.
+                           CPU/GPU production paths must never silently run
+                           the Pallas interpreter (orders of magnitude slower
+                           than XLA on the same math), so auto never picks it.
+* ``"pallas"``           — the compiled Pallas TPU kernel. Asking for it off
+                           TPU is an error, not a silent interpret fallback.
+* ``"pallas-interpret"`` — the Pallas kernel body under the interpreter.
+                           Debug/parity lane: runs anywhere, bit-for-bit the
+                           kernel's math, slow. This is what the CPU test
+                           suite and the kernelpath A/B use.
+* ``"ref"``              — the pure-jnp oracle (XLA-fused). Differentiable by
+                           plain autodiff; the custom_vjp path is bypassed.
+
+``resolve_backend`` is evaluated at trace/make time (the choice is static in
+the jitted programs), so a resolved value never changes mid-run.
+"""
+from __future__ import annotations
+
+import jax
+
+KERNEL_BACKENDS = ("auto", "pallas", "pallas-interpret", "ref")
+
+
+def resolve_backend(backend: str | None = "auto") -> str:
+    """Map a requested backend to a concrete one ("pallas" | "pallas-interpret"
+    | "ref"), validating it against the running JAX backend."""
+    if backend is None:
+        backend = "auto"
+    if backend not in KERNEL_BACKENDS:
+        raise ValueError(
+            f"unknown kernel backend {backend!r}; expected one of {KERNEL_BACKENDS}"
+        )
+    on_tpu = jax.default_backend() == "tpu"
+    if backend == "auto":
+        return "pallas" if on_tpu else "ref"
+    if backend == "pallas" and not on_tpu:
+        raise ValueError(
+            "kernel_backend='pallas' requires a TPU backend "
+            f"(running on {jax.default_backend()!r}); use 'pallas-interpret' "
+            "for debugging or 'ref' for the XLA-fused jnp path"
+        )
+    return backend
+
+
+def kernel_arm() -> str:
+    """The kernel arm of an explicit kernel-vs-ref A/B: the compiled Pallas
+    kernel on TPU, the interpreter elsewhere. Benchmarks/tests must request
+    this explicitly — "auto" resolves to "ref" off-TPU, which would time the
+    reference against itself."""
+    return "pallas" if jax.default_backend() == "tpu" else "pallas-interpret"

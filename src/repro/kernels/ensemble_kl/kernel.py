@@ -26,10 +26,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.tiling import tile_padding
+
 NEG = -1e30
 
 
-def _kernel(w_ref, client_ref, student_ref, out_ref, mt_ref, dt_ref, nt_ref, ms_ref, ds_ref, *, temperature: float, num_vocab_tiles: int, vocab: int, block_v: int):
+def _kernel(w_ref, client_ref, student_ref, out_ref, lset_ref, lses_ref, mt_ref, dt_ref, nt_ref, ms_ref, ds_ref, *, temperature: float, num_vocab_tiles: int, vocab: int, block_v: int):
     vi = pl.program_id(1)
 
     @pl.when(vi == 0)
@@ -72,8 +74,13 @@ def _kernel(w_ref, client_ref, student_ref, out_ref, mt_ref, dt_ref, nt_ref, ms_
     @pl.when(vi == num_vocab_tiles - 1)
     def _final():
         d = dt_ref[...]
-        kl = nt_ref[...] / d - (jnp.log(d) + mt_ref[...]) + (jnp.log(ds_ref[...]) + ms_ref[...])
+        lse_t = jnp.log(d) + mt_ref[...]
+        lse_s = jnp.log(ds_ref[...]) + ms_ref[...]
+        kl = nt_ref[...] / d - lse_t + lse_s
         out_ref[...] = (kl * (temperature**2)).astype(out_ref.dtype)
+        # the online-softmax statistics double as the VJP residuals
+        lset_ref[...] = lse_t.astype(lset_ref.dtype)
+        lses_ref[...] = lse_s.astype(lses_ref.dtype)
 
 
 def ensemble_kl_pallas(
@@ -85,21 +92,26 @@ def ensemble_kl_pallas(
     block_b: int = 8,
     block_v: int = 512,
     interpret: bool = False,
-) -> jax.Array:
+    return_stats: bool = False,
+):
     """client_logits: (K, B, V); student_logits: (B, V); w: (K,).
-    Returns per-sample KL·T² of shape (B,)."""
+    Returns per-sample KL·T² of shape (B,); with ``return_stats=True`` also
+    the teacher/student logsumexp over the T-scaled logits (the VJP
+    residuals), each (B,).
+
+    Tiles never shrink below the (8, 128) VPU alignment: short batches and
+    narrow vocabs are zero-padded up to the block instead (padded rows are
+    computed on benign zeros and sliced off; the padded vocab tail is masked
+    inside the kernel)."""
     k, b, v = client_logits.shape
-    block_b = min(block_b, b)
-    block_v = min(block_v, v)
-    pb = (-b) % block_b
-    pv = (-v) % block_v
+    block_b, block_v, pb, pv = tile_padding(b, v, block_b, block_v)
     if pb or pv:
         client_logits = jnp.pad(client_logits, ((0, 0), (0, pb), (0, pv)))
         student_logits = jnp.pad(student_logits, ((0, pb), (0, pv)))
     bp, vp = b + pb, v + pv
     nb, nv = bp // block_b, vp // block_v
 
-    out = pl.pallas_call(
+    out, lse_t, lse_s = pl.pallas_call(
         functools.partial(
             _kernel,
             temperature=float(temperature),
@@ -113,9 +125,11 @@ def ensemble_kl_pallas(
             pl.BlockSpec((k, block_b, block_v), lambda bi, vi: (0, bi, vi)),
             pl.BlockSpec((block_b, block_v), lambda bi, vi: (bi, vi)),
         ],
-        out_specs=pl.BlockSpec((block_b, 1), lambda bi, vi: (bi, 0)),
-        out_shape=jax.ShapeDtypeStruct((bp, 1), jnp.float32),
+        out_specs=[pl.BlockSpec((block_b, 1), lambda bi, vi: (bi, 0))] * 3,
+        out_shape=[jax.ShapeDtypeStruct((bp, 1), jnp.float32)] * 3,
         scratch_shapes=[pltpu.VMEM((block_b, 1), jnp.float32) for _ in range(5)],
         interpret=interpret,
     )(w.astype(jnp.float32).reshape(k, 1), client_logits, student_logits)
+    if return_stats:
+        return out[:b, 0], lse_t[:b, 0], lse_s[:b, 0]
     return out[:b, 0]

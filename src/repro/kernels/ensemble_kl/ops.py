@@ -1,8 +1,21 @@
-"""Jitted public wrapper for the fused ensemble-KL kernel.
+"""Differentiable public wrapper for the fused ensemble-KL kernel.
 
-On CPU (this container) the Pallas body executes in interpret mode; on TPU
-the same BlockSpecs tile VMEM. ``use_kernel=False`` falls back to the
-pure-jnp reference (used by XLA-fusion comparison benchmarks).
+``backend`` (see :mod:`repro.kernels.dispatch`) selects the compiled Pallas
+TPU kernel, the Pallas interpreter (debug/parity), or the pure-jnp reference.
+The Pallas paths carry a ``jax.custom_vjp``: the forward kernel's online
+softmax statistics (teacher/student logsumexp over the T-scaled logits) are
+returned as residuals, and the backward pass is a recompute-based jnp VJP
+that produces cotangents for ``client_logits``, ``student_logits`` and ``w``
+— the student grad drives server distillation (Eq. 4) and the w grad feeds
+the EE sign step (Eq. 12). Only the backward materializes A_w; the forward
+hot path stays a single streamed pass.
+
+With cotangent ``g`` per sample and ``t = A_w/T``, ``s = student/T``,
+``p = softmax(t)``, ``q = softmax(s)``:
+
+    ∂out/∂A_w      = T · p ⊙ (t − lse_t − s + lse_s − out/T²)
+    ∂out/∂student  = T · (q − p)
+    ∂out/∂w_k      = ⟨∂out/∂A_w, client_k⟩
 """
 from __future__ import annotations
 
@@ -11,33 +24,68 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import resolve_backend
 from repro.kernels.ensemble_kl.kernel import ensemble_kl_pallas
 from repro.kernels.ensemble_kl.ref import ensemble_kl_ref
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _ensemble_kl_kernel(client_logits, student_logits, w, temperature, interpret, block_b, block_v):
+    return ensemble_kl_pallas(
+        client_logits, student_logits, w, temperature,
+        block_b=block_b, block_v=block_v, interpret=interpret,
+    )
 
 
-@partial(jax.jit, static_argnames=("temperature", "use_kernel", "block_b", "block_v"))
+def _ensemble_kl_fwd(client_logits, student_logits, w, temperature, interpret, block_b, block_v):
+    out, lse_t, lse_s = ensemble_kl_pallas(
+        client_logits, student_logits, w, temperature,
+        block_b=block_b, block_v=block_v, interpret=interpret, return_stats=True,
+    )
+    return out, (client_logits, student_logits, w, out, lse_t, lse_s)
+
+
+def _ensemble_kl_bwd(temperature, interpret, block_b, block_v, res, g):
+    client_logits, student_logits, w, out, lse_t, lse_s = res
+    temp = float(temperature)
+    cl = client_logits.astype(jnp.float32)
+    st = student_logits.astype(jnp.float32)
+    w32 = w.astype(jnp.float32)
+    t = jnp.einsum("k,kbv->bv", w32, cl) / temp
+    s = st / temp
+    p = jnp.exp(t - lse_t[:, None])
+    q = jnp.exp(s - lse_s[:, None])
+    kl_u = out / (temp * temp)  # unscaled KL, recovered from the primal out
+    # d(out)/d(A_w) and d(out)/d(student): T² · dKL/d(t|s) · (1/T) = T · (…)
+    g_ens = (g * temp)[:, None] * (p * ((t - lse_t[:, None]) - (s - lse_s[:, None]) - kl_u[:, None]))
+    g_st = (g * temp)[:, None] * (q - p)
+    g_cl = w32[:, None, None] * g_ens[None]
+    g_w = jnp.einsum("bv,kbv->k", g_ens, cl)
+    return (
+        g_cl.astype(client_logits.dtype),
+        g_st.astype(student_logits.dtype),
+        g_w.astype(w.dtype),
+    )
+
+
+_ensemble_kl_kernel.defvjp(_ensemble_kl_fwd, _ensemble_kl_bwd)
+
+
+@partial(jax.jit, static_argnames=("temperature", "backend", "block_b", "block_v"))
 def ensemble_kl(
     client_logits: jax.Array,
     student_logits: jax.Array,
     w: jax.Array,
     temperature: float = 1.0,
-    use_kernel: bool = True,
+    backend: str = "auto",
     block_b: int = 8,
     block_v: int = 512,
 ) -> jax.Array:
     """Per-sample KL(A_w ‖ student)·T². client_logits: (K, B, V)."""
-    if not use_kernel:
+    resolved = resolve_backend(backend)
+    if resolved == "ref":
         return ensemble_kl_ref(client_logits, student_logits, w, temperature)
-    return ensemble_kl_pallas(
-        client_logits,
-        student_logits,
-        w,
-        temperature,
-        block_b=block_b,
-        block_v=block_v,
-        interpret=not _on_tpu(),
+    return _ensemble_kl_kernel(
+        client_logits, student_logits, w, float(temperature),
+        resolved == "pallas-interpret", block_b, block_v,
     )

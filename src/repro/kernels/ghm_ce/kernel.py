@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.tiling import tile_padding
+
 NEG = -1e30
 
 
@@ -29,6 +31,8 @@ def _kernel(
     client_ref,
     label_ref,
     out_ref,
+    lse_ref,
+    lyo_ref,
     m_ref,
     d_ref,
     ly_ref,
@@ -74,6 +78,9 @@ def _kernel(
             d_hard = 1.0 - jnp.exp(ly - lse)  # Eq. 5
             nll = d_hard * nll  # Eq. 6
         out_ref[...] = nll.astype(out_ref.dtype)
+        # the online-softmax statistics double as the VJP residuals
+        lse_ref[...] = lse.astype(lse_ref.dtype)
+        lyo_ref[...] = ly.astype(lyo_ref.dtype)
 
 
 def ghm_ce_pallas(
@@ -85,14 +92,19 @@ def ghm_ce_pallas(
     block_b: int = 8,
     block_v: int = 512,
     interpret: bool = False,
-) -> jax.Array:
+    return_stats: bool = False,
+):
     """client_logits: (K, B, V); labels: (B,) int32; w: (K,).
-    Returns per-sample d·CE (or plain CE when ``weighted=False``), (B,)."""
+    Returns per-sample d·CE (or plain CE when ``weighted=False``), (B,);
+    with ``return_stats=True`` also the ensemble logsumexp and label logit
+    (the VJP residuals), each (B,).
+
+    Tiles never shrink below the (8, 128) VPU alignment: short batches and
+    narrow vocabs are zero-padded up to the block instead (padded rows are
+    computed on benign zeros and sliced off; the padded vocab tail is masked
+    inside the kernel)."""
     k, b, v = client_logits.shape
-    block_b = min(block_b, b)
-    block_v = min(block_v, v)
-    pb = (-b) % block_b
-    pv = (-v) % block_v
+    block_b, block_v, pb, pv = tile_padding(b, v, block_b, block_v)
     if pb or pv:
         client_logits = jnp.pad(client_logits, ((0, 0), (0, pb), (0, pv)))
     if pb:
@@ -100,7 +112,7 @@ def ghm_ce_pallas(
     bp, vp = b + pb, v + pv
     nb, nv = bp // block_b, vp // block_v
 
-    out = pl.pallas_call(
+    out, lse, ly = pl.pallas_call(
         functools.partial(
             _kernel, num_vocab_tiles=nv, vocab=v, block_v=block_v, weighted=weighted
         ),
@@ -110,8 +122,8 @@ def ghm_ce_pallas(
             pl.BlockSpec((k, block_b, block_v), lambda bi, vi: (0, bi, vi)),
             pl.BlockSpec((block_b, 1), lambda bi, vi: (bi, 0)),
         ],
-        out_specs=pl.BlockSpec((block_b, 1), lambda bi, vi: (bi, 0)),
-        out_shape=jax.ShapeDtypeStruct((bp, 1), jnp.float32),
+        out_specs=[pl.BlockSpec((block_b, 1), lambda bi, vi: (bi, 0))] * 3,
+        out_shape=[jax.ShapeDtypeStruct((bp, 1), jnp.float32)] * 3,
         scratch_shapes=[pltpu.VMEM((block_b, 1), jnp.float32) for _ in range(3)],
         interpret=interpret,
     )(
@@ -119,4 +131,6 @@ def ghm_ce_pallas(
         client_logits,
         labels.astype(jnp.int32).reshape(bp, 1),
     )
+    if return_stats:
+        return out[:b, 0], lse[:b, 0], ly[:b, 0]
     return out[:b, 0]

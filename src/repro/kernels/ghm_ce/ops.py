@@ -1,37 +1,95 @@
-"""Jitted public wrapper for the fused GHM-weighted CE kernel."""
+"""Differentiable public wrapper for the fused GHM-weighted CE kernel.
+
+``backend`` (see :mod:`repro.kernels.dispatch`) selects the compiled Pallas
+TPU kernel, the Pallas interpreter (debug/parity), or the pure-jnp reference.
+The Pallas paths carry a ``jax.custom_vjp``: the forward kernel's online
+statistics (ensemble logsumexp + label logit) are the residuals and the
+backward is a recompute-based jnp VJP with cotangents for ``client_logits``
+and ``w`` (labels are integer — float0 cotangent).
+
+With ``t = A_w``, ``p = softmax(t)``, ``p_y`` the label prob, ``nll`` the CE
+and ``e`` the one-hot label, d(out)/dt factors as ``coeff · (p − e)`` where
+
+    coeff = 1                         (weighted=False — plain CE)
+          = 1 − p_y                   (weighted, difficulty stop-gradiented
+                                       — the Eq. 6 generator-loss convention)
+          = 1 − p_y + p_y·nll         (weighted, full gradient)
+
+``stop_difficulty_grad=True`` reproduces :func:`repro.core.hardness.ghs_loss`
+treating d(x) as a constant (GHM usage); the default differentiates through
+the difficulty weight, matching plain autodiff of :func:`ghm_ce_ref`.
+"""
 from __future__ import annotations
 
 from functools import partial
 
-import jax
+import numpy as np
 
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dispatch import resolve_backend
 from repro.kernels.ghm_ce.kernel import ghm_ce_pallas
 from repro.kernels.ghm_ce.ref import ghm_ce_ref
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _ghm_ce_kernel(client_logits, labels, w, weighted, stop_difficulty_grad, interpret, block_b, block_v):
+    return ghm_ce_pallas(
+        client_logits, labels, w, weighted=weighted,
+        block_b=block_b, block_v=block_v, interpret=interpret,
+    )
 
 
-@partial(jax.jit, static_argnames=("weighted", "use_kernel", "block_b", "block_v"))
+def _ghm_ce_fwd(client_logits, labels, w, weighted, stop_difficulty_grad, interpret, block_b, block_v):
+    out, lse, ly = ghm_ce_pallas(
+        client_logits, labels, w, weighted=weighted,
+        block_b=block_b, block_v=block_v, interpret=interpret, return_stats=True,
+    )
+    return out, (client_logits, labels, w, lse, ly)
+
+
+def _ghm_ce_bwd(weighted, stop_difficulty_grad, interpret, block_b, block_v, res, g):
+    client_logits, labels, w, lse, ly = res
+    k, b, v = client_logits.shape
+    cl = client_logits.astype(jnp.float32)
+    w32 = w.astype(jnp.float32)
+    t = jnp.einsum("k,kbv->bv", w32, cl)
+    p = jnp.exp(t - lse[:, None])
+    onehot = jax.nn.one_hot(labels, v, dtype=jnp.float32)
+    if not weighted:
+        coeff = jnp.ones_like(lse)
+    else:
+        py = jnp.exp(ly - lse)
+        coeff = 1.0 - py
+        if not stop_difficulty_grad:
+            coeff = coeff + py * (lse - ly)
+    g_t = (g * coeff)[:, None] * (p - onehot)
+    g_cl = w32[:, None, None] * g_t[None]
+    g_w = jnp.einsum("bv,kbv->k", g_t, cl)
+    g_labels = np.zeros(labels.shape, dtype=jax.dtypes.float0)
+    return g_cl.astype(client_logits.dtype), g_labels, g_w.astype(w.dtype)
+
+
+_ghm_ce_kernel.defvjp(_ghm_ce_fwd, _ghm_ce_bwd)
+
+
+@partial(jax.jit, static_argnames=("weighted", "backend", "block_b", "block_v", "stop_difficulty_grad"))
 def ghm_ce(
     client_logits: jax.Array,
     labels: jax.Array,
     w: jax.Array,
     weighted: bool = True,
-    use_kernel: bool = True,
+    backend: str = "auto",
     block_b: int = 8,
     block_v: int = 512,
+    stop_difficulty_grad: bool = False,
 ) -> jax.Array:
     """Per-sample difficulty-weighted CE of the weighted ensemble (Eq. 6)."""
-    if not use_kernel:
-        return ghm_ce_ref(client_logits, labels, w, weighted)
-    return ghm_ce_pallas(
-        client_logits,
-        labels,
-        w,
-        weighted=weighted,
-        block_b=block_b,
-        block_v=block_v,
-        interpret=not _on_tpu(),
+    resolved = resolve_backend(backend)
+    if resolved == "ref":
+        return ghm_ce_ref(client_logits, labels, w, weighted, stop_difficulty_grad)
+    return _ghm_ce_kernel(
+        client_logits, labels, w, weighted, stop_difficulty_grad,
+        resolved == "pallas-interpret", block_b, block_v,
     )

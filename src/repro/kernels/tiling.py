@@ -1,0 +1,25 @@
+"""Shared tile-alignment helpers for the (batch, vocab)-gridded loss kernels.
+
+The VPU tile floor is (8, 128): blocks must never shrink below it, so short
+batches / narrow vocabs are zero-padded up to the block instead of the block
+being clamped down to the data (the old ``min(block, dim)`` bug produced
+sub-(8, 128) tiles whenever B < 8 or V < 128).
+"""
+from __future__ import annotations
+
+LANE = 128  # minor-dim VPU lane count
+SUBLANE = 8  # second-minor (batch) tile floor for f32
+
+
+def round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def tile_padding(b: int, v: int, block_b: int, block_v: int) -> tuple[int, int, int, int]:
+    """Returns ``(block_b, block_v, pad_b, pad_v)``: both blocks clamped to
+    the (8, 128) floor (block_v additionally no wider than the lane-aligned
+    vocab), and the zero-padding needed on each data dim. Caller-supplied
+    sub-aligned blocks are raised to the floor rather than honored."""
+    block_b = round_up(max(block_b, SUBLANE), SUBLANE)
+    block_v = min(round_up(max(block_v, LANE), LANE), round_up(v, LANE))
+    return block_b, block_v, (-b) % block_b, (-v) % block_v

@@ -29,6 +29,7 @@ from repro.core import (
 )
 from repro.data import make_synth_images
 from repro.fed import build_market, market_eval_fn
+from repro.kernels import KERNEL_BACKENDS
 from repro.models.cnn import cnn_apply, init_cnn
 from repro.utils import get_logger
 
@@ -53,9 +54,11 @@ def run_method(
     eval_every: int = 50,
     driver: str = "fused",
 ):
-    """Dispatch one OFL method; returns {'server_acc':…, 'ensemble_acc':…}.
-    ``driver`` selects the fused single-dispatch epoch engine (default) or
-    the legacy per-batch loop for every distillation-based method."""
+    """Dispatch one OFL method; returns {'server_acc':…, 'ensemble_acc':…},
+    except ``fedens`` which trains no server and returns ``ensemble_acc``
+    only. ``driver`` selects the fused single-dispatch epoch engine
+    (default) or the legacy per-batch loop for every distillation-based
+    method."""
     server_apply = partial(cnn_apply, server_arch)
     server_params = init_cnn(jax.random.key(seed + 77), server_arch, num_classes, image_shape)
     eval_fn = market_eval_fn(applies, params, server_apply, test_x, test_y)
@@ -65,7 +68,9 @@ def run_method(
         avg = fedavg(params, sizes)
         return eval_fn(avg, uniform_weights(len(params)))
     if method == "fedens":
-        return eval_fn(server_params, uniform_weights(len(params)))
+        # no server is trained here — evaluating the fresh random init would
+        # record a meaningless server_acc next to the real ensemble number
+        return eval_fn(None, uniform_weights(len(params)))
     if method == "feddf":
         st = run_feddf(
             applies, params, server_apply, server_params, train_x, cfg, key,
@@ -116,6 +121,13 @@ def main() -> None:
     p.add_argument("--no-ghs", action="store_true")
     p.add_argument("--no-dhs", action="store_true")
     p.add_argument("--no-ee", action="store_true")
+    p.add_argument("--no-adv", action="store_true",
+                   help="drop the adversarial generator term L_A (independent "
+                        "of --no-ghs, so every Table 7 row is reachable)")
+    p.add_argument("--kernel-backend", default="auto", choices=KERNEL_BACKENDS,
+                   help="fused-loss kernel path for the fused driver: auto "
+                        "(pallas on TPU, jnp ref elsewhere) | pallas | "
+                        "pallas-interpret | ref")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--out", default=None)
     args = p.parse_args()
@@ -136,7 +148,8 @@ def main() -> None:
         use_ghs=not args.no_ghs,
         use_dhs=not args.no_dhs,
         use_ee=not args.no_ee,
-        use_adv=not args.no_ghs,
+        use_adv=not args.no_adv,
+        kernel_backend=args.kernel_backend,
         seed=args.seed,
     )
     x, y = make_synth_images(args.seed, args.classes, args.per_class, shape)

@@ -1,0 +1,209 @@
+"""Differentiable kernel path: custom_vjp grad parity vs the jnp oracles,
+backend dispatch rules, and fused-epoch equivalence of the "ref" and
+"pallas-interpret" loss paths.
+
+The VJP contract (repro/kernels/*/ops.py): the Pallas forward returns its
+online softmax statistics as residuals and the backward produces cotangents
+for ``client_logits``, ``student_logits`` and ``w`` — the student cotangent
+drives server distillation (Eq. 4), the w cotangent the EE step (Eq. 12).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.test_util import check_grads
+
+from repro.kernels import (
+    ensemble_kl,
+    ensemble_kl_ref,
+    ghm_ce,
+    ghm_ce_ref,
+    resolve_backend,
+)
+
+pytestmark = pytest.mark.tier1
+
+INTERP = "pallas-interpret"
+TOL = 1e-4
+
+
+def _assert_tree_close(a, b, tol=TOL):
+    for u, v in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(u), np.asarray(v), rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# dispatch rules
+
+
+def test_dispatch_auto_never_interprets_off_tpu():
+    assert resolve_backend("auto") in ("pallas", "ref")
+    if jax.default_backend() != "tpu":
+        assert resolve_backend("auto") == "ref"
+        with pytest.raises(ValueError, match="requires a TPU"):
+            resolve_backend("pallas")
+    assert resolve_backend(None) == resolve_backend("auto")
+    assert resolve_backend(INTERP) == INTERP
+    assert resolve_backend("ref") == "ref"
+    with pytest.raises(ValueError, match="unknown kernel backend"):
+        resolve_backend("triton")
+
+
+# ---------------------------------------------------------------------------
+# ensemble_kl VJP: cotangents for client_logits, student_logits and w
+
+
+@pytest.mark.parametrize("k,b,v,temp", [(3, 13, 700, 4.0), (2, 5, 96, 1.0), (4, 8, 512, 2.0)])
+def test_ensemble_kl_grad_parity(k, b, v, temp):
+    """Kernel-vs-ref gradients for all three differentiable inputs, with a
+    random per-sample cotangent (covers padded batch + vocab tails)."""
+    cl = jax.random.normal(jax.random.key(0), (k, b, v)) * 2
+    st = jax.random.normal(jax.random.key(1), (b, v)) * 2
+    w = jax.nn.softmax(jax.random.normal(jax.random.key(2), (k,)))
+    ct = jax.random.normal(jax.random.key(3), (b,))
+
+    def f_ker(cl, st, w):
+        return jnp.vdot(ensemble_kl(cl, st, w, temperature=temp, backend=INTERP), ct)
+
+    def f_ref(cl, st, w):
+        return jnp.vdot(ensemble_kl_ref(cl, st, w, temp), ct)
+
+    got = jax.grad(f_ker, argnums=(0, 1, 2))(cl, st, w)
+    want = jax.grad(f_ref, argnums=(0, 1, 2))(cl, st, w)
+    _assert_tree_close(got, want)
+
+
+def test_ensemble_kl_grad_numerical():
+    """check_grads against finite differences through the interpret kernel."""
+    cl = jax.random.normal(jax.random.key(0), (2, 4, 32))
+    st = jax.random.normal(jax.random.key(1), (4, 32))
+    w = jnp.asarray([0.6, 0.4])
+    f = lambda cl, st, w: jnp.sum(ensemble_kl(cl, st, w, temperature=2.0, backend=INTERP))
+    check_grads(f, (cl, st, w), order=1, modes=("rev",), atol=1e-2, rtol=1e-2)
+
+
+def test_ensemble_kl_server_params_cotangent():
+    """server_params-shaped grads: differentiate a linear student head
+    through the kernel loss; the tree must match the ref path."""
+    k, b, d, v = 3, 8, 16, 128
+    x = jax.random.normal(jax.random.key(0), (b, d))
+    cl = jax.random.normal(jax.random.key(1), (k, b, v)) * 2
+    w = jax.nn.softmax(jax.random.normal(jax.random.key(2), (k,)))
+    sp = {
+        "w": jax.random.normal(jax.random.key(3), (d, v)) * 0.1,
+        "b": jnp.zeros((v,)),
+    }
+    apply = lambda p: x @ p["w"] + p["b"]
+
+    def loss(p, backend):
+        if backend == "ref":
+            return jnp.mean(ensemble_kl_ref(cl, apply(p), w, 4.0))
+        return jnp.mean(ensemble_kl(cl, apply(p), w, temperature=4.0, backend=backend))
+
+    got = jax.grad(loss)(sp, INTERP)
+    want = jax.grad(loss)(sp, "ref")
+    _assert_tree_close(got, want)
+
+
+def test_ensemble_kl_w_cotangent_feeds_ee_sign_step():
+    """The w gradient through the kernel must agree in sign with the ref
+    path (the EE update of Eq. 12 consumes only the sign)."""
+    k, b, v = 4, 16, 256
+    cl = jax.random.normal(jax.random.key(0), (k, b, v)) * 3
+    st = jax.random.normal(jax.random.key(1), (b, v))
+    w = jax.nn.softmax(jax.random.normal(jax.random.key(2), (k,)))
+    g_ker = jax.grad(lambda w: jnp.mean(ensemble_kl(cl, st, w, backend=INTERP)))(w)
+    g_ref = jax.grad(lambda w: jnp.mean(ensemble_kl_ref(cl, st, w)))(w)
+    np.testing.assert_allclose(g_ker, g_ref, rtol=TOL, atol=TOL)
+    np.testing.assert_array_equal(np.sign(g_ker), np.sign(g_ref))
+
+
+# ---------------------------------------------------------------------------
+# ghm_ce VJP: cotangents for client_logits and w, int labels get float0
+
+
+@pytest.mark.parametrize("k,b,v", [(3, 13, 700), (2, 5, 96)])
+@pytest.mark.parametrize("weighted", [True, False])
+@pytest.mark.parametrize("stop_difficulty_grad", [True, False])
+def test_ghm_ce_grad_parity(k, b, v, weighted, stop_difficulty_grad):
+    cl = jax.random.normal(jax.random.key(0), (k, b, v)) * 2
+    lbl = jax.random.randint(jax.random.key(1), (b,), 0, v)
+    w = jax.nn.softmax(jax.random.normal(jax.random.key(2), (k,)))
+    ct = jax.random.normal(jax.random.key(3), (b,))
+
+    def f_ker(cl, w):
+        out = ghm_ce(cl, lbl, w, weighted=weighted, backend=INTERP,
+                     stop_difficulty_grad=stop_difficulty_grad)
+        return jnp.vdot(out, ct)
+
+    def f_ref(cl, w):
+        return jnp.vdot(ghm_ce_ref(cl, lbl, w, weighted, stop_difficulty_grad), ct)
+
+    got = jax.grad(f_ker, argnums=(0, 1))(cl, w)
+    want = jax.grad(f_ref, argnums=(0, 1))(cl, w)
+    _assert_tree_close(got, want)
+
+
+def test_ghm_ce_grad_numerical():
+    cl = jax.random.normal(jax.random.key(0), (2, 4, 32))
+    lbl = jax.random.randint(jax.random.key(1), (4,), 0, 32)
+    w = jnp.asarray([0.3, 0.7])
+    f = lambda cl, w: jnp.sum(ghm_ce(cl, lbl, w, backend=INTERP))
+    check_grads(f, (cl, w), order=1, modes=("rev",), atol=1e-2, rtol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# fused epoch engine: "ref" and "pallas-interpret" backends produce the same
+# server params on the same PRNG stream
+
+
+@pytest.mark.parametrize("method", ["coboosting", "dense"])
+def test_fused_epoch_backend_parity(method, tiny_market_kernelpath):
+    from repro.core import default_image_setup, run_coboosting, run_generator_baseline
+    from repro.models.cnn import cnn_apply, init_cnn
+
+    cfg, applies, params, classes, shape = tiny_market_kernelpath
+    results = {}
+    for backend in ("ref", INTERP):
+        import dataclasses
+
+        c = dataclasses.replace(cfg, kernel_backend=backend)
+        server_apply = partial(cnn_apply, "mlp")
+        sp = init_cnn(jax.random.key(99), "mlp", classes, shape)
+        gen_apply, gp = default_image_setup(jax.random.key(5), c, classes, shape)
+        if method == "coboosting":
+            st = run_coboosting(
+                applies, params, server_apply, sp, gen_apply, gp, c, classes,
+                jax.random.key(0),
+            )
+        else:
+            st = run_generator_baseline(
+                method, applies, params, server_apply, sp, gen_apply, gp, c, classes,
+                jax.random.key(0),
+            )
+        results[backend] = st
+
+    _assert_tree_close(results["ref"].server_params, results[INTERP].server_params, tol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(results["ref"].weights), np.asarray(results[INTERP].weights), atol=1e-5
+    )
+
+
+@pytest.fixture(scope="module")
+def tiny_market_kernelpath():
+    from repro.config.train import OFLConfig
+    from repro.data import make_synth_images
+    from repro.fed import build_market
+
+    classes, shape = 4, (8, 8, 3)
+    cfg = OFLConfig(
+        num_clients=2, local_epochs=1, local_batch_size=16,
+        epochs=3, gen_iters=2, batch_size=8, latent_dim=8, buffer_batches=2,
+    )
+    x, y = make_synth_images(0, classes, 20, shape)
+    applies, params, _, _ = build_market(0, x, y, cfg, classes, archs=["mlp", "mlp"])
+    return cfg, applies, params, classes, shape

@@ -1,5 +1,7 @@
 """Per-kernel allclose sweeps (shapes × dtypes) against the pure-jnp
-oracles, run in Pallas interpret mode on CPU."""
+oracles, run in Pallas interpret mode on CPU (requested explicitly —
+``backend="auto"`` resolves to the jnp ref off-TPU, see
+repro.kernels.dispatch)."""
 from __future__ import annotations
 
 import jax
@@ -17,6 +19,9 @@ from repro.kernels import (
 )
 
 
+INTERP = "pallas-interpret"
+
+
 @pytest.mark.parametrize("k,b,v", [(1, 4, 64), (3, 13, 700), (8, 32, 2048), (5, 8, 511)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("temp", [1.0, 4.0])
@@ -24,7 +29,7 @@ def test_ensemble_kl_matches_ref(k, b, v, dtype, temp):
     cl = (jax.random.normal(jax.random.key(0), (k, b, v)) * 3).astype(dtype)
     st = (jax.random.normal(jax.random.key(1), (b, v)) * 3).astype(dtype)
     w = jax.nn.softmax(jax.random.normal(jax.random.key(2), (k,)))
-    got = ensemble_kl(cl, st, w, temperature=temp)
+    got = ensemble_kl(cl, st, w, temperature=temp, backend=INTERP)
     want = ensemble_kl_ref(cl, st, w, temp)
     tol = 1e-4 if dtype == jnp.float32 else 5e-2
     np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
@@ -34,8 +39,20 @@ def test_ensemble_kl_zero_for_identical():
     cl = jnp.stack([jax.random.normal(jax.random.key(0), (6, 100))] * 3)
     st = cl[0]
     w = jnp.full((3,), 1 / 3)
-    got = ensemble_kl(cl, st, w, temperature=2.0)
+    got = ensemble_kl(cl, st, w, temperature=2.0, backend=INTERP)
     np.testing.assert_allclose(got, np.zeros(6), atol=1e-5)
+
+
+@pytest.mark.parametrize("b", [1, 3, 5])
+def test_ensemble_kl_small_batch_pads_to_tile(b):
+    """B < 8 must pad the batch up to the (8, 128) tile, not shrink the
+    tile below VPU alignment (the old ``min(block_b, b)`` bug)."""
+    cl = jax.random.normal(jax.random.key(0), (3, b, 200)) * 2
+    st = jax.random.normal(jax.random.key(1), (b, 200)) * 2
+    w = jax.nn.softmax(jax.random.normal(jax.random.key(2), (3,)))
+    got = ensemble_kl(cl, st, w, temperature=4.0, backend=INTERP)
+    assert got.shape == (b,)
+    np.testing.assert_allclose(got, ensemble_kl_ref(cl, st, w, 4.0), rtol=1e-4, atol=1e-4)
 
 
 @pytest.mark.parametrize("k,b,v", [(2, 5, 33), (4, 11, 531), (10, 16, 1024)])
@@ -44,9 +61,19 @@ def test_ghm_ce_matches_ref(k, b, v, weighted):
     cl = jax.random.normal(jax.random.key(0), (k, b, v)) * 2
     lbl = jax.random.randint(jax.random.key(1), (b,), 0, v)
     w = jax.nn.softmax(jax.random.normal(jax.random.key(2), (k,)))
-    got = ghm_ce(cl, lbl, w, weighted=weighted)
+    got = ghm_ce(cl, lbl, w, weighted=weighted, backend=INTERP)
     want = ghm_ce_ref(cl, lbl, w, weighted)
     np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_ghm_ce_small_batch_pads_to_tile():
+    """The B=5 pin for the pad-to-tile fix (labels pad along with the batch)."""
+    cl = jax.random.normal(jax.random.key(0), (4, 5, 96)) * 2
+    lbl = jax.random.randint(jax.random.key(1), (5,), 0, 96)
+    w = jax.nn.softmax(jax.random.normal(jax.random.key(2), (4,)))
+    got = ghm_ce(cl, lbl, w, backend=INTERP)
+    assert got.shape == (5,)
+    np.testing.assert_allclose(got, ghm_ce_ref(cl, lbl, w), rtol=1e-5, atol=1e-5)
 
 
 def test_ghm_ce_difficulty_weighting_downweights_easy():
@@ -56,7 +83,7 @@ def test_ghm_ce_difficulty_weighting_downweights_easy():
     cl = cl.at[0, 0, 3].set(30.0)  # sample 0: trivially classified as 3
     lbl = jnp.asarray([3, 5])
     w = jnp.ones((1,))
-    out = np.asarray(ghm_ce(cl, lbl, w))
+    out = np.asarray(ghm_ce(cl, lbl, w, backend=INTERP))
     assert out[0] < 1e-6  # d≈0 ⇒ weighted CE ≈ 0
     assert out[1] > 1.0  # hard sample keeps its CE
 
