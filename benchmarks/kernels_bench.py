@@ -67,11 +67,11 @@ def main() -> list:
     q = jax.random.normal(key, (bq, s, h, hd))
     kk = jax.random.normal(jax.random.key(4), (bq, s, kh, hd))
     vv = jax.random.normal(jax.random.key(5), (bq, s, kh, hd))
-    got = flash_attention(q, kk, vv, causal=True, block_q=64, block_kv=64)
+    got = flash_attention(q, kk, vv, causal=True, backend=KER, block_q=64, block_kv=64)
     want = flash_attention_ref(q, kk, vv, causal=True)
     err = float(jnp.max(jnp.abs(got - want)))
     us_ref = _time(jax.jit(lambda a, b2, c: flash_attention_ref(a, b2, c, causal=True)), q, kk, vv)
-    us_ker = _time(lambda a, b2, c: flash_attention(a, b2, c, causal=True, block_q=64, block_kv=64), q, kk, vv)
+    us_ker = _time(lambda a, b2, c: flash_attention(a, b2, c, causal=True, backend=KER, block_q=64, block_kv=64), q, kk, vv)
     rows.append(dict(kernel="flash_attention", shape=f"B{bq}xS{s}xH{h}/{kh}xD{hd}", max_err=f"{err:.2e}",
                      us_ref=round(us_ref), us_kernel=round(us_ker)))
 

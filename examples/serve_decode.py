@@ -1,6 +1,6 @@
-"""Batched serving example: prefill + greedy decode on a reduced assigned
-arch, exercising the same lm_prefill / lm_decode programs the decode_32k /
-long_500k dry-runs lower at production scale.
+"""Serving example on a reduced assigned arch: the fused static batch and the
+continuous-batching engine generate the same greedy continuations — the
+engine just never waits for a batch to fill and never syncs per token.
 
     PYTHONPATH=src python examples/serve_decode.py --arch jamba-v0.1-52b
 """
@@ -13,7 +13,8 @@ import numpy as np
 
 from repro.config import get_arch, reduced_variant
 from repro.data import make_token_stream
-from repro.models import init_lm, init_lm_state, lm_decode, lm_prefill
+from repro.models import init_lm
+from repro.serve import ContinuousScheduler, EngineConfig, Request, ServeEngine, static_generate
 
 p = argparse.ArgumentParser()
 p.add_argument("--arch", default="jamba-v0.1-52b")
@@ -25,29 +26,35 @@ args = p.parse_args()
 cfg = reduced_variant(get_arch(args.arch)).replace(dtype="float32", param_dtype="float32")
 if cfg.is_encoder_only:
     raise SystemExit(f"{cfg.name}: encoder-only, no decode (see DESIGN.md skips)")
+if cfg.frontend == "vision":
+    raise SystemExit(
+        f"{cfg.name}: the continuous engine has no vision-prefix admission yet; "
+        "see repro.launch.serve --engine static for the vlm path"
+    )
 
 params = init_lm(cfg, jax.random.key(0))
 data = make_token_stream(0, cfg.vocab_size, args.batch, args.prompt)
-batch = {"tokens": jnp.asarray(data["tokens"])}
-if cfg.family == "vlm":
-    batch["prefix"] = jnp.asarray(
-        np.random.RandomState(0).randn(args.batch, cfg.num_prefix_tokens, cfg.frontend_dim).astype(np.float32) * 0.02
-    )
+tokens = data["tokens"][:, : args.prompt].astype(np.int32)
 
-state = init_lm_state(cfg, args.batch, args.prompt + args.gen + cfg.num_prefix_tokens)
-prefill = jax.jit(lambda p_, b, s: lm_prefill(p_, cfg, b, s))
-decode = jax.jit(lambda p_, t, s, pos: lm_decode(p_, cfg, t, s, pos))
-
-logits, state = prefill(params, batch, state)
-tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-out = [np.asarray(tok)]
+# static arm: prefill + full greedy decode in ONE dispatch, tokens
+# accumulated on device (the legacy loop synced every token to host)
 t0 = time.time()
-base = args.prompt + cfg.num_prefix_tokens
-for i in range(args.gen - 1):
-    logits, state = decode(params, tok, state, jnp.asarray(base + i, jnp.int32))
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-    out.append(np.asarray(tok))
-jax.block_until_ready(tok)
+static_out = np.asarray(static_generate(params, cfg, {"tokens": jnp.asarray(tokens)}, args.gen))
 print(f"arch={cfg.name} family={cfg.family}")
-print(f"decoded {args.batch}×{args.gen} tokens in {time.time()-t0:.2f}s")
-print("continuation[0]:", np.concatenate(out, 1)[0].tolist())
+print(f"static : {args.batch}x{args.gen} tokens in {time.time()-t0:.2f}s (1 dispatch)")
+
+# continuous arm: same prompts through the slot engine
+engine = ServeEngine(
+    cfg, params,
+    EngineConfig(max_slots=args.batch, max_seq=args.prompt + args.gen,
+                 max_new=args.gen, decode_chunk=8),
+)
+t0 = time.time()
+completions = ContinuousScheduler(engine).run(
+    [Request(rid=i, tokens=tokens[i], max_new_tokens=args.gen) for i in range(args.batch)]
+)
+print(f"engine : {args.batch}x{args.gen} tokens in {time.time()-t0:.2f}s "
+      f"({engine.stats['decode_chunks']} chunks, {engine.stats['host_syncs']} host syncs)")
+match = all(np.array_equal(c.tokens, static_out[c.rid]) for c in completions)
+print(f"token parity static==engine: {match}")
+print("continuation[0]:", completions[0].tokens.tolist())

@@ -65,6 +65,12 @@ class ModelConfig:
     frontend_dim: int = 0  # raw patch/frame embedding dim fed to the projector
     num_prefix_tokens: int = 0  # patch/frame embeddings provided by input_specs
 
+    # train/prefill attention backend (repro.kernels.dispatch): "auto" is the
+    # compiled Pallas flash kernel on TPU and the blocked-jnp flash_attn_jax
+    # twin elsewhere; "pallas-interpret" is the debug/parity lane; "ref" is
+    # the jnp twin explicitly. Decode (Sq=1) always uses the small SDPA path.
+    attn_backend: str = "auto"
+
     # numerics -----------------------------------------------------------------
     dtype: str = "bfloat16"
     param_dtype: str = "float32"
@@ -115,6 +121,7 @@ class ModelConfig:
             assert self.ssm_kind in ("mamba", "xlstm")
         if self.frontend:
             assert self.num_prefix_tokens > 0
+        assert self.attn_backend in ("auto", "pallas", "pallas-interpret", "ref"), self.attn_backend
 
     def replace(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)

@@ -253,11 +253,13 @@ def make_coboost_epoch(
         x_new = gen_apply(gen_params, z, y)
         buf = buffer_append(buf, x_new, y)
 
-        # 2-3. EE on the (diversified) fresh hard batch (lines 11-14)
+        # 2-3. EE on the (diversified) fresh hard batch (lines 11-14). The
+        # Eq. 11/12 CE-over-ensemble + w-cotangent runs inside the fused
+        # ghm_ce(weighted=False) kernel on the Pallas backends.
         if use_ee:
             k2 = keys[2]
             xe = diversify(logits_all_fn, client_params, w, x_new, k2, cfg.epsilon) if cfg.use_dhs else x_new
-            w = update_weights(w, logits_all_fn(client_params, xe), y, mu)
+            w = update_weights(w, logits_all_fn(client_params, xe), y, mu, backend=backend)
 
         # 4. server distillation over the replay ring (lines 16-18)
         server_params, srv_opt_state, srv_steps, dmean = sweep(

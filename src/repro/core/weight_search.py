@@ -6,6 +6,14 @@ One sign-gradient step on the ensembling weights per synthetic batch:
 
 where L_w is the CE of the weighted ensemble on the (hard) synthetic batch
 and Normalize clips to [0, 1] and renormalizes to the simplex.
+
+The CE-over-ensemble and its ``w`` gradient route through the fused
+:func:`repro.kernels.ghm_ce` kernel with ``weighted=False`` (plain CE): on
+the Pallas backends A_w is never materialized in the forward pass and the
+kernel's ``custom_vjp`` supplies the ``w`` cotangent directly, so the whole
+Eq. 11/12 step is fused. ``backend="ref"`` (the default, and what the legacy
+parity loop uses) is the pure-jnp oracle under plain autodiff — numerically
+the original ``ensemble_logits`` + ``ce_per_sample`` composition.
 """
 from __future__ import annotations
 
@@ -14,8 +22,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.ensemble import ensemble_logits
-from repro.core.losses import ce_per_sample
+from repro.kernels import ghm_ce
 
 
 def normalize_weights(w: jax.Array) -> jax.Array:
@@ -23,15 +30,16 @@ def normalize_weights(w: jax.Array) -> jax.Array:
     return w / jnp.maximum(jnp.sum(w), 1e-12)
 
 
-def weight_loss(w: jax.Array, logits_all: jax.Array, labels: jax.Array) -> jax.Array:
+def weight_loss(
+    w: jax.Array, logits_all: jax.Array, labels: jax.Array, backend: str = "ref"
+) -> jax.Array:
     """L_w (Eq. 11) on precomputed client logits (n, B, C)."""
-    ens = ensemble_logits(logits_all, w)
-    return jnp.mean(ce_per_sample(ens, labels))
+    return jnp.mean(ghm_ce(logits_all, labels, w, weighted=False, backend=backend))
 
 
 def update_weights(
-    w: jax.Array, logits_all: jax.Array, labels: jax.Array, mu: float
+    w: jax.Array, logits_all: jax.Array, labels: jax.Array, mu: float, backend: str = "ref"
 ) -> jax.Array:
     """One Eq. 12 step. ``mu`` is the paper's step size (0.1/n by default)."""
-    g = jax.grad(weight_loss)(w, logits_all, labels)
+    g = jax.grad(lambda w_: weight_loss(w_, logits_all, labels, backend))(w)
     return normalize_weights(w - mu * jnp.sign(g))

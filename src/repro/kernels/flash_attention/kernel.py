@@ -34,6 +34,7 @@ def _kernel(
     k_ref,
     v_ref,
     o_ref,
+    lse_ref,
     m_ref,
     l_ref,
     acc_ref,
@@ -86,6 +87,11 @@ def _kernel(
     @pl.when(ki == num_kv_tiles - 1)
     def _final():
         o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+        l, m = l_ref[...], m_ref[...]
+        # fully-masked rows (padding beyond an SWA tail) get a huge lse so a
+        # recompute backward's p = exp(s - lse) underflows to exactly zero
+        lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)), 1e30)
+        lse_ref[...] = lse[:, 0][None, :]  # (block_q, 1) -> (1, block_q)
 
 
 def flash_attention_pallas(
@@ -99,9 +105,11 @@ def flash_attention_pallas(
     block_q: int = 256,
     block_kv: int = 256,
     interpret: bool = False,
-) -> jax.Array:
+    return_lse: bool = False,
+):
     """q: (B, Sq, H, hd); k, v: (B, Sk, KH, hd), H % KH == 0.
-    Returns (B, Sq, H, hd)."""
+    Returns (B, Sq, H, hd), plus the per-row logsumexp (B, Sq, H) when
+    ``return_lse`` (the residual a recompute backward needs)."""
     b, sq, h, hd = q.shape
     sk, kh = k.shape[1], k.shape[2]
     g = h // kh
@@ -123,7 +131,7 @@ def flash_attention_pallas(
     kf = k.transpose(0, 2, 1, 3).reshape(b * kh, skp, hd)
     vf = v.transpose(0, 2, 1, 3).reshape(b * kh, skp, hd)
 
-    out = pl.pallas_call(
+    out, lse = pl.pallas_call(
         functools.partial(
             _kernel,
             causal=causal,
@@ -141,8 +149,14 @@ def flash_attention_pallas(
             pl.BlockSpec((1, block_kv, hd), lambda bh, qi, ki: (bh // g, ki, 0)),
             pl.BlockSpec((1, block_kv, hd), lambda bh, qi, ki: (bh // g, ki, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_q, hd), lambda bh, qi, ki: (bh, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((b * kh * g, sqp, hd), q.dtype),
+        out_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_q), lambda bh, qi, ki: (bh, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * kh * g, sqp, hd), q.dtype),
+            jax.ShapeDtypeStruct((b * kh * g, sqp), jnp.float32),
+        ],
         scratch_shapes=[
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, 1), jnp.float32),
@@ -151,4 +165,7 @@ def flash_attention_pallas(
         interpret=interpret,
     )(qf, kf, vf)
     out = out.reshape(b, kh, g, sqp, hd).transpose(0, 3, 1, 2, 4).reshape(b, sqp, h, hd)
-    return out[:, :sq]
+    if not return_lse:
+        return out[:, :sq]
+    lse = lse.reshape(b, kh, g, sqp).transpose(0, 3, 1, 2).reshape(b, sqp, h)
+    return out[:, :sq], lse[:, :sq]

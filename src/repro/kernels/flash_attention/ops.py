@@ -1,21 +1,24 @@
-"""Jitted public wrapper for the flash-attention kernel."""
+"""Jitted public wrapper for the flash-attention kernel.
+
+``backend`` follows :mod:`repro.kernels.dispatch` like the loss kernels:
+"auto" is the compiled kernel on TPU and the jnp ref elsewhere — the
+interpreter must be requested explicitly ("pallas-interpret"); asking for
+"pallas" off-TPU is an error, never a silent interpret fallback.
+"""
 from __future__ import annotations
 
 from functools import partial
 
 import jax
 
+from repro.kernels.dispatch import resolve_backend
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ref import flash_attention_ref
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 @partial(
     jax.jit,
-    static_argnames=("causal", "window", "softcap", "use_kernel", "block_q", "block_kv"),
+    static_argnames=("causal", "window", "softcap", "backend", "block_q", "block_kv"),
 )
 def flash_attention(
     q: jax.Array,
@@ -24,12 +27,13 @@ def flash_attention(
     causal: bool = True,
     window: int = 0,
     softcap: float = 0.0,
-    use_kernel: bool = True,
+    backend: str = "auto",
     block_q: int = 256,
     block_kv: int = 256,
 ) -> jax.Array:
     """Blocked causal/SWA attention. q: (B,Sq,H,hd); k,v: (B,Sk,KH,hd)."""
-    if not use_kernel:
+    resolved = resolve_backend(backend)
+    if resolved == "ref":
         return flash_attention_ref(q, k, v, causal=causal, window=window, softcap=softcap)
     return flash_attention_pallas(
         q,
@@ -40,5 +44,5 @@ def flash_attention(
         softcap=softcap,
         block_q=block_q,
         block_kv=block_kv,
-        interpret=not _on_tpu(),
+        interpret=resolved == "pallas-interpret",
     )

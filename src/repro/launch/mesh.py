@@ -34,3 +34,12 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """A 1×1 mesh over the single real device (tests / examples)."""
     return compat_make_mesh((1, 1), ("data", "model"))
+
+
+def mesh_context(mesh):
+    """``jax.set_mesh`` where the API exists (jax >= 0.5), else the Mesh's
+    own context manager (jax<0.5 pins in this container) — same effect for
+    the launch drivers: sharding constraints resolve against ``mesh``."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh

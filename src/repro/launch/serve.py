@@ -1,7 +1,16 @@
-"""Batched serving driver: prefill a batch of prompts, then greedy-decode.
+"""Serving driver for the distilled server LM: continuous-batching engine
+(default) or the fused static-batch baseline.
 
+    # continuous batching: staggered requests through the slot engine
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
+        --engine continuous --requests 8 --request-rate 20 --max-slots 4
+
+    # static baseline: one batch, prefill + single-dispatch decode
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
-        --reduced --batch 4 --prompt-len 64 --gen 32
+        --reduced --engine static --batch 4 --prompt-len 64 --gen 32
+
+Argument validation fails fast — encoder-only archs and unsupported mesh
+shapes are rejected with a clear message BEFORE any device allocation.
 """
 from __future__ import annotations
 
@@ -14,70 +23,161 @@ import numpy as np
 
 from repro.config import get_arch, reduced_variant
 from repro.data import make_token_stream
-from repro.launch.mesh import make_host_mesh, make_production_mesh
-from repro.models import init_lm, init_lm_state, lm_decode, lm_prefill
+from repro.launch.mesh import make_host_mesh, make_production_mesh, mesh_context
+from repro.models import init_lm
+from repro.serve import (
+    ContinuousScheduler,
+    EngineConfig,
+    Request,
+    ServeEngine,
+    static_generate,
+)
 from repro.utils import get_logger
 
 log = get_logger("serve")
 
 
-def main() -> None:
-    p = argparse.ArgumentParser()
-    p.add_argument("--arch", default="granite-3-2b")
-    p.add_argument("--batch", type=int, default=4)
-    p.add_argument("--prompt-len", type=int, default=64)
-    p.add_argument("--gen", type=int, default=32)
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default="smollm-135m")
+    p.add_argument("--engine", default="continuous", choices=("continuous", "static"))
     p.add_argument("--reduced", action="store_true")
     p.add_argument("--mesh", default="host", choices=("host", "production", "multipod"))
     p.add_argument("--seed", type=int, default=0)
-    args = p.parse_args()
+    p.add_argument("--prompt-len", type=int, default=64)
+    p.add_argument("--gen", type=int, default=32)
+    p.add_argument("--temperature", type=float, default=0.0)
+    p.add_argument("--attn-backend", default="auto",
+                   choices=("auto", "pallas", "pallas-interpret", "ref"))
+    # static arm
+    p.add_argument("--batch", type=int, default=4)
+    # continuous arm
+    p.add_argument("--requests", type=int, default=8)
+    p.add_argument("--request-rate", type=float, default=0.0,
+                   help="arrivals per second (0 = all at t=0)")
+    p.add_argument("--max-slots", type=int, default=4)
+    p.add_argument("--decode-chunk", type=int, default=8)
+    return p
 
-    cfg = get_arch(args.arch)
+
+def validate_args(args, cfg) -> None:
+    """Fail fast, with a clear message, before any device allocation."""
     if cfg.is_encoder_only:
-        raise SystemExit(f"{cfg.name} is encoder-only: no decode (DESIGN.md skip)")
+        raise SystemExit(
+            f"{cfg.name} is encoder-only: no autoregressive decode, nothing to "
+            "serve (DESIGN.md skip). Pick a decoder arch."
+        )
+    if args.mesh == "multipod":
+        raise SystemExit(
+            "--mesh multipod is not supported for serving: a decode engine is a "
+            "single-pod program (the pod axis is data-parallel replication — run "
+            "one engine per pod behind a router instead). Use --mesh host or "
+            "--mesh production."
+        )
+    if args.prompt_len < 1 or args.gen < 1:
+        raise SystemExit(f"--prompt-len ({args.prompt_len}) and --gen ({args.gen}) must be >= 1")
+    if args.engine == "static" and args.batch < 1:
+        raise SystemExit(f"--batch must be >= 1, got {args.batch}")
+    if args.engine == "continuous":
+        if cfg.frontend == "vision":
+            raise SystemExit(
+                f"{cfg.name} is a vlm: the continuous engine does not thread "
+                "per-request vision prefix embeddings through admission yet — "
+                "use --engine static (which feeds the prefix at prefill)."
+            )
+        if args.max_slots < 1:
+            raise SystemExit(f"--max-slots must be >= 1, got {args.max_slots}")
+        if args.requests < 1:
+            raise SystemExit(f"--requests must be >= 1, got {args.requests}")
+        if args.request_rate < 0:
+            raise SystemExit(f"--request-rate must be >= 0, got {args.request_rate}")
+        if args.decode_chunk < 1:
+            raise SystemExit(f"--decode-chunk must be >= 1, got {args.decode_chunk}")
+
+
+def run_static(args, cfg, params) -> None:
+    data = make_token_stream(args.seed, cfg.vocab_size, args.batch, args.prompt_len)
+    batch = {"tokens": jnp.asarray(data["tokens"][:, : args.prompt_len])}
+    if cfg.family == "vlm":
+        rng = np.random.RandomState(args.seed)
+        batch["prefix"] = jnp.asarray(
+            rng.randn(args.batch, cfg.num_prefix_tokens, cfg.frontend_dim).astype(np.float32) * 0.02
+        )
+    # compile, then time: prefill + whole decode is ONE dispatch; tokens
+    # accumulate on device (no per-token host sync) and cross once at the end
+    gen_fn = lambda: static_generate(
+        params, cfg, batch, args.gen, temperature=args.temperature,
+        key=jax.random.key(args.seed),
+    )
+    jax.block_until_ready(gen_fn())
+    t0 = time.time()
+    out = np.asarray(gen_fn())
+    dt = time.time() - t0
+    toks = args.batch * args.gen
+    log.info("static: %d tokens in %.3fs (%.1f tok/s, 1 dispatch)", toks, dt, toks / max(dt, 1e-9))
+    log.info("sample continuation (seq 0): %s", out[0, :16].tolist())
+
+
+def run_continuous(args, cfg, params) -> None:
+    data = make_token_stream(args.seed, cfg.vocab_size, args.requests, args.prompt_len)
+    dt = 1.0 / args.request_rate if args.request_rate > 0 else 0.0
+    requests = [
+        Request(
+            rid=i,
+            tokens=data["tokens"][i, : args.prompt_len].astype(np.int32),
+            max_new_tokens=args.gen,
+            arrival=i * dt,
+        )
+        for i in range(args.requests)
+    ]
+    engine = ServeEngine(
+        cfg,
+        params,
+        EngineConfig(
+            max_slots=args.max_slots,
+            max_seq=args.prompt_len + args.gen,
+            max_new=args.gen,
+            decode_chunk=args.decode_chunk,
+            temperature=args.temperature,
+            seed=args.seed,
+        ),
+    )
+    sched = ContinuousScheduler(engine)
+    # compile every admit size + the chunk program before timing
+    engine.warmup(requests[0].tokens, min(2, args.gen))
+    t0 = time.time()
+    completions = sched.run(requests)
+    wall = time.time() - t0
+    toks = sum(len(c.tokens) for c in completions)
+    lats = sorted(c.latency for c in completions)
+    p50 = lats[len(lats) // 2]
+    p95 = lats[min(len(lats) - 1, int(len(lats) * 0.95))]
+    log.info(
+        "continuous: %d reqs, %d tokens in %.3fs (%.1f tok/s) p50=%.3fs p95=%.3fs",
+        len(completions), toks, wall, toks / max(wall, 1e-9), p50, p95,
+    )
+    log.info(
+        "engine: %d decode chunks, %d host syncs, %d prefills (%.2f syncs/token)",
+        engine.stats["decode_chunks"], engine.stats["host_syncs"],
+        engine.stats["prefill_dispatches"], engine.stats["host_syncs"] / max(toks, 1),
+    )
+    log.info("sample continuation (rid 0): %s", completions[0].tokens[:16].tolist())
+
+
+def main() -> None:
+    args = build_parser().parse_args()
+    cfg = get_arch(args.arch)
+    validate_args(args, cfg)  # before any device/mesh work
     if args.reduced:
         cfg = reduced_variant(cfg).replace(dtype="float32", param_dtype="float32")
-    mesh = {
-        "host": make_host_mesh,
-        "production": make_production_mesh,
-        "multipod": lambda: make_production_mesh(multi_pod=True),
-    }[args.mesh]()
-
-    max_seq = args.prompt_len + args.gen
-    with jax.set_mesh(mesh):
+    cfg = cfg.replace(attn_backend=args.attn_backend)
+    mesh = {"host": make_host_mesh, "production": make_production_mesh}[args.mesh]()
+    with mesh_context(mesh):
         params = init_lm(cfg, jax.random.key(args.seed))
-        data = make_token_stream(args.seed, cfg.vocab_size, args.batch, args.prompt_len)
-        batch = {"tokens": jnp.asarray(data["tokens"])}
-        if cfg.family == "vlm":
-            rng = np.random.RandomState(args.seed)
-            batch["prefix"] = jnp.asarray(
-                rng.randn(args.batch, cfg.num_prefix_tokens, cfg.frontend_dim).astype(np.float32) * 0.02
-            )
-        state = init_lm_state(cfg, args.batch, max_seq + cfg.num_prefix_tokens)
-
-        prefill = jax.jit(lambda p, b, s: lm_prefill(p, cfg, b, s))
-        decode = jax.jit(lambda p, t, s, pos: lm_decode(p, cfg, t, s, pos))
-
-        t0 = time.time()
-        logits, state = prefill(params, batch, state)
-        logits.block_until_ready()
-        t_prefill = time.time() - t0
-        log.info("prefill %d×%d tokens in %.2fs", args.batch, args.prompt_len, t_prefill)
-
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        generated = [np.asarray(tok)]
-        t0 = time.time()
-        base = args.prompt_len + cfg.num_prefix_tokens
-        for i in range(args.gen - 1):
-            logits, state = decode(params, tok, state, jnp.asarray(base + i, jnp.int32))
-            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-            generated.append(np.asarray(tok))
-        jax.block_until_ready(tok)
-        dt = time.time() - t0
-        toks = args.batch * (args.gen - 1)
-        log.info("decoded %d tokens in %.2fs (%.1f tok/s)", toks, dt, toks / max(dt, 1e-9))
-        out = np.concatenate(generated, axis=1)
-        log.info("sample continuation (seq 0): %s", out[0, :16].tolist())
+        if args.engine == "static":
+            run_static(args, cfg, params)
+        else:
+            run_continuous(args, cfg, params)
 
 
 if __name__ == "__main__":

@@ -23,6 +23,8 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import resolve_backend
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.models.layers import apply_rope, dense_init, rms_norm
 from repro.sharding import constrain
 
@@ -292,9 +294,71 @@ def flash_attn_jax(
     return _flash(q, k, v, causal, window, softcap, q_block, kv_block, q_offset)
 
 
+# ---------------------------------------------------------------------------
+# Pallas-kernel-backed attention (dispatch backends "pallas"/"pallas-interpret")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_pallas(q, k, v, causal, window, softcap, interpret):
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, softcap=softcap, interpret=interpret
+    )
+
+
+def _flash_pallas_fwd(q, k, v, causal, window, softcap, interpret):
+    out, lse = flash_attention_pallas(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        interpret=interpret, return_lse=True,
+    )
+    return out, (q, k, v, out, lse)
+
+
+def _flash_pallas_bwd(causal, window, softcap, interpret, res, dout):
+    """Backward for the Pallas forward: the same recompute-jnp flash VJP the
+    jnp twin uses, fed the kernel's online-softmax lse as residuals (the
+    ROADMAP backward-kernel item stays open; this keeps the O(S²) matrix out
+    of HBM either way)."""
+    q, k, v, out, lse = res
+    sq, h = q.shape[1], q.shape[2]
+    q_block = min(DEFAULT_Q_BLOCK, max(128, sq // 16))
+    kv_block = min(DEFAULT_KV_BLOCK, max(128, k.shape[1] // 16))
+    # re-block the (B, Sq, H) lse into the (nq, B, H, cq) layout of
+    # _flash_bwd_impl, padding the tail with +inf-like so p underflows to 0
+    qb = min(q_block, sq)
+    pq = (-sq) % qb
+    lse_p = jnp.pad(lse, ((0, 0), (0, pq), (0, 0)), constant_values=1e30)
+    lses = lse_p.reshape(lse.shape[0], -1, qb, h).transpose(1, 0, 3, 2)
+    return _flash_bwd_impl(
+        (q, k, v, out, lses), dout, causal, window, softcap, q_block, kv_block, 0
+    )
+
+
+_flash_pallas.defvjp(_flash_pallas_fwd, _flash_pallas_bwd)
+
+
+def _attn_mix(q, k, v, cfg):
+    """Full-sequence (train/prefill) attention core, routed through the
+    kernel dispatch layer: ``cfg.attn_backend`` "auto" runs the compiled
+    Pallas flash kernel on TPU and the blocked-jnp twin elsewhere (auto
+    never interprets off-TPU); "ref" is the jnp twin explicitly — the parity
+    oracle for the kernel path."""
+    backend = resolve_backend(getattr(cfg, "attn_backend", "auto"))
+    if backend == "ref":
+        return flash_attn_jax(
+            q, k, v, causal=cfg.causal, window=cfg.sliding_window,
+            softcap=cfg.attn_logit_softcap,
+        )
+    return _flash_pallas(
+        q, k, v, cfg.causal, cfg.sliding_window, cfg.attn_logit_softcap,
+        backend == "pallas-interpret",
+    )
+
+
 def _sdpa_small(q, k, v, bias, cfg):
     """Unblocked attention for decode (Sq == 1) and tiny test shapes.
-    q:(B,Sq,H,hd) k,v:(B,Sk,K,hd); bias broadcastable to (Sq, Sk)."""
+    q:(B,Sq,H,hd) k,v:(B,Sk,K,hd); bias broadcastable to (B, Sq, Sk) — the
+    per-row form the continuous-batching engine needs (every slot sits at
+    its own position)."""
     b, sq, h, hd = q.shape
     kh = k.shape[2]
     g = h // kh
@@ -304,7 +368,7 @@ def _sdpa_small(q, k, v, bias, cfg):
     if cfg.attn_logit_softcap > 0:
         c = cfg.attn_logit_softcap
         scores = jnp.tanh(scores / c) * c
-    scores = scores + bias[None, None, None]
+    scores = scores + bias[:, None, None]
     probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
     out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
     return out.reshape(b, sq, h, hd)
@@ -315,9 +379,7 @@ def attn_train(params, x, cfg, positions=None):
     if positions is None:
         positions = jnp.arange(s, dtype=jnp.int32)
     q, k, v = _project_qkv(params, x, cfg, positions)
-    out = flash_attn_jax(
-        q, k, v, causal=cfg.causal, window=cfg.sliding_window, softcap=cfg.attn_logit_softcap
-    )
+    out = _attn_mix(q, k, v, cfg)
     out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
     return constrain(out, "batch", None, None)
 
@@ -354,9 +416,7 @@ def attn_prefill(params, x, cfg, cache):
     b, s, _ = x.shape
     positions = jnp.arange(s, dtype=jnp.int32)
     q, k, v = _project_qkv(params, x, cfg, positions)
-    out = flash_attn_jax(
-        q, k, v, causal=cfg.causal, window=cfg.sliding_window, softcap=cfg.attn_logit_softcap
-    )
+    out = _attn_mix(q, k, v, cfg)
     out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
     cl = cache["k"].shape[1]
     if s < cl:
@@ -372,29 +432,33 @@ def attn_prefill(params, x, cfg, cache):
 
 def attn_decode(params, x, cfg, cache, pos):
     """One-token decode. x: (B, 1, d); pos: scalar int32 — the index of this
-    token. Cache may be a ring buffer (SWA) or full length."""
+    token — or an (B,) int32 vector of per-row positions (the continuous-
+    batching engine decodes slots sitting at different depths in one step).
+    Cache may be a ring buffer (SWA) or full length."""
     b = x.shape[0]
-    positions = jnp.full((b, 1), pos, jnp.int32)
-    q, k_new, v_new = _project_qkv(params, x, cfg, positions)
+    pos = jnp.asarray(pos, jnp.int32)
+    posv = jnp.broadcast_to(pos.reshape(-1), (b,)) if pos.ndim else jnp.full((b,), pos)
+    q, k_new, v_new = _project_qkv(params, x, cfg, posv[:, None])
     cl = cache["k"].shape[1]
     if cfg.sliding_window > 0 and cl < 2**31:
-        slot = pos % cl
+        slot = posv % cl
     else:
-        slot = jnp.minimum(pos, cl - 1)
-    k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
-    v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+        slot = jnp.minimum(posv, cl - 1)
+    rows = jnp.arange(b, dtype=jnp.int32)
+    k = cache["k"].at[rows, slot].set(k_new[:, 0])
+    v = cache["v"].at[rows, slot].set(v_new[:, 0])
     k = constrain(k, "batch", "seq", None, None)
     v = constrain(v, "batch", "seq", None, None)
-    # absolute position of every cache slot
+    # absolute position of every cache slot, per row
+    ring_idx = jnp.arange(cl, dtype=jnp.int32)[None, :]  # (1, cl)
+    p = posv[:, None]  # (B, 1)
     if cfg.sliding_window > 0:
-        ring_idx = jnp.arange(cl, dtype=jnp.int32)
-        wrap = (pos // cl) * cl
-        k_pos = jnp.where(ring_idx <= slot, wrap + ring_idx, wrap - cl + ring_idx)
-        valid = (k_pos >= 0) & (k_pos <= pos) & (k_pos > pos - cfg.sliding_window)
+        wrap = (p // cl) * cl
+        k_pos = jnp.where(ring_idx <= slot[:, None], wrap + ring_idx, wrap - cl + ring_idx)
+        valid = (k_pos >= 0) & (k_pos <= p) & (k_pos > p - cfg.sliding_window)
     else:
-        k_pos = jnp.arange(cl, dtype=jnp.int32)
-        valid = k_pos <= pos
-    bias = jnp.where(valid, 0.0, NEG_INF)[None, :]  # (1, cl)
+        valid = ring_idx <= p
+    bias = jnp.where(valid, 0.0, NEG_INF)[:, None, :]  # (B, 1, cl)
     out = _sdpa_small(q, k, v, bias, cfg)
     out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
     return constrain(out, "batch", None, None), {"k": k, "v": v}

@@ -372,11 +372,22 @@ def shard_lm_state(state):
     return tree_map_with_path(f, state)
 
 
-def lm_prefill(params, cfg, batch, state):
-    """Consume the full prompt, fill the state, return last-position logits."""
+def lm_prefill(params, cfg, batch, state, last_index=None):
+    """Consume the full prompt, fill the state, return last-position logits.
+
+    ``last_index`` (int32 scalar or per-row (B,) vector, static or traced)
+    selects which position's logits come back — the serving engine pads
+    ragged prompts up to a bucket length and needs the logits of each row's
+    TRUE last prompt token, not the pad tail. ``None`` keeps the legacy
+    "last position" behavior."""
     x = _embed_inputs(params, cfg, batch)
     x, aux, new_state = _scan_blocks(params, cfg, x, "prefill", state=state)
-    logits = lm_logits(params, cfg, x[:, -1:])
+    if last_index is None:
+        x_last = x[:, -1:]
+    else:
+        idx = jnp.broadcast_to(jnp.asarray(last_index, jnp.int32).reshape(-1), (x.shape[0],))
+        x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+    logits = lm_logits(params, cfg, x_last)
     return logits, new_state
 
 

@@ -1,0 +1,35 @@
+"""Continuous-batching serving subsystem for the distilled server LM.
+
+* :mod:`repro.serve.engine`    — slot-based device engine: batched KV cache
+  with per-slot lengths, bucketed prefill admission, ``lax.while_loop``
+  decode chunks with on-device sampling (O(1) host syncs per chunk).
+* :mod:`repro.serve.scheduler` — request queue, admission into free slots,
+  eviction/drain of finished sequences, arrival clock.
+* :mod:`repro.serve.static`    — the static-batch baseline arm, fused into
+  a single dispatch (no per-token host sync).
+
+A/B: ``python -m benchmarks.perf_hillclimb --pair servepath``.
+"""
+from repro.serve.engine import DecodeState, EngineConfig, ServeEngine, sample_tokens
+from repro.serve.scheduler import (
+    Completion,
+    ContinuousScheduler,
+    ManualClock,
+    MonotonicClock,
+    Request,
+)
+from repro.serve.static import make_static_generator, static_generate
+
+__all__ = [
+    "DecodeState",
+    "EngineConfig",
+    "ServeEngine",
+    "sample_tokens",
+    "Completion",
+    "ContinuousScheduler",
+    "ManualClock",
+    "MonotonicClock",
+    "Request",
+    "make_static_generator",
+    "static_generate",
+]

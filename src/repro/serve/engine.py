@@ -1,0 +1,307 @@
+"""Slot-based continuous-batching engine for the distilled server LM.
+
+The engine owns a device-resident batched decode state: every request lives
+in one of ``max_slots`` slots of the KV-cache / SSM-state pytree, with its
+OWN position counter — :func:`repro.models.attention.attn_decode` accepts a
+per-row position vector, so slots at different depths decode in one step.
+
+The two jitted programs:
+
+  * **admit** — prefill an admission burst of prompts (padded up to a
+    ``prefill_bucket`` multiple so ragged lengths share compilations; the
+    pad tail is never attended because decode overwrites position ``p``
+    before reading it) in one dispatch per (bucket, power-of-two group),
+    splice each row's state into its slot, and sample each first token from
+    that row's true-last-prompt-position logits.
+  * **decode chunk** — a ``lax.while_loop`` of up to ``decode_chunk`` steps:
+    batched one-token decode over ALL slots, on-device greedy/temperature
+    sampling, per-slot output accumulation and finish bookkeeping. Zero
+    per-token host syncs — the host reads back only the tiny
+    ``(active, n_out)`` vectors once per chunk (``sync``), and a finished
+    request's token row once at eviction (``fetch``).
+
+Inactive slots ride along in the batched decode (their position is frozen,
+so they idempotently rewrite one cache slot) — that is the cost of a fixed
+batch shape, and exactly what admission refills.
+
+``stats`` counts dispatches and host syncs; tests pin host syncs = O(1) per
+decode chunk, independent of chunk length and token count.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import init_lm_state, lm_decode, lm_prefill
+
+
+def sample_tokens(logits: jax.Array, key: jax.Array, temperature: float) -> jax.Array:
+    """On-device sampling. logits: (B, V) -> (B,) int32. ``temperature <= 0``
+    is greedy (argmax); otherwise temperature-scaled categorical."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits.astype(jnp.float32) / temperature, axis=-1).astype(
+        jnp.int32
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Continuous-batching knobs (the model itself comes from ModelConfig)."""
+
+    max_slots: int = 4  # concurrent sequences resident on device
+    max_seq: int = 256  # per-slot cache length (prompt + generation)
+    max_new: int = 64  # output-buffer width (per-request budget <= this)
+    decode_chunk: int = 16  # decode steps per dispatch (and per host sync)
+    prefill_bucket: int = 32  # prompts pad up to a multiple of this
+    temperature: float = 0.0  # 0 => greedy
+    eos_token: int = -1  # <0 => disabled (synthetic streams have no EOS)
+    seed: int = 0
+
+
+class DecodeState(NamedTuple):
+    """The device-resident per-slot state threaded through decode chunks."""
+
+    kv: Any  # model state pytree, leaves (G, max_slots, ...)
+    last_tok: jax.Array  # (S, 1) int32 — last sampled token per slot
+    pos: jax.Array  # (S,) int32 — position the next decode step writes
+    active: jax.Array  # (S,) bool
+    out: jax.Array  # (S, max_new) int32 — generated tokens per slot
+    n_out: jax.Array  # (S,) int32 — tokens generated so far
+    budget: jax.Array  # (S,) int32 — per-request generation budget
+    rng: jax.Array  # PRNG key for sampling
+
+
+class ServeEngine:
+    """Device side of the serving stack; :class:`repro.serve.scheduler.
+    ContinuousScheduler` drives it from the request queue."""
+
+    def __init__(self, cfg, params, ecfg: EngineConfig):
+        if cfg.is_encoder_only:
+            raise ValueError(f"{cfg.name} is encoder-only: nothing to decode")
+        if cfg.frontend == "vision":
+            raise ValueError(
+                f"{cfg.name} needs per-request vision prefix embeddings, which "
+                "the slot engine does not thread through admission yet; serve "
+                "vlm archs with the static batch path"
+            )
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self.free_slots: List[int] = list(range(ecfg.max_slots))
+        self._state: Optional[DecodeState] = None
+        # jit caches per abstract (N, bucket) tokens shape — one wrapper serves
+        # every admission-burst size/bucket combination
+        self._admit_jit = jax.jit(self._admit_fn)
+        donate = () if jax.default_backend() == "cpu" else (1,)
+        self._chunk_jit = jax.jit(self._chunk_fn, donate_argnums=donate)
+        self.reset()
+
+    # -- device programs ----------------------------------------------------
+
+    def _admit_fn(self, params, ds: DecodeState, tokens, slots, true_lens, budgets):
+        """Batched admission: prefill N prompts (N is a compile-time constant
+        per call — the scheduler's admission burst) in ONE dispatch and
+        splice each row into its slot. tokens: (N, Lb); slots/true_lens/
+        budgets: (N,) int32. The sampling key comes from the state's own rng
+        chain — no host-side key dispatch per admission."""
+        cfg, e = self.cfg, self.ecfg
+        n = tokens.shape[0]
+        rng, key = jax.random.split(ds.rng)
+        st1 = init_lm_state(cfg, n, e.max_seq)
+        logits, st1 = lm_prefill(params, cfg, {"tokens": tokens}, st1, last_index=true_lens - 1)
+        kv = ds.kv
+        for i in range(n):  # n <= max_slots: unrolled per-row state splice
+            kv = jax.tree_util.tree_map(
+                lambda big, one: jax.lax.dynamic_update_slice(
+                    big,
+                    jax.lax.dynamic_slice_in_dim(one, i, 1, axis=1).astype(big.dtype),
+                    (0, slots[i]) + (0,) * (big.ndim - 2),
+                ),
+                kv,
+                st1,
+            )
+        toks0 = sample_tokens(logits[:, 0], key, e.temperature)  # (N,)
+        return DecodeState(
+            kv=kv,
+            last_tok=ds.last_tok.at[slots, 0].set(toks0),
+            pos=ds.pos.at[slots].set(true_lens),
+            active=ds.active.at[slots].set(budgets > 1),
+            out=ds.out.at[slots].set(0).at[slots, 0].set(toks0),
+            n_out=ds.n_out.at[slots].set(1),
+            budget=ds.budget.at[slots].set(budgets),
+            rng=rng,
+        )
+
+    def _chunk_fn(self, params, ds: DecodeState):
+        cfg, e = self.cfg, self.ecfg
+        rows = jnp.arange(e.max_slots, dtype=jnp.int32)
+
+        def cond(carry):
+            i, s = carry
+            return (i < e.decode_chunk) & jnp.any(s.active)
+
+        def body(carry):
+            i, s = carry
+            logits, kv = lm_decode(params, cfg, s.last_tok, s.kv, s.pos)
+            rng, ks = jax.random.split(s.rng)
+            nxt = sample_tokens(logits[:, -1], ks, e.temperature)
+            write = s.active & (s.n_out < e.max_new)
+            idx = jnp.minimum(s.n_out, e.max_new - 1)
+            out = s.out.at[rows, idx].set(jnp.where(write, nxt, s.out[rows, idx]))
+            n_out = s.n_out + write.astype(jnp.int32)
+            finished = n_out >= s.budget
+            if e.eos_token >= 0:
+                finished |= (nxt == e.eos_token) & s.active
+            return i + 1, DecodeState(
+                kv=kv,
+                last_tok=jnp.where(s.active[:, None], nxt[:, None], s.last_tok),
+                pos=s.pos + s.active.astype(jnp.int32),
+                active=s.active & ~finished,
+                out=out,
+                n_out=n_out,
+                budget=s.budget,
+                rng=rng,
+            )
+
+        _, ds = jax.lax.while_loop(cond, body, (jnp.zeros((), jnp.int32), ds))
+        return ds
+
+    # -- host API -----------------------------------------------------------
+
+    def reset(self) -> None:
+        """(Re)build the device state: all slots free, caches zeroed, stats
+        zeroed (so a warm-up run never contaminates timed counters)."""
+        cfg, e = self.cfg, self.ecfg
+        self.free_slots = list(range(e.max_slots))
+        self.stats: Dict[str, int] = {
+            "admitted": 0,
+            "prefill_dispatches": 0,
+            "decode_chunks": 0,
+            "host_syncs": 0,
+            "evicted": 0,
+        }
+        self._state = DecodeState(
+            kv=init_lm_state(cfg, e.max_slots, e.max_seq),
+            last_tok=jnp.zeros((e.max_slots, 1), jnp.int32),
+            pos=jnp.zeros((e.max_slots,), jnp.int32),
+            active=jnp.zeros((e.max_slots,), bool),
+            out=jnp.zeros((e.max_slots, e.max_new), jnp.int32),
+            n_out=jnp.zeros((e.max_slots,), jnp.int32),
+            budget=jnp.zeros((e.max_slots,), jnp.int32),
+            rng=jax.random.key(e.seed),
+        )
+
+    def bucket_len(self, prompt_len: int) -> int:
+        if self.cfg.family in ("ssm", "hybrid"):
+            # a recurrent carry (mamba/xlstm state) absorbs pad tokens — the
+            # prefill must stop exactly at the prompt end, so recurrent archs
+            # compile one prefill per distinct prompt length instead of per
+            # bucket. Attention caches are position-addressed: the pad tail
+            # is overwritten before it is ever attended, so bucketing is safe.
+            return prompt_len
+        b = self.ecfg.prefill_bucket
+        lb = min(-(-prompt_len // b) * b, self.ecfg.max_seq)
+        if self.cfg.sliding_window > 0:
+            # the SWA cache is a ring of min(window, max_seq) slots holding
+            # the LAST cache-len prefill positions; padding past the ring
+            # length would evict real prompt tokens in favor of pad garbage.
+            cl = min(self.cfg.sliding_window, self.ecfg.max_seq)
+            lb = prompt_len if prompt_len > cl else min(lb, cl)
+        return lb
+
+    def admit(self, tokens: np.ndarray, max_new_tokens: int) -> int:
+        """Prefill one prompt (1-D int32) into a free slot; returns its id."""
+        return self.admit_many([(tokens, max_new_tokens)])[0]
+
+    def admit_many(self, requests) -> List[int]:
+        """Admit several prompts; returns their slots, input-aligned.
+
+        Prompts sharing a bucket length prefill together: each group is
+        split into power-of-two admission batches (4+2+1…) so the set of
+        compiled (bucket, N) programs stays O(log max_slots) per bucket
+        instead of one per burst size — a freed-slot refill after warm-up
+        never hits the compiler."""
+        e = self.ecfg
+        prepped = []
+        for tokens, max_new_tokens in requests:
+            tokens = np.asarray(tokens, np.int32).reshape(-1)
+            if len(tokens) + max_new_tokens > e.max_seq:
+                raise ValueError(
+                    f"prompt ({len(tokens)}) + budget ({max_new_tokens}) exceeds max_seq={e.max_seq}"
+                )
+            if not 1 <= max_new_tokens <= e.max_new:
+                raise ValueError(
+                    f"max_new_tokens must be in [1, {e.max_new}], got {max_new_tokens}"
+                )
+            prepped.append((tokens, max_new_tokens))
+        if len(prepped) > len(self.free_slots):
+            raise RuntimeError(
+                f"{len(prepped)} admissions but only {len(self.free_slots)} free slots"
+            )
+        by_bucket: Dict[int, List[int]] = {}
+        for i, (tokens, _) in enumerate(prepped):
+            by_bucket.setdefault(self.bucket_len(len(tokens)), []).append(i)
+        slots = [0] * len(prepped)
+        for lb, idxs in by_bucket.items():
+            while idxs:
+                n = 1 << (len(idxs).bit_length() - 1)  # largest pow2 <= len
+                group, idxs = idxs[:n], idxs[n:]
+                padded = np.zeros((n, lb), np.int32)
+                lens = np.zeros((n,), np.int32)
+                buds = np.zeros((n,), np.int32)
+                gslots = [self.free_slots.pop() for _ in group]
+                for j, i in enumerate(group):
+                    tokens, budget = prepped[i]
+                    padded[j, : len(tokens)] = tokens
+                    lens[j], buds[j] = len(tokens), budget
+                    slots[i] = gslots[j]
+                self._state = self._admit_jit(
+                    self.params,
+                    self._state,
+                    jnp.asarray(padded),
+                    jnp.asarray(gslots, jnp.int32),
+                    jnp.asarray(lens),
+                    jnp.asarray(buds),
+                )
+                self.stats["admitted"] += n
+                self.stats["prefill_dispatches"] += 1
+        return slots
+
+    def warmup(self, prompt: np.ndarray, budget: int = 2) -> None:
+        """Compile every admission program a serving run can hit — one per
+        power-of-two burst size up to ``max_slots`` for ``prompt``'s bucket —
+        plus the decode-chunk program, then reset. Without this, the first
+        burst of a previously-unseen size pays XLA compilation mid-serving."""
+        budget = min(budget, self.ecfg.max_new)
+        n = 1
+        while n <= self.ecfg.max_slots:
+            self.reset()
+            self.admit_many([(prompt, budget)] * n)
+            self.decode_chunk()
+            self.sync()
+            n *= 2
+        self.reset()
+
+    def decode_chunk(self) -> None:
+        """Up to ``decode_chunk`` batched decode steps in ONE dispatch."""
+        self._state = self._chunk_jit(self.params, self._state)
+        self.stats["decode_chunks"] += 1
+
+    def sync(self):
+        """The once-per-chunk host sync: (active, n_out) as numpy, fetched
+        in a single device-to-host transfer."""
+        active, n_out = jax.device_get((self._state.active, self._state.n_out))
+        self.stats["host_syncs"] += 1
+        return active, n_out
+
+    def fetch(self, slot: int, n_out: int) -> np.ndarray:
+        """Copy a finished slot's generated tokens to host and free the slot."""
+        toks = np.asarray(self._state.out[slot])[:n_out]
+        self.free_slots.append(slot)
+        self.stats["evicted"] += 1
+        return toks

@@ -1,0 +1,132 @@
+"""Request scheduler for the continuous-batching engine.
+
+The host-side loop around :class:`repro.serve.engine.ServeEngine`:
+
+  * requests become visible at their ``arrival`` time (a ``Clock`` — real
+    monotonic time when serving, a :class:`ManualClock` in tests/benchmarks
+    that only advances when the loop sleeps, keeping admission order
+    deterministic);
+  * queued prompts are admitted into free slots in bursts (one batched
+    prefill dispatch per bucket/power-of-two group), interleaved with decode
+    chunks over everything resident;
+  * after each chunk ONE host sync reads the tiny per-slot status, finished
+    sequences are drained (token row copied out, slot freed) and the freed
+    slots are immediately refillable.
+
+Per decoded token the host does O(1/decode_chunk) syncs — the legacy static
+path did one ``np.asarray`` per token.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serve.engine import ServeEngine
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray  # (L,) int32 prompt
+    max_new_tokens: int
+    arrival: float = 0.0  # seconds since scheduler start
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    prompt_len: int
+    tokens: np.ndarray  # (n,) int32 generated tokens (incl. first)
+    arrival: float
+    admitted: float
+    finished: float
+
+    @property
+    def latency(self) -> float:
+        return self.finished - self.arrival
+
+
+class MonotonicClock:
+    """Real wall-clock: origin at construction."""
+
+    def __init__(self):
+        self._t0 = time.monotonic()
+
+    def now(self) -> float:
+        return time.monotonic() - self._t0
+
+    def sleep(self, dt: float) -> None:
+        if dt > 0:
+            time.sleep(dt)
+
+
+class ManualClock:
+    """Deterministic test clock: time moves only via sleep()/advance(), plus
+    an optional fixed ``tick`` per now() call — the tick stands in for decode
+    wall time, so staggered arrivals become visible MID-decode and the
+    admit-into-freed-slot path gets exercised deterministically."""
+
+    def __init__(self, tick: float = 0.0):
+        self._t = 0.0
+        self._tick = tick
+
+    def now(self) -> float:
+        self._t += self._tick
+        return self._t
+
+    def sleep(self, dt: float) -> None:
+        self._t += max(dt, 0.0)
+
+    advance = sleep
+
+
+class ContinuousScheduler:
+    """Admission + eviction loop; returns one Completion per request."""
+
+    def __init__(self, engine: ServeEngine, clock=None):
+        self.engine = engine
+        self.clock = clock
+
+    def run(self, requests: Sequence[Request]) -> List[Completion]:
+        eng = self.engine
+        clock = self.clock or MonotonicClock()
+        eng.reset()
+        pending = deque(sorted(requests, key=lambda r: r.arrival))
+        queue: deque = deque()
+        resident: Dict[int, tuple] = {}  # slot -> (request, admitted_time)
+        done: List[Completion] = []
+
+        while pending or queue or resident:
+            now = clock.now()
+            while pending and pending[0].arrival <= now:
+                queue.append(pending.popleft())
+            if queue and eng.free_slots:
+                burst = [queue.popleft() for _ in range(min(len(queue), len(eng.free_slots)))]
+                slots = eng.admit_many([(r.tokens, r.max_new_tokens) for r in burst])
+                t_admit = clock.now()
+                for slot, req in zip(slots, burst):
+                    resident[slot] = (req, t_admit)
+            if resident:
+                eng.decode_chunk()
+                active, n_out = eng.sync()
+                t_done = clock.now()
+                for slot in [s for s in resident if not active[s]]:
+                    req, t_admit = resident.pop(slot)
+                    toks = eng.fetch(slot, int(n_out[slot]))
+                    done.append(
+                        Completion(
+                            rid=req.rid,
+                            prompt_len=len(req.tokens),
+                            tokens=toks,
+                            arrival=req.arrival,
+                            admitted=t_admit,
+                            finished=t_done,
+                        )
+                    )
+            elif pending:
+                clock.sleep(pending[0].arrival - now)
+        return sorted(done, key=lambda c: c.rid)

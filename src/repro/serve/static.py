@@ -1,0 +1,70 @@
+"""Static-batch generation: the legacy serving baseline, minus its per-token
+host sync.
+
+The original ``launch/serve.py`` loop dispatched one jitted decode per token
+and ``np.asarray``-ed every sampled token back to host — O(gen) dispatches
+and syncs per batch. Here prefill + the whole greedy/temperature decode is
+ONE jitted program: tokens accumulate on device in a ``lax.scan`` and cross
+to host once at the end. This is the ``--engine static`` baseline arm of the
+``servepath`` A/B; the continuous engine (:mod:`repro.serve.engine`) beats
+it by admitting work as it arrives instead of waiting for a full batch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import init_lm_state, lm_decode, lm_prefill
+from repro.serve.engine import sample_tokens
+
+
+@functools.lru_cache(maxsize=64)
+def make_static_generator(cfg, gen: int, temperature: float = 0.0):
+    """Returns jitted ``f(params, batch, state, key) -> (B, gen) int32`` —
+    prefill plus ``gen`` sampled tokens in a single dispatch. Cached per
+    (cfg, gen, temperature) — ModelConfig is frozen/hashable — so repeated
+    ``static_generate`` calls reuse one jit wrapper (and its compile cache)
+    instead of re-tracing every batch."""
+
+    def generate(params, batch: Dict[str, jax.Array], state, key):
+        prompt_len = batch["tokens"].shape[1]
+        base = prompt_len + (batch["prefix"].shape[1] if "prefix" in batch else 0)
+        logits, state = lm_prefill(params, cfg, batch, state)
+        key, k0 = jax.random.split(key)
+        tok0 = sample_tokens(logits[:, -1], k0, temperature)
+
+        def body(carry, pos):
+            tok, st, k = carry
+            lg, st = lm_decode(params, cfg, tok, st, pos)
+            k, ks = jax.random.split(k)
+            nxt = sample_tokens(lg[:, -1], ks, temperature)
+            return (nxt[:, None], st, k), nxt
+
+        (_, _, _), rest = jax.lax.scan(
+            body, (tok0[:, None], state, key), base + jnp.arange(gen - 1, dtype=jnp.int32)
+        )
+        return jnp.concatenate([tok0[:, None], rest.T], axis=1)
+
+    return jax.jit(generate)
+
+
+def static_generate(
+    params,
+    cfg,
+    batch: Dict[str, jax.Array],
+    gen: int,
+    *,
+    temperature: float = 0.0,
+    max_seq: Optional[int] = None,
+    key: Optional[jax.Array] = None,
+):
+    """Convenience wrapper: build the decode state and run one static batch.
+    ``batch["tokens"]``: (B, L) int32. Returns (B, gen) int32 on device."""
+    b, prompt_len = batch["tokens"].shape
+    prefix = batch["prefix"].shape[1] if "prefix" in batch else 0
+    state = init_lm_state(cfg, b, (max_seq or (prompt_len + gen)) + prefix)
+    key = jax.random.key(0) if key is None else key
+    return make_static_generator(cfg, gen, temperature)(params, batch, state, key)

@@ -104,6 +104,19 @@ def test_update_weights_stays_on_simplex(n, mu):
     np.testing.assert_allclose(w.sum(), 1.0, atol=1e-5)
 
 
+def test_update_weights_kernel_backend_matches_ref():
+    """The fused Eq. 11/12 step (ghm_ce weighted=False + the kernel's w
+    cotangent) must follow the same trajectory as the jnp ref path."""
+    n, b, c = 3, 16, 6
+    la = jax.random.normal(jax.random.key(0), (n, b, c)) * 2
+    labels = jax.random.randint(jax.random.key(1), (b,), 0, c)
+    w_ref = w_ker = uniform_weights(n)
+    for _ in range(3):
+        w_ref = update_weights(w_ref, la, labels, 0.05, backend="ref")
+        w_ker = update_weights(w_ker, la, labels, 0.05, backend="pallas-interpret")
+    np.testing.assert_allclose(np.asarray(w_ref), np.asarray(w_ker), atol=1e-6)
+
+
 def test_update_weights_upweights_better_client():
     """Client 0 predicts labels perfectly, client 1 is anti-correlated —
     Eq. 12 must move weight toward client 0."""

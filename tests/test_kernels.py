@@ -16,6 +16,7 @@ from repro.kernels import (
     flash_attention_ref,
     ghm_ce,
     ghm_ce_ref,
+    kernel_arm,
 )
 
 
@@ -103,7 +104,7 @@ def test_flash_attention_matches_ref(b, sq, h, kh, hd, causal, window, cap):
     q = jax.random.normal(jax.random.key(0), (b, sq, h, hd))
     k = jax.random.normal(jax.random.key(1), (b, sq, kh, hd))
     v = jax.random.normal(jax.random.key(2), (b, sq, kh, hd))
-    got = flash_attention(q, k, v, causal=causal, window=window, softcap=cap, block_q=16, block_kv=32)
+    got = flash_attention(q, k, v, causal=causal, window=window, softcap=cap, backend=kernel_arm(), block_q=16, block_kv=32)
     want = flash_attention_ref(q, k, v, causal=causal, window=window, softcap=cap)
     np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
 
@@ -114,7 +115,7 @@ def test_flash_attention_dtypes(dtype):
     q = jax.random.normal(jax.random.key(0), (b, s, h, hd)).astype(dtype)
     k = jax.random.normal(jax.random.key(1), (b, s, kh, hd)).astype(dtype)
     v = jax.random.normal(jax.random.key(2), (b, s, kh, hd)).astype(dtype)
-    got = flash_attention(q, k, v, causal=True, block_q=16, block_kv=16)
+    got = flash_attention(q, k, v, causal=True, backend=kernel_arm(), block_q=16, block_kv=16)
     want = flash_attention_ref(q, k, v, causal=True)
     tol = 2e-5 if dtype == jnp.float32 else 3e-2
     np.testing.assert_allclose(

@@ -1,0 +1,264 @@
+"""Serving-path tests.
+
+ * flash-attention kernel vs the jnp twin INSIDE full model forwards
+   (attn_prefill / attn_train), incl. causal + sliding window + ragged tail,
+   and gradient parity through the Pallas custom-vjp;
+ * attention backend dispatch rules (auto never interprets off-TPU);
+ * continuous engine vs fused static batch: exact greedy token parity for
+   identical prompts (incl. slot reuse and bucketed ragged prompts);
+ * the fused static path vs the legacy per-token decode loop;
+ * O(1) host syncs per decode chunk (the zero-per-token-sync contract);
+ * scheduler invariants under randomized admission: every request drains,
+   no slot leaks, slots never double-booked;
+ * launch.serve fail-fast argument audit.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig
+from repro.kernels.dispatch import resolve_backend
+from repro.models import init_lm, init_lm_state, lm_decode, lm_prefill
+from repro.models.transformer import lm_loss
+from repro.serve import (
+    ContinuousScheduler,
+    EngineConfig,
+    ManualClock,
+    Request,
+    ServeEngine,
+    static_generate,
+)
+
+
+def _mk(**kw):
+    base = dict(
+        name="t", family="dense", num_layers=2, d_model=32, num_heads=4,
+        num_kv_heads=2, head_dim=8, d_ff=64, vocab_size=64, scan_layers=False,
+        remat=False, dtype="float32", param_dtype="float32",
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# flash-attention kernel inside the model forward
+
+
+@pytest.mark.parametrize(
+    "kw,seq",
+    [
+        ({}, 32),  # causal, block-aligned
+        ({}, 33),  # ragged tail (not a block multiple)
+        ({"sliding_window": 8}, 29),  # causal + window + ragged
+        ({"attn_logit_softcap": 20.0}, 16),  # softcap chain
+    ],
+    ids=["causal", "ragged", "window", "softcap"],
+)
+def test_prefill_kernel_matches_ref_in_model(kw, seq):
+    """kernel_backend='ref' vs 'pallas-interpret' produce matching prefill
+    logits through the full attn_prefill forward (acceptance criterion)."""
+    cfg = _mk(**kw)
+    params = init_lm(cfg, jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (2, seq), 0, cfg.vocab_size)
+    l_ref, st_ref = lm_prefill(
+        params, cfg.replace(attn_backend="ref"), {"tokens": tokens},
+        init_lm_state(cfg, 2, seq + 4),
+    )
+    l_pal, st_pal = lm_prefill(
+        params, cfg.replace(attn_backend="pallas-interpret"), {"tokens": tokens},
+        init_lm_state(cfg, 2, seq + 4),
+    )
+    np.testing.assert_allclose(np.asarray(l_ref), np.asarray(l_pal), rtol=1e-4, atol=1e-4)
+    for a, b in zip(jax.tree_util.tree_leaves(st_ref), jax.tree_util.tree_leaves(st_pal)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_train_grads_kernel_matches_ref():
+    """The Pallas forward's custom-vjp (jnp recompute backward fed the
+    kernel's lse) matches plain autodiff of the jnp twin in attn_train."""
+    cfg = _mk(sliding_window=8)
+    params = init_lm(cfg, jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (2, 17), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    g_ref = jax.grad(lambda p: lm_loss(p, cfg.replace(attn_backend="ref"), batch)[0])(params)
+    g_pal = jax.grad(
+        lambda p: lm_loss(p, cfg.replace(attn_backend="pallas-interpret"), batch)[0]
+    )(params)
+    for a, b in zip(jax.tree_util.tree_leaves(g_ref), jax.tree_util.tree_leaves(g_pal)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+def test_attn_backend_dispatch_rules():
+    if jax.default_backend() == "tpu":
+        assert resolve_backend("auto") == "pallas"
+    else:
+        # auto never interprets off-TPU; explicit pallas is an error, not a fallback
+        assert resolve_backend("auto") == "ref"
+        with pytest.raises(ValueError, match="requires a TPU"):
+            resolve_backend("pallas")
+    assert resolve_backend("pallas-interpret") == "pallas-interpret"
+
+
+# ---------------------------------------------------------------------------
+# continuous engine vs static batch
+
+
+@pytest.mark.parametrize("kw", [{}, {"sliding_window": 8}], ids=["dense", "swa"])
+def test_engine_matches_static_tokens(kw):
+    """Identical prompts through the slot engine and the fused static batch
+    yield identical greedy tokens — including ragged bucketed prompts,
+    prompts longer than the SWA window, and slot reuse (requests > slots)."""
+    cfg = _mk(**kw)
+    params = init_lm(cfg, jax.random.key(0))
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab_size, size=n).astype(np.int32) for n in (7, 12, 12, 5, 13)]
+    gen = 8
+    refs = [
+        np.asarray(static_generate(params, cfg, {"tokens": jnp.asarray(p[None])}, gen, max_seq=48))[0]
+        for p in prompts
+    ]
+    eng = ServeEngine(
+        cfg, params,
+        EngineConfig(max_slots=2, max_seq=48, max_new=gen, decode_chunk=3, prefill_bucket=8),
+    )
+    comps = ContinuousScheduler(eng, clock=ManualClock()).run(
+        [Request(rid=i, tokens=p, max_new_tokens=gen) for i, p in enumerate(prompts)]
+    )
+    assert [c.rid for c in comps] == list(range(len(prompts)))
+    for c, ref in zip(comps, refs):
+        np.testing.assert_array_equal(c.tokens, ref)
+
+
+def test_static_generate_matches_legacy_loop():
+    """The fused scan accumulates the same greedy tokens the retired
+    per-token host-sync loop produced."""
+    cfg = _mk()
+    params = init_lm(cfg, jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (2, 10), 0, cfg.vocab_size)
+    gen = 6
+    got = np.asarray(static_generate(params, cfg, {"tokens": tokens}, gen))
+
+    state = init_lm_state(cfg, 2, 10 + gen)
+    logits, state = lm_prefill(params, cfg, {"tokens": tokens}, state)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    out = [np.asarray(tok)]
+    for i in range(gen - 1):
+        logits, state = lm_decode(params, cfg, tok, state, jnp.asarray(10 + i, jnp.int32))
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out.append(np.asarray(tok))
+    np.testing.assert_array_equal(got, np.concatenate(out, axis=1))
+
+
+def test_decode_host_syncs_O1_per_chunk():
+    """The zero-per-token-sync contract: host syncs equal decode chunks
+    (each a single dispatch of up to ``decode_chunk`` steps), so generating
+    more tokens with the same chunking adds syncs sublinearly in tokens —
+    the legacy loop did one sync per token."""
+    cfg = _mk()
+    params = init_lm(cfg, jax.random.key(0))
+    prompt = np.arange(8, dtype=np.int32) % cfg.vocab_size
+    counts = {}
+    for gen in (4, 16):
+        eng = ServeEngine(
+            cfg, params,
+            EngineConfig(max_slots=1, max_seq=40, max_new=16, decode_chunk=8),
+        )
+        ContinuousScheduler(eng, clock=ManualClock()).run(
+            [Request(rid=0, tokens=prompt, max_new_tokens=gen)]
+        )
+        assert eng.stats["host_syncs"] == eng.stats["decode_chunks"]
+        # gen-1 decode steps in ceil((gen-1)/chunk) dispatches
+        assert eng.stats["decode_chunks"] == -(-(gen - 1) // 8)
+        counts[gen] = eng.stats["host_syncs"]
+    assert counts[16] < 16  # not one sync per token
+    assert counts[16] == 2 and counts[4] == 1
+
+
+def test_scheduler_randomized_invariants():
+    """Randomized admission: every request drains exactly once with its full
+    budget, slots are never double-booked, and no slot leaks."""
+    cfg = _mk()
+    params = init_lm(cfg, jax.random.key(0))
+    eng = ServeEngine(
+        cfg, params,
+        EngineConfig(max_slots=3, max_seq=48, max_new=10, decode_chunk=4, prefill_bucket=8),
+    )
+    rng = np.random.RandomState(7)
+    requests = [
+        Request(
+            rid=i,
+            tokens=rng.randint(0, cfg.vocab_size, size=rng.randint(3, 20)).astype(np.int32),
+            max_new_tokens=int(rng.randint(1, 11)),
+            arrival=float(rng.uniform(0.0, 5.0)),
+        )
+        for i in range(11)
+    ]
+    # ticking clock: time passes per scheduler iteration, so arrivals land
+    # MID-decode and freed slots are refilled while others keep decoding
+
+    class AuditEngine:
+        """Delegating wrapper asserting slot hygiene on every transition."""
+
+        def __init__(self, inner):
+            self._e = inner
+            self.in_use = set()
+
+        def __getattr__(self, name):
+            return getattr(self._e, name)
+
+        def admit_many(self, requests):
+            slots = self._e.admit_many(requests)
+            assert len(set(slots)) == len(slots), f"burst reused a slot: {slots}"
+            for slot in slots:
+                assert slot not in self.in_use, f"slot {slot} double-booked"
+                self.in_use.add(slot)
+            return slots
+
+        def fetch(self, slot, n_out):
+            assert slot in self.in_use
+            self.in_use.discard(slot)
+            return self._e.fetch(slot, n_out)
+
+    audit = AuditEngine(eng)
+    comps = ContinuousScheduler(audit, clock=ManualClock(tick=0.3)).run(requests)
+    assert sorted(c.rid for c in comps) == sorted(r.rid for r in requests)
+    by_rid = {c.rid: c for c in comps}
+    for r in requests:
+        c = by_rid[r.rid]
+        assert len(c.tokens) == r.max_new_tokens  # no EOS configured: full budget
+        assert c.admitted >= r.arrival and c.finished >= c.admitted
+    assert not audit.in_use
+    assert sorted(eng.free_slots) == [0, 1, 2]  # no slot leak
+    assert not bool(np.asarray(eng._state.active).any())
+    assert eng.stats["evicted"] == eng.stats["admitted"] == len(requests)
+
+
+# ---------------------------------------------------------------------------
+# launch.serve argument audit
+
+
+def test_serve_args_fail_fast():
+    from repro.launch.serve import build_parser, validate_args
+    from repro.config import get_arch
+
+    parser = build_parser()
+    dec = get_arch("smollm-135m")
+    enc = get_arch("hubert-xlarge")
+
+    with pytest.raises(SystemExit, match="encoder-only"):
+        validate_args(parser.parse_args([]), enc)
+    with pytest.raises(SystemExit, match="vlm"):
+        validate_args(parser.parse_args([]), get_arch("phi-3-vision-4.2b"))
+    validate_args(parser.parse_args(["--engine", "static"]), get_arch("phi-3-vision-4.2b"))
+    with pytest.raises(SystemExit, match="multipod"):
+        validate_args(parser.parse_args(["--mesh", "multipod"]), dec)
+    with pytest.raises(SystemExit, match="max-slots"):
+        validate_args(parser.parse_args(["--max-slots", "0"]), dec)
+    with pytest.raises(SystemExit, match="gen"):
+        validate_args(parser.parse_args(["--gen", "0"]), dec)
+    validate_args(parser.parse_args([]), dec)  # defaults pass
