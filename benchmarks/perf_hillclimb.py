@@ -385,6 +385,96 @@ def pair_servepath(out):
     out["servepath:continuous_vs_static"] = rec
 
 
+def pair_decodepath(out):
+    """Decode-path A/B (the paged-KV PR's headline number): the SAME
+    continuous engine + scheduler on both arms, R staggered requests with
+    RAGGED budgets — only the KV layout differs. ``paged`` runs the KVPool +
+    flash-decode path (``decode_backend="auto"``: the compiled Pallas kernel
+    on TPU, its blocked-jnp ref twin elsewhere — auto never interprets, so
+    the CPU number is an honest layout comparison); ``dense`` is the
+    per-slot-rectangle + small-SDPA baseline. Median of interleaved repeats,
+    staggered arrivals calibrated exactly like servepath."""
+    import jax
+    import numpy as np
+
+    from repro.config import get_arch, reduced_variant
+    from repro.kernels.dispatch import resolve_backend
+    from repro.models import init_lm
+    from repro.serve import ContinuousScheduler, EngineConfig, Request, ServeEngine
+
+    cfg = reduced_variant(get_arch("smollm-135m")).replace(
+        dtype="float32", param_dtype="float32", num_layers=4, d_model=256,
+    )
+    params = init_lm(cfg, jax.random.key(0))
+    R, PROMPT, MAX_GEN, SLOTS, REPEATS = 16, 32, 48, 4, 5
+    PAGE = 16
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab_size, size=PROMPT).astype(np.int32) for _ in range(R)]
+    budgets = [int(g) for g in rng.randint(8, MAX_GEN + 1, size=R)]  # ragged
+
+    def mk_engine(layout):
+        return ServeEngine(
+            cfg, params,
+            EngineConfig(
+                max_slots=SLOTS, max_seq=PROMPT + MAX_GEN, max_new=MAX_GEN,
+                decode_chunk=8, kv_layout=layout, page_size=PAGE,
+            ),
+        )
+
+    engines = {"dense": mk_engine("dense"), "paged": mk_engine("paged")}
+    scheds = {k: ContinuousScheduler(e) for k, e in engines.items()}
+
+    def run_arm(name, dt):
+        t0 = time.time()
+        comps = scheds[name].run(
+            [Request(rid=i, tokens=prompts[i], max_new_tokens=budgets[i], arrival=i * dt)
+             for i in range(R)]
+        )
+        wall = time.time() - t0
+        return sum(len(c.tokens) for c in comps) / max(wall, 1e-9), [c.latency for c in comps]
+
+    # warm both compile caches, calibrate arrivals to the dense arm's service
+    # time (both arms then see the identical arrival schedule)
+    for name, eng in engines.items():
+        eng.warmup(prompts[0])
+        run_arm(name, 0.0)
+    t0 = time.time()
+    run_arm("dense", 0.0)
+    dt = max((time.time() - t0) / (2 * R), 1e-3)
+
+    runs = {"dense": [], "paged": []}
+    for _ in range(REPEATS):
+        for name in ("dense", "paged"):
+            runs[name].append(run_arm(name, dt))
+    pct = lambda xs, q: float(np.percentile(np.asarray(xs), q))
+    med = {k: sorted(v, key=lambda r: r[0])[REPEATS // 2] for k, v in runs.items()}
+    pool = engines["paged"].pool
+    rec = {
+        "status": "ok",
+        "requests": R, "prompt_len": PROMPT, "budgets": budgets,
+        "slots": SLOTS, "page_size": PAGE, "pool_pages": pool.n_pages,
+        "arrival_dt_s": round(dt, 4),
+        "decode_backend": resolve_backend("auto"),
+        "dense_tok_per_s": round(med["dense"][0], 2),
+        "paged_tok_per_s": round(med["paged"][0], 2),
+        "speedup": round(med["paged"][0] / max(med["dense"][0], 1e-9), 3),
+        "dense_p50_s": round(pct(med["dense"][1], 50), 4),
+        "dense_p95_s": round(pct(med["dense"][1], 95), 4),
+        "paged_p50_s": round(pct(med["paged"][1], 50), 4),
+        "paged_p95_s": round(pct(med["paged"][1], 95), 4),
+        "page_appends": engines["paged"].stats["page_appends"],
+        "jax_backend": jax.default_backend(),
+    }
+    log.info(
+        "decodepath: paged=%.1f tok/s dense=%.1f tok/s speedup=%.2fx "
+        "p95 %.3fs vs %.3fs (backend=%s, %d pages x %d)",
+        rec["paged_tok_per_s"], rec["dense_tok_per_s"], rec["speedup"],
+        rec["paged_p95_s"], rec["dense_p95_s"], rec["decode_backend"],
+        rec["pool_pages"], PAGE,
+    )
+    out["decodepath:paged_vs_dense"] = rec
+
+
 PAIRS = {
     "qwen3moe": pair_qwen3moe,
     "mixtral": pair_mixtral,
@@ -392,6 +482,7 @@ PAIRS = {
     "epochdrv": pair_epochdrv,
     "kernelpath": pair_kernelpath,
     "servepath": pair_servepath,
+    "decodepath": pair_decodepath,
 }
 
 

@@ -43,18 +43,26 @@ static_out = np.asarray(static_generate(params, cfg, {"tokens": jnp.asarray(toke
 print(f"arch={cfg.name} family={cfg.family}")
 print(f"static : {args.batch}x{args.gen} tokens in {time.time()-t0:.2f}s (1 dispatch)")
 
-# continuous arm: same prompts through the slot engine
-engine = ServeEngine(
-    cfg, params,
-    EngineConfig(max_slots=args.batch, max_seq=args.prompt + args.gen,
-                 max_new=args.gen, decode_chunk=8),
-)
-t0 = time.time()
-completions = ContinuousScheduler(engine).run(
-    [Request(rid=i, tokens=tokens[i], max_new_tokens=args.gen) for i in range(args.batch)]
-)
-print(f"engine : {args.batch}x{args.gen} tokens in {time.time()-t0:.2f}s "
-      f"({engine.stats['decode_chunks']} chunks, {engine.stats['host_syncs']} host syncs)")
-match = all(np.array_equal(c.tokens, static_out[c.rid]) for c in completions)
-print(f"token parity static==engine: {match}")
+# continuous arm: same prompts through the slot engine, in BOTH KV layouts —
+# the paged pool (pages + page table + flash-decode dispatch) must produce
+# the same greedy tokens the dense per-slot rectangle does
+page = 16
+max_seq = -(-(args.prompt + args.gen) // page) * page
+for layout in ("dense", "paged"):
+    engine = ServeEngine(
+        cfg, params,
+        EngineConfig(max_slots=args.batch, max_seq=max_seq,
+                     max_new=args.gen, decode_chunk=8,
+                     kv_layout=layout, page_size=page),
+    )
+    t0 = time.time()
+    completions = ContinuousScheduler(engine).run(
+        [Request(rid=i, tokens=tokens[i], max_new_tokens=args.gen) for i in range(args.batch)]
+    )
+    pool = (f", pool {engine.pool.n_pages}x{engine.pool.page_size} tokens"
+            if engine.pool is not None else "")
+    print(f"engine : {layout:5s} {args.batch}x{args.gen} tokens in {time.time()-t0:.2f}s "
+          f"({engine.stats['decode_chunks']} chunks, {engine.stats['host_syncs']} host syncs{pool})")
+    match = all(np.array_equal(c.tokens, static_out[c.rid]) for c in completions)
+    print(f"token parity static=={layout}-engine: {match}")
 print("continuation[0]:", completions[0].tokens.tolist())

@@ -68,8 +68,13 @@ class ModelConfig:
     # train/prefill attention backend (repro.kernels.dispatch): "auto" is the
     # compiled Pallas flash kernel on TPU and the blocked-jnp flash_attn_jax
     # twin elsewhere; "pallas-interpret" is the debug/parity lane; "ref" is
-    # the jnp twin explicitly. Decode (Sq=1) always uses the small SDPA path.
+    # the jnp twin explicitly.
     attn_backend: str = "auto"
+    # decode (Sq=1) attention backend for PAGED serve caches: "auto" is the
+    # Pallas flash-decode kernel on TPU and its blocked-jnp ref twin
+    # elsewhere (same dispatch semantics as attn_backend). Dense caches
+    # always use the small SDPA path regardless of this knob.
+    decode_backend: str = "auto"
 
     # numerics -----------------------------------------------------------------
     dtype: str = "bfloat16"
@@ -122,6 +127,7 @@ class ModelConfig:
         if self.frontend:
             assert self.num_prefix_tokens > 0
         assert self.attn_backend in ("auto", "pallas", "pallas-interpret", "ref"), self.attn_backend
+        assert self.decode_backend in ("auto", "pallas", "pallas-interpret", "ref"), self.decode_backend
 
     def replace(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)

@@ -3,6 +3,8 @@
 * :mod:`repro.kernels.ensemble_kl`     — fused weighted-ensemble + KL (Eq. 4)
 * :mod:`repro.kernels.ghm_ce`          — fused GHM-difficulty CE (Eq. 5-6)
 * :mod:`repro.kernels.flash_attention` — blocked causal/SWA attention
+* :mod:`repro.kernels.flash_decode`    — paged Sq=1 decode attention
+  (inference-only: claims no backward; the serve engine's paged-KV path)
 
 Each subpackage: ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
 (jit'd differentiable wrapper), ``ref.py`` (pure-jnp oracle).
@@ -15,8 +17,11 @@ from repro.kernels.dispatch import KERNEL_BACKENDS, kernel_arm, resolve_backend
 from repro.kernels.ensemble_kl import ensemble_kl, ensemble_kl_ref
 from repro.kernels.ghm_ce import ghm_ce, ghm_ce_ref
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.flash_decode import flash_decode, flash_decode_ref
 
 __all__ = [
+    "flash_decode",
+    "flash_decode_ref",
     "KERNEL_BACKENDS",
     "kernel_arm",
     "resolve_backend",

@@ -1,9 +1,10 @@
-"""Kernel backend dispatch: which implementation of the fused loss kernels
+"""Kernel backend dispatch: which implementation of a Pallas-backed op
 actually runs on this process' default JAX backend.
 
-Values (the ``kernel_backend`` knob on :class:`repro.config.train.OFLConfig`
-and the ``backend=`` kwarg of :func:`repro.kernels.ensemble_kl` /
-:func:`repro.kernels.ghm_ce`):
+Values (the ``kernel_backend`` knob on :class:`repro.config.train.OFLConfig`,
+the ``attn_backend``/``decode_backend`` knobs on ``ModelConfig``, and the
+``backend=`` kwarg of :func:`repro.kernels.ensemble_kl` /
+:func:`repro.kernels.ghm_ce` / :func:`repro.kernels.flash_decode`):
 
 * ``"auto"``             — ``"pallas"`` on TPU, ``"ref"`` everywhere else.
                            CPU/GPU production paths must never silently run

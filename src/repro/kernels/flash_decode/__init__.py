@@ -1,0 +1,14 @@
+"""Paged flash-decode (Sq=1) attention: Pallas TPU kernel + blocked-jnp ref.
+
+The decode-side counterpart of :mod:`repro.kernels.flash_attention` — one
+query token per slot against the :class:`repro.serve.kv_pool.KVPool` paged KV
+cache, gathered through a per-slot page table with online-softmax
+accumulation over pages. Same feature matrix as the prefill kernel (GQA,
+sliding-window ring, logit softcap); inference-only by contract (no backward
+is claimed — differentiating raises).
+"""
+from repro.kernels.flash_decode.kernel import flash_decode_pallas
+from repro.kernels.flash_decode.ops import flash_decode
+from repro.kernels.flash_decode.ref import flash_decode_ref, page_mask
+
+__all__ = ["flash_decode", "flash_decode_pallas", "flash_decode_ref", "page_mask"]

@@ -1,0 +1,80 @@
+"""Dispatching wrapper for paged flash-decode attention.
+
+``backend`` follows :mod:`repro.kernels.dispatch` semantics ("auto" is the
+compiled Pallas kernel on TPU and the blocked-jnp ref twin elsewhere; "auto"
+never interprets off-TPU). This is the op :func:`repro.models.attention.
+attn_decode` calls for ``kv_layout="paged"`` engine states, routed by
+``ModelConfig.decode_backend``.
+
+**Inference-only**: unlike ``flash_attention``/``ensemble_kl``/``ghm_ce``,
+this op claims NO custom_vjp backward — decode serves frozen weights and must
+never silently enter a loss path (where its missing backward would otherwise
+fall back to differentiating a gather-heavy graph, or the Pallas kernel would
+fail deep inside a trace). Differentiating it raises immediately with a clear
+message; tests pin this.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dispatch import resolve_backend
+from repro.kernels.flash_decode.kernel import flash_decode_pallas
+from repro.kernels.flash_decode.ref import flash_decode_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _flash_decode(q, k_pages, v_pages, page_table, pos, window, softcap, cache_len, impl):
+    if impl == "ref":
+        return flash_decode_ref(
+            q, k_pages, v_pages, page_table, pos,
+            window=window, softcap=softcap, cache_len=cache_len,
+        )
+    return flash_decode_pallas(
+        q, k_pages, v_pages, page_table, pos,
+        window=window, softcap=softcap, cache_len=cache_len,
+        interpret=impl == "pallas-interpret",
+    )
+
+
+def _fwd(q, k_pages, v_pages, page_table, pos, window, softcap, cache_len, impl):
+    out = _flash_decode(q, k_pages, v_pages, page_table, pos, window, softcap, cache_len, impl)
+    return out, None
+
+
+def _bwd(window, softcap, cache_len, impl, res, dout):
+    raise NotImplementedError(
+        "flash_decode is inference-only: it claims no custom_vjp backward "
+        "(decode serves frozen weights). Gradients must flow through the "
+        "train/prefill path (flash_attention / flash_attn_jax), never the "
+        "paged decode cache."
+    )
+
+
+_flash_decode.defvjp(_fwd, _bwd)
+
+
+def flash_decode(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    page_table: jax.Array,
+    pos: jax.Array,
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    cache_len: int = 0,
+    backend: str | None = "auto",
+) -> jax.Array:
+    """Paged Sq=1 attention. q: (B, H, hd); k_pages/v_pages: (P, ps, KH, hd);
+    page_table: (B, W) int32; pos: (B,) int32 per-row positions.
+    ``cache_len`` is the slot's true logical cache length (the SWA ring
+    length); 0 means the full table extent W·ps. Returns (B, H, hd)."""
+    impl = resolve_backend(backend)
+    return _flash_decode(
+        q, k_pages, v_pages,
+        page_table.astype(jnp.int32), jnp.asarray(pos, jnp.int32).reshape(-1),
+        int(window), float(softcap), int(cache_len), impl,
+    )

@@ -1,0 +1,87 @@
+"""Blocked-jnp reference twin of the paged flash-decode kernel.
+
+Same math as :func:`repro.kernels.flash_decode.kernel.flash_decode_pallas` —
+a ``lax.scan`` over KV pages with online-softmax accumulation — written in
+pure jnp so it runs (and is the parity baseline) everywhere the Pallas
+interpreter is too slow or unavailable. This is what ``decode_backend="auto"``
+resolves to off-TPU, so the CPU CI serve lanes exercise exactly this path.
+
+The logical cache of a slot is the concatenation of its pages in page-table
+order: logical index ``j`` lives at ``(page_table[b, j // ps], j % ps)``.
+For sliding-window layers the logical space is the dense path's ring of
+``cache_len`` slots, so the masking math below mirrors
+:func:`repro.models.attention.attn_decode` exactly — that is what makes
+paged==dense token parity hold.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def page_mask(j: jax.Array, p: jax.Array, cache_len: int, window: int) -> jax.Array:
+    """Validity of logical in-ring index ``j`` for a row at position ``p``.
+
+    Mirrors the dense ``attn_decode`` bias: without a window, ``j`` IS the
+    absolute position; with one, the ring of ``cache_len`` slots holds the
+    last ``cache_len`` positions and ``j``'s absolute position is
+    reconstructed from the write head ``p % cache_len``. ``j >= cache_len``
+    (page-size padding past the ring) is always invalid."""
+    if window > 0:
+        slot_w = p % cache_len
+        wrap = (p // cache_len) * cache_len
+        k_pos = jnp.where(j <= slot_w, wrap + j, wrap - cache_len + j)
+        valid = (k_pos >= 0) & (k_pos <= p) & (k_pos > p - window)
+    else:
+        valid = j <= p
+    return valid & (j < cache_len)
+
+
+def flash_decode_ref(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    page_table: jax.Array,
+    pos: jax.Array,
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    cache_len: int = 0,
+) -> jax.Array:
+    """Sq=1 paged attention. q: (B, H, hd); k_pages/v_pages: (P, ps, KH, hd);
+    page_table: (B, W) int32; pos: (B,) int32. Returns (B, H, hd)."""
+    b, h, hd = q.shape
+    ps, kh = k_pages.shape[1], k_pages.shape[2]
+    w = page_table.shape[1]
+    cl = cache_len or w * ps
+    g = h // kh
+    scale = 1.0 / float(hd) ** 0.5
+    qf = q.reshape(b, kh, g, hd).astype(jnp.float32) * scale
+    posv = pos.reshape(-1).astype(jnp.int32)
+
+    def page_step(carry, wi):
+        m, l, acc = carry
+        pids = page_table[:, wi]  # (B,) — one page per row per step
+        k = k_pages[pids].astype(jnp.float32)  # (B, ps, KH, hd)
+        v = v_pages[pids].astype(jnp.float32)
+        s = jnp.einsum("bkgd,bskd->bkgs", qf, k)  # (B, KH, G, ps)
+        if softcap > 0:
+            s = jnp.tanh(s / softcap) * softcap
+        j = wi * ps + jnp.arange(ps, dtype=jnp.int32)  # (ps,) logical indices
+        valid = page_mask(j[None, :], posv[:, None], cl, window)  # (B, ps)
+        s = jnp.where(valid[:, None, None, :], s, NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p_exp = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p_exp, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bkgs,bskd->bkgd", p_exp, v)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kh, g), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kh, g), jnp.float32)
+    a0 = jnp.zeros((b, kh, g, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(page_step, (m0, l0, a0), jnp.arange(w, dtype=jnp.int32))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, h, hd).astype(q.dtype)

@@ -2,8 +2,11 @@
 (default) or the fused static-batch baseline.
 
     # continuous batching: staggered requests through the slot engine
+    # (paged KV pool + flash-decode by default; --kv-layout dense for the
+    # per-slot-rectangle SDPA baseline)
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
-        --engine continuous --requests 8 --request-rate 20 --max-slots 4
+        --engine continuous --requests 8 --request-rate 20 --max-slots 4 \
+        --page-size 16 --pool-pages 0
 
     # static baseline: one batch, prefill + single-dispatch decode
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
@@ -24,10 +27,11 @@ import numpy as np
 from repro.config import get_arch, reduced_variant
 from repro.data import make_token_stream
 from repro.launch.mesh import make_host_mesh, make_production_mesh, mesh_context
-from repro.models import init_lm
+from repro.models import group_pattern, init_lm
 from repro.serve import (
     ContinuousScheduler,
     EngineConfig,
+    KVPool,
     Request,
     ServeEngine,
     static_generate,
@@ -57,6 +61,16 @@ def build_parser() -> argparse.ArgumentParser:
                    help="arrivals per second (0 = all at t=0)")
     p.add_argument("--max-slots", type=int, default=4)
     p.add_argument("--decode-chunk", type=int, default=8)
+    # paged KV pool (continuous arm)
+    p.add_argument("--kv-layout", default="paged", choices=("paged", "dense"),
+                   help="paged: KVPool + flash-decode; dense: per-slot rectangle + SDPA")
+    p.add_argument("--page-size", type=int, default=16,
+                   help="tokens per KV page (power of two)")
+    p.add_argument("--pool-pages", type=int, default=0,
+                   help="KV pool capacity in pages (0 = full per-slot capacity)")
+    p.add_argument("--decode-backend", default="auto",
+                   choices=("auto", "pallas", "pallas-interpret", "ref"),
+                   help="paged decode attention backend (kernels/dispatch semantics)")
     return p
 
 
@@ -93,6 +107,19 @@ def validate_args(args, cfg) -> None:
             raise SystemExit(f"--request-rate must be >= 0, got {args.request_rate}")
         if args.decode_chunk < 1:
             raise SystemExit(f"--decode-chunk must be >= 1, got {args.decode_chunk}")
+        if args.kv_layout == "paged" and args.pool_pages < 0:
+            raise SystemExit(f"--pool-pages must be >= 0, got {args.pool_pages}")
+        # dry-construct the exact EngineConfig (and, for the paged layout,
+        # the KVPool — which bills the pool floor against the MODEL's cache
+        # length) that run_continuous will build: both are pure-host, so the
+        # full paged consistency matrix dies HERE, not after init_lm
+        try:
+            ecfg = _continuous_engine_config(args)
+            has_attn = any(m == "attn" for m, _ in group_pattern(cfg))
+            if args.kv_layout == "paged" and has_attn:  # pure-SSM runs dense
+                KVPool(cfg, ecfg)
+        except ValueError as ex:
+            raise SystemExit(str(ex))
 
 
 def run_static(args, cfg, params) -> None:
@@ -118,6 +145,24 @@ def run_static(args, cfg, params) -> None:
     log.info("sample continuation (seq 0): %s", out[0, :16].tolist())
 
 
+def _continuous_engine_config(args) -> EngineConfig:
+    max_seq = args.prompt_len + args.gen
+    if args.kv_layout == "paged":
+        # the page-table extent must recover the logical cache length exactly
+        max_seq = -(-max_seq // args.page_size) * args.page_size
+    return EngineConfig(
+        max_slots=args.max_slots,
+        max_seq=max_seq,
+        max_new=args.gen,
+        decode_chunk=args.decode_chunk,
+        temperature=args.temperature,
+        seed=args.seed,
+        kv_layout=args.kv_layout,
+        page_size=args.page_size,
+        pool_pages=args.pool_pages,
+    )
+
+
 def run_continuous(args, cfg, params) -> None:
     data = make_token_stream(args.seed, cfg.vocab_size, args.requests, args.prompt_len)
     dt = 1.0 / args.request_rate if args.request_rate > 0 else 0.0
@@ -130,18 +175,7 @@ def run_continuous(args, cfg, params) -> None:
         )
         for i in range(args.requests)
     ]
-    engine = ServeEngine(
-        cfg,
-        params,
-        EngineConfig(
-            max_slots=args.max_slots,
-            max_seq=args.prompt_len + args.gen,
-            max_new=args.gen,
-            decode_chunk=args.decode_chunk,
-            temperature=args.temperature,
-            seed=args.seed,
-        ),
-    )
+    engine = ServeEngine(cfg, params, _continuous_engine_config(args))
     sched = ContinuousScheduler(engine)
     # compile every admit size + the chunk program before timing
     engine.warmup(requests[0].tokens, min(2, args.gen))
@@ -161,16 +195,24 @@ def run_continuous(args, cfg, params) -> None:
         engine.stats["decode_chunks"], engine.stats["host_syncs"],
         engine.stats["prefill_dispatches"], engine.stats["host_syncs"] / max(toks, 1),
     )
+    if engine.pool is not None:
+        log.info(
+            "kv pool: %d pages x %d tokens (%s layout), %d decode-time appends",
+            engine.pool.n_pages, engine.pool.page_size, engine.layout,
+            engine.stats["page_appends"],
+        )
     log.info("sample continuation (rid 0): %s", completions[0].tokens[:16].tolist())
 
 
 def main() -> None:
     args = build_parser().parse_args()
     cfg = get_arch(args.arch)
-    validate_args(args, cfg)  # before any device/mesh work
     if args.reduced:
+        # reduce BEFORE validating: the paged-pool floor bills against the
+        # model's actual cache length (a reduced variant clamps the window)
         cfg = reduced_variant(cfg).replace(dtype="float32", param_dtype="float32")
-    cfg = cfg.replace(attn_backend=args.attn_backend)
+    validate_args(args, cfg)  # before any device/mesh work
+    cfg = cfg.replace(attn_backend=args.attn_backend, decode_backend=args.decode_backend)
     mesh = {"host": make_host_mesh, "production": make_production_mesh}[args.mesh]()
     with mesh_context(mesh):
         params = init_lm(cfg, jax.random.key(args.seed))

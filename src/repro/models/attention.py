@@ -356,9 +356,10 @@ def _attn_mix(q, k, v, cfg):
 
 def _sdpa_small(q, k, v, bias, cfg):
     """Unblocked attention for decode (Sq == 1) and tiny test shapes.
-    q:(B,Sq,H,hd) k,v:(B,Sk,K,hd); bias broadcastable to (B, Sq, Sk) — the
-    per-row form the continuous-batching engine needs (every slot sits at
-    its own position)."""
+    q:(B,Sq,H,hd) k,v:(B,Sk,K,hd); bias is PER-BATCH-ROW, broadcast into the
+    scores as ``bias[:, None, None]`` — so it must be (B, Sq, Sk) or any
+    right-aligned prefix-broadcastable shape like the engine's (B, 1, Sk)
+    (every slot sits at its own position, hence its own mask row)."""
     b, sq, h, hd = q.shape
     kh = k.shape[2]
     g = h // kh
@@ -403,6 +404,18 @@ def init_cache(cfg, batch: int, max_seq: int, dtype) -> Dict[str, jax.Array]:
     }
 
 
+def init_paged_cache(cfg, n_pages: int, page_size: int, dtype) -> Dict[str, jax.Array]:
+    """Paged decode cache: a pool of fixed-size pages SHARED by all slots
+    (repro.serve.kv_pool.KVPool hands out page ids; the per-slot page table
+    lives in the engine's DecodeState). HBM is ``n_pages × page_size`` — the
+    allocated-token footprint — instead of the dense ``slots × cache_len``."""
+    kv, hd = cfg.num_kv_heads, cfg.head_dim_
+    return {
+        "k_pages": jnp.zeros((n_pages, page_size, kv, hd), dtype),
+        "v_pages": jnp.zeros((n_pages, page_size, kv, hd), dtype),
+    }
+
+
 def attn_prefill(params, x, cfg, cache):
     """Full-sequence attention that also fills the cache.
 
@@ -430,15 +443,24 @@ def attn_prefill(params, x, cfg, cache):
     return constrain(out, "batch", None, None), {"k": new_k, "v": new_v}
 
 
-def attn_decode(params, x, cfg, cache, pos):
+def attn_decode(params, x, cfg, cache, pos, page_table=None):
     """One-token decode. x: (B, 1, d); pos: scalar int32 — the index of this
     token — or an (B,) int32 vector of per-row positions (the continuous-
     batching engine decodes slots sitting at different depths in one step).
-    Cache may be a ring buffer (SWA) or full length."""
+
+    Two cache layouts: the dense per-slot cache ({"k", "v"}, may be a ring
+    buffer for SWA) attends via the small SDPA path; a PAGED cache
+    ({"k_pages", "v_pages"} from :func:`init_paged_cache`, plus the engine's
+    ``page_table``) takes the page-table view — the new K/V land on the
+    write position's page and attention runs through the flash-decode kernel
+    dispatch (``cfg.decode_backend``). Both layouts use identical ring/mask
+    math, so they are token-for-token interchangeable."""
     b = x.shape[0]
     pos = jnp.asarray(pos, jnp.int32)
     posv = jnp.broadcast_to(pos.reshape(-1), (b,)) if pos.ndim else jnp.full((b,), pos)
     q, k_new, v_new = _project_qkv(params, x, cfg, posv[:, None])
+    if "k_pages" in cache:
+        return _attn_decode_paged(params, q, k_new, v_new, cfg, cache, posv, page_table, x)
     cl = cache["k"].shape[1]
     if cfg.sliding_window > 0 and cl < 2**31:
         slot = posv % cl
@@ -462,3 +484,39 @@ def attn_decode(params, x, cfg, cache, pos):
     out = _sdpa_small(q, k, v, bias, cfg)
     out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
     return constrain(out, "batch", None, None), {"k": k, "v": v}
+
+
+def _attn_decode_paged(params, q, k_new, v_new, cfg, cache, posv, page_table, x):
+    """Paged decode: scatter the new K/V onto the write position's page, then
+    attend through the flash-decode dispatch. The logical index math (ring
+    slot for SWA, absolute position otherwise) is the dense path's, just
+    indirected through ``page_table``; the true logical cache length is
+    recovered from the table extent W·ps — for full attention it IS max_seq
+    (EngineConfig enforces ``max_seq % page_size == 0``), and an SWA ring of
+    ``min(window, max_seq)`` slots satisfies cl <= W·ps < cl + ps, so
+    ``min(window, W·ps)`` recovers cl exactly in every combination."""
+    if page_table is None:
+        raise ValueError("paged KV cache requires a page_table (see repro.serve.kv_pool)")
+    from repro.kernels.flash_decode import flash_decode
+
+    b = posv.shape[0]
+    ps = cache["k_pages"].shape[1]
+    extent = page_table.shape[1] * ps
+    if cfg.sliding_window > 0:
+        cl = min(cfg.sliding_window, extent)
+        slot = posv % cl
+    else:
+        cl = extent
+        slot = jnp.minimum(posv, cl - 1)
+    rows = jnp.arange(b, dtype=jnp.int32)
+    pid = page_table[rows, slot // ps]
+    off = slot % ps
+    k_pages = cache["k_pages"].at[pid, off].set(k_new[:, 0].astype(cache["k_pages"].dtype))
+    v_pages = cache["v_pages"].at[pid, off].set(v_new[:, 0].astype(cache["v_pages"].dtype))
+    out = flash_decode(
+        q[:, 0], k_pages, v_pages, page_table, posv,
+        window=cfg.sliding_window, softcap=cfg.attn_logit_softcap,
+        cache_len=cl, backend=getattr(cfg, "decode_backend", "auto"),
+    )
+    out = jnp.einsum("bhk,hkd->bd", out, params["wo"].astype(x.dtype))[:, None]
+    return constrain(out, "batch", None, None), {"k_pages": k_pages, "v_pages": v_pages}

@@ -116,14 +116,14 @@ def _init_block(key, cfg, mixer: str, ffn: Optional[str], dtype):
     return p
 
 
-def _apply_mixer(p, x, cfg, mixer, mode, state, pos):
+def _apply_mixer(p, x, cfg, mixer, mode, state, pos, page_table=None):
     """mode: train | prefill | decode. Returns (y, new_state)."""
     if mixer == "attn":
         if mode == "train":
             return attn_lib.attn_train(p["attn"], x, cfg), None
         if mode == "prefill":
             return attn_lib.attn_prefill(p["attn"], x, cfg, state)
-        return attn_lib.attn_decode(p["attn"], x, cfg, state, pos)
+        return attn_lib.attn_decode(p["attn"], x, cfg, state, pos, page_table=page_table)
     if mixer == "mamba":
         if mode == "train":
             return mamba_lib.mamba_forward(p["mamba"], x, cfg), None
@@ -136,9 +136,9 @@ def _apply_mixer(p, x, cfg, mixer, mode, state, pos):
     return fwd(p["xlstm"], x, cfg, state=state if mode == "decode" else None, return_state=True)
 
 
-def _apply_block(p, x, cfg, mixer, ffn, mode, state, pos):
+def _apply_block(p, x, cfg, mixer, ffn, mode, state, pos, page_table=None):
     h = rms_norm(x, p["norm1"]["scale"], cfg.norm_eps)
-    y, new_state = _apply_mixer(p, h, cfg, mixer, mode, state, pos)
+    y, new_state = _apply_mixer(p, h, cfg, mixer, mode, state, pos, page_table)
     x = x + y
     aux = jnp.zeros((), jnp.float32)
     if ffn == "mlp":
@@ -240,8 +240,10 @@ def lm_logits(params, cfg, x) -> jax.Array:
 # forward (train)
 
 
-def _scan_blocks(params, cfg, x, mode: str, state=None, pos=None):
-    """Run all groups. Returns (x, aux_sum, new_state_stack_or_None)."""
+def _scan_blocks(params, cfg, x, mode: str, state=None, pos=None, page_table=None):
+    """Run all groups. Returns (x, aux_sum, new_state_stack_or_None).
+    ``page_table`` (paged decode only) is loop-invariant: it rides into the
+    scan body as a closure constant, not a scanned leaf."""
     pattern = group_pattern(cfg)
 
     def body(x, inp):
@@ -250,7 +252,7 @@ def _scan_blocks(params, cfg, x, mode: str, state=None, pos=None):
         new_st = {}
         for i, (mixer, ffn) in enumerate(pattern):
             s_i = None if st is None else st.get(f"p{i}")
-            x, aux, ns = _apply_block(gp[f"p{i}"], x, cfg, mixer, ffn, mode, s_i, pos)
+            x, aux, ns = _apply_block(gp[f"p{i}"], x, cfg, mixer, ffn, mode, s_i, pos, page_table)
             aux_total = aux_total + aux
             if ns is not None:
                 new_st[f"p{i}"] = ns
@@ -333,8 +335,10 @@ def lm_loss(params, cfg, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
 # decode state
 
 
-def _init_mixer_state(cfg, mixer: str, batch: int, max_seq: int, dtype):
+def _init_mixer_state(cfg, mixer: str, batch: int, max_seq: int, dtype, kv_pages=0, kv_page_size=0):
     if mixer == "attn":
+        if kv_pages > 0:
+            return attn_lib.init_paged_cache(cfg, kv_pages, kv_page_size, dtype)
         return attn_lib.init_cache(cfg, batch, max_seq, dtype)
     if mixer == "mamba":
         return mamba_lib.init_mamba_state(cfg, batch, dtype)
@@ -343,13 +347,18 @@ def _init_mixer_state(cfg, mixer: str, batch: int, max_seq: int, dtype):
     return xlstm_lib.init_slstm_state(cfg, batch)
 
 
-def init_lm_state(cfg, batch: int, max_seq: int, dtype=None):
-    """Per-group stacked mixer states (the KV-cache / SSM-state pytree)."""
+def init_lm_state(cfg, batch: int, max_seq: int, dtype=None, *, kv_pages=0, kv_page_size=0):
+    """Per-group stacked mixer states (the KV-cache / SSM-state pytree).
+
+    ``kv_pages > 0`` swaps every attention cache for a shared page pool of
+    that many ``kv_page_size``-token pages (the serve engine's paged layout;
+    recurrent SSM/xLSTM states are O(1) per slot and stay per-slot dense).
+    Decode then needs the engine's page table: ``lm_decode(..., page_table)``."""
     dtype = jnp.dtype(dtype or cfg.dtype)
     pattern = group_pattern(cfg)
     g = num_groups(cfg)
     one = {
-        f"p{i}": _init_mixer_state(cfg, mixer, batch, max_seq, dtype)
+        f"p{i}": _init_mixer_state(cfg, mixer, batch, max_seq, dtype, kv_pages, kv_page_size)
         for i, (mixer, _) in enumerate(pattern)
     }
     return tree_stack([one] * g)
@@ -359,7 +368,9 @@ def shard_lm_state(state):
     """Apply the decode-state sharding constraints (KV cache seq-sharded)."""
 
     def f(path, x):
-        if x.ndim == 5 and ("/k" in path or "/v" in path):  # (G,B,S,K,hd)
+        # exact-suffix match: the paged pool leaves (/k_pages, /v_pages) have
+        # no batch dim and must NOT pick up the dense (G,B,S,K,hd) constraint
+        if x.ndim == 5 and (path.endswith("/k") or path.endswith("/v")):
             from repro.sharding import logical_to_pspec
 
             return jax.lax.with_sharding_constraint(
@@ -391,11 +402,15 @@ def lm_prefill(params, cfg, batch, state, last_index=None):
     return logits, new_state
 
 
-def lm_decode(params, cfg, token, state, pos):
-    """One decode step. token: (B, 1) int32; pos: scalar int32 (absolute)."""
+def lm_decode(params, cfg, token, state, pos, page_table=None):
+    """One decode step. token: (B, 1) int32; pos: scalar int32 (absolute) or
+    (B,) per-row positions. ``page_table`` ((B, W) int32) switches paged
+    states (``init_lm_state(kv_pages=...)``) onto the page-table view."""
     dtype = jnp.dtype(cfg.dtype)
     x = params["embed"]["table"].astype(dtype)[token]
     x = constrain(x, "batch", None, None)
-    x, aux, new_state = _scan_blocks(params, cfg, x, "decode", state=state, pos=pos)
+    x, aux, new_state = _scan_blocks(
+        params, cfg, x, "decode", state=state, pos=pos, page_table=page_table
+    )
     logits = lm_logits(params, cfg, x)
     return logits, new_state

@@ -1,16 +1,22 @@
 """Continuous-batching serving subsystem for the distilled server LM.
 
-* :mod:`repro.serve.engine`    — slot-based device engine: batched KV cache
-  with per-slot lengths, bucketed prefill admission, ``lax.while_loop``
-  decode chunks with on-device sampling (O(1) host syncs per chunk).
+* :mod:`repro.serve.engine`    — slot-based device engine: bucketed prefill
+  admission, ``lax.while_loop`` decode chunks with on-device sampling (O(1)
+  host syncs per chunk), per-slot positions.
+* :mod:`repro.serve.kv_pool`   — paged KV memory: fixed-size page pool +
+  free list + per-slot page tables (the default ``kv_layout="paged"``; HBM
+  scales with live tokens, decode attention runs the flash-decode kernel).
 * :mod:`repro.serve.scheduler` — request queue, admission into free slots,
   eviction/drain of finished sequences, arrival clock.
 * :mod:`repro.serve.static`    — the static-batch baseline arm, fused into
-  a single dispatch (no per-token host sync).
+  a single dispatch (no per-token host sync; always the dense cache — the
+  cross-layout parity oracle).
 
-A/B: ``python -m benchmarks.perf_hillclimb --pair servepath``.
+A/B: ``python -m benchmarks.perf_hillclimb --pair servepath`` (continuous vs
+static) and ``--pair decodepath`` (paged-flash vs dense-SDPA decode).
 """
 from repro.serve.engine import DecodeState, EngineConfig, ServeEngine, sample_tokens
+from repro.serve.kv_pool import KVPool
 from repro.serve.scheduler import (
     Completion,
     ContinuousScheduler,
@@ -23,6 +29,7 @@ from repro.serve.static import make_static_generator, static_generate
 __all__ = [
     "DecodeState",
     "EngineConfig",
+    "KVPool",
     "ServeEngine",
     "sample_tokens",
     "Completion",

@@ -5,14 +5,29 @@ in one of ``max_slots`` slots of the KV-cache / SSM-state pytree, with its
 OWN position counter — :func:`repro.models.attention.attn_decode` accepts a
 per-row position vector, so slots at different depths decode in one step.
 
+Two KV layouts (``EngineConfig.kv_layout``):
+
+  * **paged** (default) — attention caches are a shared page pool
+    (:class:`repro.serve.kv_pool.KVPool`): admission allocates the pages the
+    bucketed prefill fills and splices each row's cache into them, decode
+    appends a page when a slot's position crosses a page boundary (checked
+    once per chunk, before the dispatch — the device program never touches
+    the free list), and eviction returns the slot's pages. Decode attention
+    takes the page-table view through the flash-decode kernel dispatch
+    (``ModelConfig.decode_backend``). HBM scales with allocated pages.
+  * **dense** — the per-slot ``(slots, cache_len, ...)`` rectangle attending
+    via the small SDPA path; kept as the parity baseline and for archs with
+    no attention layers at all (pure SSM), where paged silently degrades to
+    dense because there is nothing to page.
+
 The two jitted programs:
 
   * **admit** — prefill an admission burst of prompts (padded up to a
     ``prefill_bucket`` multiple so ragged lengths share compilations; the
     pad tail is never attended because decode overwrites position ``p``
     before reading it) in one dispatch per (bucket, power-of-two group),
-    splice each row's state into its slot, and sample each first token from
-    that row's true-last-prompt-position logits.
+    splice each row's state into its slot (or its slot's pages), and sample
+    each first token from that row's true-last-prompt-position logits.
   * **decode chunk** — a ``lax.while_loop`` of up to ``decode_chunk`` steps:
     batched one-token decode over ALL slots, on-device greedy/temperature
     sampling, per-slot output accumulation and finish bookkeeping. Zero
@@ -21,8 +36,13 @@ The two jitted programs:
     request's token row once at eviction (``fetch``).
 
 Inactive slots ride along in the batched decode (their position is frozen,
-so they idempotently rewrite one cache slot) — that is the cost of a fixed
-batch shape, and exactly what admission refills.
+so they idempotently rewrite one cache location) — that is the cost of a
+fixed batch shape, and exactly what admission refills. The dense layout
+absorbs those writes in the slot's own row; the paged layout re-aims every
+idle/evicted slot's page-table row at the pool's never-allocated SCRATCH
+page before the next chunk, because its old pages may already belong to
+another slot (a stale row was a real cross-slot clobber, caught by the
+serve smoke and pinned by ``test_engine_paged_idle_slots_cannot_clobber``).
 
 ``stats`` counts dispatches and host syncs; tests pin host syncs = O(1) per
 decode chunk, independent of chunk length and token count.
@@ -30,13 +50,16 @@ decode chunk, independent of chunk length and token count.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, NamedTuple, Optional
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import init_lm_state, lm_decode, lm_prefill
+from repro.models import group_pattern, init_lm_state, lm_decode, lm_prefill
+from repro.serve.kv_pool import KVPool
+
+KV_LAYOUTS = ("paged", "dense")
 
 
 def sample_tokens(logits: jax.Array, key: jax.Array, temperature: float) -> jax.Array:
@@ -51,7 +74,10 @@ def sample_tokens(logits: jax.Array, key: jax.Array, temperature: float) -> jax.
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    """Continuous-batching knobs (the model itself comes from ModelConfig)."""
+    """Continuous-batching knobs (the model itself comes from ModelConfig).
+
+    Construction fails fast on inconsistent paged-KV knobs — BEFORE any
+    device allocation (same contract as the launch arg audit)."""
 
     max_slots: int = 4  # concurrent sequences resident on device
     max_seq: int = 256  # per-slot cache length (prompt + generation)
@@ -61,12 +87,46 @@ class EngineConfig:
     temperature: float = 0.0  # 0 => greedy
     eos_token: int = -1  # <0 => disabled (synthetic streams have no EOS)
     seed: int = 0
+    kv_layout: str = "paged"  # paged (KVPool + flash-decode) | dense (SDPA)
+    page_size: int = 16  # tokens per KV page (power of two)
+    pool_pages: int = 0  # pool capacity; 0 => max_slots × full per-slot width
+
+    def __post_init__(self):
+        for field in ("max_slots", "max_seq", "max_new", "decode_chunk", "prefill_bucket"):
+            if getattr(self, field) < 1:
+                raise ValueError(f"EngineConfig.{field} must be >= 1, got {getattr(self, field)}")
+        if self.kv_layout not in KV_LAYOUTS:
+            raise ValueError(
+                f"EngineConfig.kv_layout must be one of {KV_LAYOUTS}, got {self.kv_layout!r}"
+            )
+        if self.kv_layout != "paged":
+            return
+        if self.page_size < 1 or (self.page_size & (self.page_size - 1)):
+            raise ValueError(
+                f"EngineConfig.page_size must be a power of two, got {self.page_size} "
+                "(page offsets are bit-sliced from positions; the pool and the "
+                "flash-decode BlockSpecs both assume it)"
+            )
+        if self.max_seq % self.page_size:
+            raise ValueError(
+                f"EngineConfig.max_seq={self.max_seq} must be a multiple of "
+                f"page_size={self.page_size} so the page-table extent recovers the "
+                "logical cache length exactly (round max_seq up)"
+            )
+        if self.pool_pages and self.pool_pages < self.max_slots:
+            raise ValueError(
+                f"pool_pages={self.pool_pages} < max_slots={self.max_slots}: "
+                "every live slot needs at least one page"
+            )
+        # the pool-vs-burst floor needs the MODEL's cache length (an SWA ring
+        # bills far fewer pages than bucket_min tokens suggest), so it lives
+        # in KVPool.__init__ — still pure-host, still pre-device
 
 
 class DecodeState(NamedTuple):
     """The device-resident per-slot state threaded through decode chunks."""
 
-    kv: Any  # model state pytree, leaves (G, max_slots, ...)
+    kv: Any  # model state pytree, leaves (G, max_slots, ...) or paged pools
     last_tok: jax.Array  # (S, 1) int32 — last sampled token per slot
     pos: jax.Array  # (S,) int32 — position the next decode step writes
     active: jax.Array  # (S,) bool
@@ -74,6 +134,7 @@ class DecodeState(NamedTuple):
     n_out: jax.Array  # (S,) int32 — tokens generated so far
     budget: jax.Array  # (S,) int32 — per-request generation budget
     rng: jax.Array  # PRNG key for sampling
+    page_table: jax.Array  # (S, W) int32 — per-slot page ids ((S, 1) dummy when dense)
 
 
 class ServeEngine:
@@ -92,8 +153,20 @@ class ServeEngine:
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
+        has_attn = any(mixer == "attn" for mixer, _ in group_pattern(cfg))
+        # pure-SSM archs have no KV to page: degrade to the dense state layout
+        self.layout = ecfg.kv_layout if has_attn else "dense"
+        self.pool: Optional[KVPool] = KVPool(cfg, ecfg) if self.layout == "paged" else None
         self.free_slots: List[int] = list(range(ecfg.max_slots))
         self._state: Optional[DecodeState] = None
+        # host-side per-slot metadata for page planning: (true_len, budget)
+        # and a conservative position estimate (reconciled downward at sync)
+        self._meta: Dict[int, Tuple[int, int]] = {}
+        self._pos_est: Dict[int, int] = {}
+        # evicted slots whose table rows still point at returned pages; their
+        # ride-along writes must be re-aimed at the scratch page before the
+        # next chunk (unless admission rewrites the row first)
+        self._stale_slots: set = set()
         # jit caches per abstract (N, bucket) tokens shape — one wrapper serves
         # every admission-burst size/bucket combination
         self._admit_jit = jax.jit(self._admit_fn)
@@ -103,19 +176,10 @@ class ServeEngine:
 
     # -- device programs ----------------------------------------------------
 
-    def _admit_fn(self, params, ds: DecodeState, tokens, slots, true_lens, budgets):
-        """Batched admission: prefill N prompts (N is a compile-time constant
-        per call — the scheduler's admission burst) in ONE dispatch and
-        splice each row into its slot. tokens: (N, Lb); slots/true_lens/
-        budgets: (N,) int32. The sampling key comes from the state's own rng
-        chain — no host-side key dispatch per admission."""
-        cfg, e = self.cfg, self.ecfg
-        n = tokens.shape[0]
-        rng, key = jax.random.split(ds.rng)
-        st1 = init_lm_state(cfg, n, e.max_seq)
-        logits, st1 = lm_prefill(params, cfg, {"tokens": tokens}, st1, last_index=true_lens - 1)
-        kv = ds.kv
-        for i in range(n):  # n <= max_slots: unrolled per-row state splice
+    def _splice_dense(self, kv, st1, slots, n: int):
+        """Per-row dense splice: each prefilled row lands on its slot's batch
+        index in every state leaf. n <= max_slots: unrolled."""
+        for i in range(n):
             kv = jax.tree_util.tree_map(
                 lambda big, one: jax.lax.dynamic_update_slice(
                     big,
@@ -125,6 +189,60 @@ class ServeEngine:
                 kv,
                 st1,
             )
+        return kv
+
+    def _splice_paged(self, kv, st1, slots, page_ids, n: int):
+        """Mixed splice for the paged layout: attention caches scatter into
+        the slot's allocated pages (the dense prefill rows are re-viewed as
+        pages); recurrent mixer states stay per-slot dense. page_ids:
+        (N, n_alloc) int32 — n_alloc is static per compiled admission (all
+        rows of a burst share a bucket, hence a page count)."""
+        ps = self.pool.page_size
+        n_alloc = page_ids.shape[1]
+        kv = dict(kv)
+        for i, (mixer, _) in enumerate(group_pattern(self.cfg)):
+            key = f"p{i}"
+            if mixer != "attn":
+                kv[key] = self._splice_dense(kv[key], st1[key], slots, n)
+                continue
+            sub = dict(kv[key])
+            for pages_name, dense_name in (("k_pages", "k"), ("v_pages", "v")):
+                big = sub[pages_name]  # (G, P, ps, KH, hd)
+                one = st1[key][dense_name]  # (G, N, cl, KH, hd)
+                g_, _, cl_, kh_, hd_ = one.shape
+                pad = (-cl_) % ps
+                if pad:
+                    one = jnp.pad(one, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+                one = one.reshape(g_, n, -1, ps, kh_, hd_)  # (G, N, W, ps, KH, hd)
+                # ONE scatter for the whole burst: page ids are disjoint
+                # across rows (allocator invariant), so the (N, n_alloc)
+                # index array never collides
+                sub[pages_name] = big.at[:, page_ids].set(
+                    one[:, :, :n_alloc].astype(big.dtype)
+                )
+            kv[key] = sub
+        return kv
+
+    def _admit_fn(self, params, ds: DecodeState, tokens, slots, true_lens, budgets,
+                  table_rows, page_ids):
+        """Batched admission: prefill N prompts (N is a compile-time constant
+        per call — the scheduler's admission burst) in ONE dispatch and
+        splice each row into its slot. tokens: (N, Lb); slots/true_lens/
+        budgets: (N,) int32; table_rows: (N, W) full page-table rows and
+        page_ids: (N, n_alloc) the allocated prefix (both ignored when
+        dense). The sampling key comes from the state's own rng chain — no
+        host-side key dispatch per admission."""
+        cfg, e = self.cfg, self.ecfg
+        n = tokens.shape[0]
+        rng, key = jax.random.split(ds.rng)
+        st1 = init_lm_state(cfg, n, e.max_seq)
+        logits, st1 = lm_prefill(params, cfg, {"tokens": tokens}, st1, last_index=true_lens - 1)
+        if self.layout == "paged":
+            kv = self._splice_paged(ds.kv, st1, slots, page_ids, n)
+            page_table = ds.page_table.at[slots].set(table_rows)
+        else:
+            kv = self._splice_dense(ds.kv, st1, slots, n)
+            page_table = ds.page_table
         toks0 = sample_tokens(logits[:, 0], key, e.temperature)  # (N,)
         return DecodeState(
             kv=kv,
@@ -135,11 +253,13 @@ class ServeEngine:
             n_out=ds.n_out.at[slots].set(1),
             budget=ds.budget.at[slots].set(budgets),
             rng=rng,
+            page_table=page_table,
         )
 
     def _chunk_fn(self, params, ds: DecodeState):
         cfg, e = self.cfg, self.ecfg
         rows = jnp.arange(e.max_slots, dtype=jnp.int32)
+        paged = self.layout == "paged"
 
         def cond(carry):
             i, s = carry
@@ -147,7 +267,10 @@ class ServeEngine:
 
         def body(carry):
             i, s = carry
-            logits, kv = lm_decode(params, cfg, s.last_tok, s.kv, s.pos)
+            logits, kv = lm_decode(
+                params, cfg, s.last_tok, s.kv, s.pos,
+                page_table=s.page_table if paged else None,
+            )
             rng, ks = jax.random.split(s.rng)
             nxt = sample_tokens(logits[:, -1], ks, e.temperature)
             write = s.active & (s.n_out < e.max_new)
@@ -166,6 +289,7 @@ class ServeEngine:
                 n_out=n_out,
                 budget=s.budget,
                 rng=rng,
+                page_table=s.page_table,
             )
 
         _, ds = jax.lax.while_loop(cond, body, (jnp.zeros((), jnp.int32), ds))
@@ -178,15 +302,34 @@ class ServeEngine:
         zeroed (so a warm-up run never contaminates timed counters)."""
         cfg, e = self.cfg, self.ecfg
         self.free_slots = list(range(e.max_slots))
+        self._meta = {}
+        self._pos_est = {}
+        self._stale_slots = set()
         self.stats: Dict[str, int] = {
             "admitted": 0,
             "prefill_dispatches": 0,
             "decode_chunks": 0,
             "host_syncs": 0,
             "evicted": 0,
+            "page_appends": 0,
+            "table_resets": 0,
         }
+        if self.pool is not None:
+            self.pool.reset()
+            # +1: the scratch page — the write target of idle slots' frozen
+            # ride-along positions (never allocated, reads always masked)
+            kv = init_lm_state(
+                cfg, e.max_slots, e.max_seq,
+                kv_pages=self.pool.n_pages + 1, kv_page_size=self.pool.page_size,
+            )
+            width = self.pool.pages_per_slot
+            table0 = jnp.full((e.max_slots, width), self.pool.scratch_page, jnp.int32)
+        else:
+            kv = init_lm_state(cfg, e.max_slots, e.max_seq)
+            width = 1
+            table0 = jnp.zeros((e.max_slots, width), jnp.int32)
         self._state = DecodeState(
-            kv=init_lm_state(cfg, e.max_slots, e.max_seq),
+            kv=kv,
             last_tok=jnp.zeros((e.max_slots, 1), jnp.int32),
             pos=jnp.zeros((e.max_slots,), jnp.int32),
             active=jnp.zeros((e.max_slots,), bool),
@@ -194,6 +337,7 @@ class ServeEngine:
             n_out=jnp.zeros((e.max_slots,), jnp.int32),
             budget=jnp.zeros((e.max_slots,), jnp.int32),
             rng=jax.random.key(e.seed),
+            page_table=table0,
         )
 
     def bucket_len(self, prompt_len: int) -> int:
@@ -218,6 +362,35 @@ class ServeEngine:
         """Prefill one prompt (1-D int32) into a free slot; returns its id."""
         return self.admit_many([(tokens, max_new_tokens)])[0]
 
+    def _lifetime_pages(self, prompt_len: int, budget: int) -> int:
+        """A request's TOTAL page bill over its life: the bucketed prefill
+        plus every decode position its budget can reach (ring-clamped)."""
+        lb = self.bucket_len(prompt_len)
+        return self.pool.required_pages(max(lb, prompt_len + budget))
+
+    def max_admissible(self, requests) -> int:
+        """Largest prefix of ``requests`` ((tokens, budget) pairs) admissible
+        RIGHT NOW: bounded by free slots and, in the paged layout, by pool
+        capacity net of every RESIDENT request's lifetime bill. Billing
+        lifetimes (not just prefills — budgets are known at admission) means
+        residents can always grow to their full budget: a scheduler that
+        admits through this can never hit mid-decode pool exhaustion; a
+        tight pool defers requests instead of crashing the run."""
+        n = min(len(requests), len(self.free_slots))
+        if self.pool is None:
+            return n
+        reserved = sum(self._lifetime_pages(tl, b) for tl, b in self._meta.values())
+        free = self.pool.n_pages - reserved
+        count = 0
+        for tokens, budget in list(requests)[:n]:
+            tokens = np.asarray(tokens, np.int32).reshape(-1)
+            need = self._lifetime_pages(len(tokens), budget)
+            if need > free:
+                break
+            free -= need
+            count += 1
+        return count
+
     def admit_many(self, requests) -> List[int]:
         """Admit several prompts; returns their slots, input-aligned.
 
@@ -225,7 +398,9 @@ class ServeEngine:
         split into power-of-two admission batches (4+2+1…) so the set of
         compiled (bucket, N) programs stays O(log max_slots) per bucket
         instead of one per burst size — a freed-slot refill after warm-up
-        never hits the compiler."""
+        never hits the compiler. In the paged layout each row also gets the
+        pages its bucketed prefill will fill (a per-group constant, so page
+        allocation adds no compilation keys)."""
         e = self.ecfg
         prepped = []
         for tokens, max_new_tokens in requests:
@@ -243,6 +418,23 @@ class ServeEngine:
             raise RuntimeError(
                 f"{len(prepped)} admissions but only {len(self.free_slots)} free slots"
             )
+        if self.pool is not None:
+            # admission is ATOMIC w.r.t. pool exhaustion: check the whole
+            # burst's page bill before popping a slot or allocating a page,
+            # so a caller that catches the error has a clean engine (no
+            # half-admitted rows, no leaked slots/pages) and can retry with
+            # a smaller burst
+            need = sum(
+                self.pool.required_pages(self.bucket_len(len(tokens)))
+                for tokens, _ in prepped
+            )
+            if need > self.pool.free_pages:
+                raise RuntimeError(
+                    f"KV pool cannot admit this burst: its bucketed prefills need "
+                    f"{need} pages but only {self.pool.free_pages}/{self.pool.n_pages} "
+                    f"are free (page_size={self.pool.page_size}). Admit fewer "
+                    "requests, raise --pool-pages, or lower --max-slots."
+                )
         by_bucket: Dict[int, List[int]] = {}
         for i, (tokens, _) in enumerate(prepped):
             by_bucket.setdefault(self.bucket_len(len(tokens)), []).append(i)
@@ -255,11 +447,21 @@ class ServeEngine:
                 lens = np.zeros((n,), np.int32)
                 buds = np.zeros((n,), np.int32)
                 gslots = [self.free_slots.pop() for _ in group]
+                width = self.pool.pages_per_slot if self.pool is not None else 1
+                n_alloc = self.pool.required_pages(lb) if self.pool is not None else 1
+                table_rows = np.zeros((n, width), np.int32)
+                page_ids = np.zeros((n, n_alloc), np.int32)
                 for j, i in enumerate(group):
                     tokens, budget = prepped[i]
                     padded[j, : len(tokens)] = tokens
                     lens[j], buds[j] = len(tokens), budget
                     slots[i] = gslots[j]
+                    if self.pool is not None:
+                        page_ids[j] = self.pool.alloc(gslots[j], n_alloc)
+                        table_rows[j] = self.pool.table_row(gslots[j])
+                        self._meta[gslots[j]] = (len(tokens), budget)
+                        self._pos_est[gslots[j]] = len(tokens)
+                        self._stale_slots.discard(gslots[j])  # row fully rewritten
                 self._state = self._admit_jit(
                     self.params,
                     self._state,
@@ -267,6 +469,8 @@ class ServeEngine:
                     jnp.asarray(gslots, jnp.int32),
                     jnp.asarray(lens),
                     jnp.asarray(buds),
+                    jnp.asarray(table_rows),
+                    jnp.asarray(page_ids),
                 )
                 self.stats["admitted"] += n
                 self.stats["prefill_dispatches"] += 1
@@ -281,27 +485,105 @@ class ServeEngine:
         n = 1
         while n <= self.ecfg.max_slots:
             self.reset()
-            self.admit_many([(prompt, budget)] * n)
+            reqs = [(prompt, budget)] * n
+            if self.max_admissible(reqs) < n:
+                break  # a tight pool caps the burst; larger sizes can't fit either
+            self.admit_many(reqs)
             self.decode_chunk()
             self.sync()
             n *= 2
         self.reset()
 
+    def _ensure_chunk_pages(self) -> None:
+        """Grow resident slots' page tables to cover the positions the next
+        chunk can write. The estimate only moves DOWN at sync reconciliation,
+        so back-to-back chunks without a sync stay safe (a page is appended
+        at worst one chunk early, never late — late would silently write
+        through a padding table entry)."""
+        e = self.ecfg
+        # phase 1 — PLAN, no mutation: the chunk's total page bill, so
+        # exhaustion raises with the engine untouched (stale set intact,
+        # pool unallocated — a caller that catches can drain and retry;
+        # committing anything partially here would either forget a stale
+        # row, re-opening the cross-slot clobber, or leave a slot owning
+        # pages its device table never maps)
+        growth: List[Tuple[int, int, int]] = []  # (slot, have, need)
+        total_new = 0
+        for slot, (true_len, budget) in self._meta.items():
+            est = self._pos_est[slot]
+            need = self.pool.required_pages(min(est + e.decode_chunk, true_len + budget))
+            have = len(self.pool.owned(slot))
+            if need > have:
+                growth.append((slot, have, need))
+                total_new += need - have
+        if total_new > self.pool.free_pages:
+            raise RuntimeError(
+                f"KV pool exhausted mid-decode: growing {len(growth)} slot(s) for "
+                f"the next chunk needs {total_new} pages but only "
+                f"{self.pool.free_pages}/{self.pool.n_pages} are free "
+                f"(page_size={self.pool.page_size}). Raise --pool-pages or admit "
+                "fewer/shorter requests; the engine state is unchanged."
+            )
+        # phase 2 — COMMIT: allocations cannot fail now. Evicted slots'
+        # stale rows are re-aimed at the scratch page in the same table
+        # update (their frozen ride-along writes must not land on pages the
+        # pool may reissue); the stale set is cleared only after the device
+        # table actually carries the re-aim.
+        upd_rows: List[int] = []
+        upd_cols: List[int] = []
+        upd_vals: List[int] = []
+        for slot in sorted(self._stale_slots):
+            for k in range(self.pool.pages_per_slot):
+                upd_rows.append(slot)
+                upd_cols.append(k)
+                upd_vals.append(self.pool.scratch_page)
+            self.stats["table_resets"] += 1
+        for slot, have, need in growth:
+            pages = self.pool.alloc(slot, need)
+            for k in range(have, need):
+                upd_rows.append(slot)
+                upd_cols.append(k)
+                upd_vals.append(pages[k])
+            self.stats["page_appends"] += need - have
+        for slot, (true_len, budget) in self._meta.items():
+            self._pos_est[slot] = min(
+                self._pos_est[slot] + e.decode_chunk, true_len + budget - 1
+            )
+        if upd_rows:
+            self._state = self._state._replace(
+                page_table=self._state.page_table.at[
+                    jnp.asarray(upd_rows, jnp.int32), jnp.asarray(upd_cols, jnp.int32)
+                ].set(jnp.asarray(upd_vals, jnp.int32))
+            )
+        self._stale_slots.clear()
+
     def decode_chunk(self) -> None:
         """Up to ``decode_chunk`` batched decode steps in ONE dispatch."""
+        if self.pool is not None:
+            self._ensure_chunk_pages()
         self._state = self._chunk_jit(self.params, self._state)
         self.stats["decode_chunks"] += 1
 
     def sync(self):
         """The once-per-chunk host sync: (active, n_out) as numpy, fetched
-        in a single device-to-host transfer."""
+        in a single device-to-host transfer. Also reconciles the paged
+        layout's conservative per-slot position estimates to the truth."""
         active, n_out = jax.device_get((self._state.active, self._state.n_out))
         self.stats["host_syncs"] += 1
+        if self.pool is not None:
+            for slot, (true_len, _) in self._meta.items():
+                self._pos_est[slot] = true_len + int(n_out[slot]) - 1
         return active, n_out
 
     def fetch(self, slot: int, n_out: int) -> np.ndarray:
-        """Copy a finished slot's generated tokens to host and free the slot."""
+        """Copy a finished slot's generated tokens to host and free the slot
+        (returning its pages to the pool in the paged layout)."""
         toks = np.asarray(self._state.out[slot])[:n_out]
         self.free_slots.append(slot)
+        if self.pool is not None:
+            self.pool.free_slot(slot)
+            self._meta.pop(slot, None)
+            self._pos_est.pop(slot, None)
+            self._stale_slots.add(slot)
         self.stats["evicted"] += 1
         return toks

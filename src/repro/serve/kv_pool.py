@@ -1,0 +1,130 @@
+"""Paged KV-cache block pool for the continuous-batching engine.
+
+The dense engine cache is a per-slot rectangle: every slot owns
+``cache_len = min(window, max_seq) or max_seq`` KV positions whether it is
+serving a 2k-token request or an 8-token one — HBM is ``slots × max_len``
+at rest. The pool replaces that rectangle with fixed-size **pages**:
+
+  * the device buffers are ``(pool_pages, page_size, KH, hd)`` per attention
+    layer (stacked over scan groups) — HBM scales with *allocated pages*,
+    i.e. live tokens, not slot capacity;
+  * each slot's logical cache is its **page table** row: logical index ``j``
+    lives at ``(page_table[slot, j // page_size], j % page_size)``. For
+    sliding-window layers the logical space is the same ring the dense cache
+    uses, so the two layouts are token-for-token interchangeable;
+  * this class is the HOST-side allocator: a free list plus per-slot
+    ownership. Admission allocates the pages the bucketed prefill fills,
+    :meth:`ServeEngine.decode_chunk` appends pages as positions cross page
+    boundaries (at chunk granularity — the device program never touches the
+    free list), and eviction returns a slot's pages.
+
+Invariants (pinned by ``tests/test_kv_pool.py``'s randomized property test):
+free + owned always partitions ``range(n_pages)``; a page is owned by at
+most one slot; ``alloc`` past capacity raises instead of silently reusing.
+
+Unallocated/stale page-table entries point at the **scratch page** — one
+sacrificial page past the pool that is never handed out. It exists because
+idle slots keep rewriting their frozen position as they ride along in the
+batched decode: pointing them anywhere allocatable would clobber a live
+slot's KV the moment their old pages were reissued.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.models.attention import cache_len
+
+
+class KVPool:
+    """Host-side page allocator; the page buffers themselves live in the
+    engine's device state and are addressed by the ids handed out here."""
+
+    def __init__(self, cfg, ecfg):
+        self.page_size = ecfg.page_size
+        self.cache_len = cache_len(cfg, ecfg.max_seq)
+        # table width: pages needed to cover one slot's full logical cache
+        self.pages_per_slot = -(-self.cache_len // self.page_size)
+        self.n_pages = ecfg.pool_pages or ecfg.max_slots * self.pages_per_slot
+        # fail-fast floor, billed in PAGES against the MODEL's cache length:
+        # a minimal (bucket_min-token) admission occupies whole pages, but
+        # never more than the slot's full ring — so tight SWA pools that a
+        # token-level or window-blind bound would spuriously reject pass.
+        # pages_min >= 1, so this also guarantees one page per slot.
+        bucket_min = min(ecfg.prefill_bucket, ecfg.max_seq)
+        pages_min = min(-(-bucket_min // self.page_size), self.pages_per_slot)
+        if self.n_pages < ecfg.max_slots * pages_min:
+            raise ValueError(
+                f"pool_pages={self.n_pages} cannot back max_slots={ecfg.max_slots} "
+                f"minimal admissions of {pages_min} page(s) each "
+                f"(bucket_min={bucket_min} tokens, page_size={self.page_size}, "
+                f"cache_len={self.cache_len}) — a full admission burst would "
+                "exhaust the pool at prefill. Raise pool_pages or lower "
+                "max_slots/prefill_bucket."
+            )
+        # INACTIVE slots still ride along in the batched decode, rewriting
+        # their frozen position every step (the dense layout absorbs that in
+        # the slot's own row). Their page-table rows must therefore never
+        # point at allocatable pages: one sacrificial page past the pool is
+        # the write target for every idle/evicted slot. It is never handed
+        # out, so a stale row can clobber nothing.
+        self.scratch_page = self.n_pages
+        self._free: List[int] = []
+        self._owned: Dict[int, List[int]] = {}
+        self.reset()
+
+    # -- bookkeeping ---------------------------------------------------------
+
+    def reset(self) -> None:
+        self._free = list(range(self.n_pages - 1, -1, -1))  # pop() hands out 0 first
+        self._owned = {}
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return sum(len(p) for p in self._owned.values())
+
+    def owned(self, slot: int) -> List[int]:
+        return list(self._owned.get(slot, ()))
+
+    def required_pages(self, length: int) -> int:
+        """Pages covering ``length`` logical positions (ring-clamped)."""
+        return min(-(-min(length, self.cache_len) // self.page_size), self.pages_per_slot)
+
+    # -- transitions ---------------------------------------------------------
+
+    def alloc(self, slot: int, n_pages: int) -> List[int]:
+        """Grow ``slot``'s ownership to ``n_pages`` pages (idempotent past
+        what it already holds); returns the slot's full page list in logical
+        order. Raises when the pool cannot cover the growth."""
+        owned = self._owned.setdefault(slot, [])
+        need = n_pages - len(owned)
+        if need > len(self._free):
+            raise RuntimeError(
+                f"KV pool exhausted: slot {slot} needs {need} more pages but only "
+                f"{len(self._free)}/{self.n_pages} are free "
+                f"(page_size={self.page_size}). Raise --pool-pages, shrink request "
+                "budgets, or lower --max-slots."
+            )
+        for _ in range(max(need, 0)):
+            owned.append(self._free.pop())
+        return list(owned)
+
+    def free_slot(self, slot: int) -> List[int]:
+        """Return all of ``slot``'s pages to the free list (eviction/drain)."""
+        pages = self._owned.pop(slot, [])
+        self._free.extend(pages)
+        return pages
+
+    def table_row(self, slot: int) -> np.ndarray:
+        """The slot's full-width page-table row, scratch-padded past its
+        allocation (padding entries are a safe DMA/write target, never an
+        owned page)."""
+        row = np.full((self.pages_per_slot,), self.scratch_page, np.int32)
+        owned = self._owned.get(slot, ())
+        row[: len(owned)] = owned
+        return row

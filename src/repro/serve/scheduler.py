@@ -10,8 +10,9 @@ The host-side loop around :class:`repro.serve.engine.ServeEngine`:
     prefill dispatch per bucket/power-of-two group), interleaved with decode
     chunks over everything resident;
   * after each chunk ONE host sync reads the tiny per-slot status, finished
-    sequences are drained (token row copied out, slot freed) and the freed
-    slots are immediately refillable.
+    sequences are drained (token row copied out, slot freed — and in the
+    paged KV layout the slot's pages go back to the pool free list) and the
+    freed slots are immediately refillable.
 
 Per decoded token the host does O(1/decode_chunk) syncs — the legacy static
 path did one ``np.asarray`` per token.
@@ -105,11 +106,25 @@ class ContinuousScheduler:
             while pending and pending[0].arrival <= now:
                 queue.append(pending.popleft())
             if queue and eng.free_slots:
-                burst = [queue.popleft() for _ in range(min(len(queue), len(eng.free_slots)))]
-                slots = eng.admit_many([(r.tokens, r.max_new_tokens) for r in burst])
-                t_admit = clock.now()
-                for slot, req in zip(slots, burst):
-                    resident[slot] = (req, t_admit)
+                # burst size is bounded by free slots AND (paged layout) by
+                # free KV pages — excess requests stay queued and admit when
+                # a drain returns capacity, instead of crashing the run
+                n = eng.max_admissible([(r.tokens, r.max_new_tokens) for r in queue])
+                if n == 0 and not resident:
+                    r = queue[0]
+                    raise RuntimeError(
+                        f"request rid={r.rid} (prompt {len(r.tokens)} tokens, "
+                        f"budget {r.max_new_tokens}) can never be admitted: its "
+                        "lifetime page bill outruns the EMPTY KV pool, so no "
+                        "amount of draining frees enough pages. Raise --pool-pages "
+                        "or shrink the prompt/budget."
+                    )
+                burst = [queue.popleft() for _ in range(n)]
+                if burst:
+                    slots = eng.admit_many([(r.tokens, r.max_new_tokens) for r in burst])
+                    t_admit = clock.now()
+                    for slot, req in zip(slots, burst):
+                        resident[slot] = (req, t_admit)
             if resident:
                 eng.decode_chunk()
                 active, n_out = eng.sync()

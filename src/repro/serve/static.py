@@ -8,6 +8,10 @@ ONE jitted program: tokens accumulate on device in a ``lax.scan`` and cross
 to host once at the end. This is the ``--engine static`` baseline arm of the
 ``servepath`` A/B; the continuous engine (:mod:`repro.serve.engine`) beats
 it by admitting work as it arrives instead of waiting for a full batch.
+
+The static path always decodes against the DENSE per-slot cache (scalar
+positions, small-SDPA attention) — it is the cross-layout parity oracle the
+paged engine's token streams are pinned against in ``tests/test_serve.py``.
 """
 from __future__ import annotations
 

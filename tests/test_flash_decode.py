@@ -1,0 +1,173 @@
+"""Paged flash-decode kernel tests.
+
+ * the blocked-jnp ref twin vs the dense ``_sdpa_small`` decode math, with
+   the SAME cache contents viewed through pages (GQA × window × softcap —
+   the acceptance feature matrix);
+ * the Pallas kernel body (interpret mode) vs the ref twin;
+ * model-level: ``attn_decode`` over a paged cache matches ``attn_decode``
+   over a dense cache holding identical keys/values;
+ * the inference-only contract: differentiating flash_decode raises.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig
+from repro.kernels.flash_decode import flash_decode, flash_decode_pallas, flash_decode_ref
+from repro.models.attention import (
+    attn_decode,
+    init_attention,
+    init_cache,
+    init_paged_cache,
+)
+
+CASES = [
+    ({"h": 4, "kh": 2}, 0, 0.0, 32, 8),  # GQA, full attention
+    ({"h": 4, "kh": 4}, 0, 20.0, 32, 16),  # MHA + softcap
+    ({"h": 8, "kh": 2}, 10, 0.0, 10, 4),  # GQA + sliding-window ring
+    ({"h": 4, "kh": 1}, 16, 30.0, 16, 8),  # MQA + window + softcap
+]
+IDS = ["gqa", "softcap", "window", "mqa-window-softcap"]
+
+
+def _mk_paged(rng, b, heads, window, softcap, cl, ps, extra_pages=4):
+    """Random pages + a disjoint per-row page table + positions."""
+    h, kh = heads["h"], heads["kh"]
+    hd = 16
+    w = -(-cl // ps)
+    n_pages = b * w + extra_pages
+    k_pages = jnp.asarray(rng.randn(n_pages, ps, kh, hd).astype(np.float32))
+    v_pages = jnp.asarray(rng.randn(n_pages, ps, kh, hd).astype(np.float32))
+    q = jnp.asarray(rng.randn(b, h, hd).astype(np.float32))
+    table = jnp.asarray(rng.permutation(n_pages)[: b * w].reshape(b, w), jnp.int32)
+    hi = 3 * cl if window else cl
+    pos = jnp.asarray(rng.randint(0, hi, size=b), jnp.int32)
+    return q, k_pages, v_pages, table, pos
+
+
+def _dense_view(k_pages, table, cl):
+    """Materialize each row's logical cache from its pages: (B, cl, KH, hd)."""
+    ps = k_pages.shape[1]
+    w = table.shape[1]
+    flat = jnp.reshape(k_pages[table], (table.shape[0], w * ps, *k_pages.shape[2:]))
+    return flat[:, :cl]
+
+
+def _sdpa_oracle(q, k, v, pos, window, softcap, cl):
+    """The dense attn_decode masking + softmax math, unbatched-reference."""
+    b, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    posv = np.asarray(pos)
+    ring = np.arange(cl)[None, :]
+    p = posv[:, None]
+    if window > 0:
+        slot = posv % cl
+        wrap = (p // cl) * cl
+        k_pos = np.where(ring <= slot[:, None], wrap + ring, wrap - cl + ring)
+        valid = (k_pos >= 0) & (k_pos <= p) & (k_pos > p - window)
+    else:
+        valid = ring <= p
+    qn = np.asarray(q).reshape(b, kh, g, hd)
+    s = np.einsum("bkgd,bskd->bkgs", qn, np.asarray(k)) / np.sqrt(hd)
+    if softcap > 0:
+        s = np.tanh(s / softcap) * softcap
+    s = np.where(valid[:, None, None, :], s, -1e30)
+    pr = np.exp(s - s.max(-1, keepdims=True))
+    pr = pr / pr.sum(-1, keepdims=True)
+    return np.einsum("bkgs,bskd->bkgd", pr, np.asarray(v)).reshape(b, h, hd)
+
+
+@pytest.mark.parametrize("heads,window,softcap,cl,ps", CASES, ids=IDS)
+def test_ref_matches_dense_sdpa_math(heads, window, softcap, cl, ps):
+    """The paged ref twin is the dense decode attention seen through the
+    page-table indirection (acceptance criterion's CPU arm)."""
+    rng = np.random.RandomState(0)
+    q, k_pages, v_pages, table, pos = _mk_paged(rng, 3, heads, window, softcap, cl, ps)
+    got = flash_decode_ref(
+        q, k_pages, v_pages, table, pos, window=window, softcap=softcap, cache_len=cl
+    )
+    want = _sdpa_oracle(
+        q, _dense_view(k_pages, table, cl), _dense_view(v_pages, table, cl),
+        pos, window, softcap, cl,
+    )
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("heads,window,softcap,cl,ps", CASES, ids=IDS)
+def test_kernel_interpret_matches_ref(heads, window, softcap, cl, ps):
+    """Pallas kernel body (interpreter) vs the blocked-jnp twin — the
+    kernel-vs-ref parity pin for interpret mode."""
+    rng = np.random.RandomState(1)
+    q, k_pages, v_pages, table, pos = _mk_paged(rng, 2, heads, window, softcap, cl, ps)
+    ref = flash_decode_ref(
+        q, k_pages, v_pages, table, pos, window=window, softcap=softcap, cache_len=cl
+    )
+    ker = flash_decode_pallas(
+        q, k_pages, v_pages, table, pos,
+        window=window, softcap=softcap, cache_len=cl, interpret=True,
+    )
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("kw", [{}, {"sliding_window": 8}, {"attn_logit_softcap": 15.0}],
+                         ids=["full", "window", "softcap"])
+def test_attn_decode_paged_matches_dense(kw):
+    """Model-level parity: one attn_decode step over a paged cache vs a dense
+    cache holding the SAME keys/values (built by replaying the paged writes
+    into the dense ring)."""
+    cfg = ModelConfig(
+        name="t", family="dense", num_layers=1, d_model=32, num_heads=4,
+        num_kv_heads=2, head_dim=8, d_ff=64, vocab_size=64, dtype="float32",
+        param_dtype="float32", decode_backend="ref", **kw,
+    )
+    b, max_seq, ps = 3, 32, 8
+    params = init_attention(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (b, 1, cfg.d_model), jnp.float32)
+    pos = jnp.asarray([3, 9, 14], jnp.int32)
+
+    dense = init_cache(cfg, b, max_seq, jnp.float32)
+    fill_k = jax.random.normal(jax.random.key(2), dense["k"].shape, jnp.float32)
+    fill_v = jax.random.normal(jax.random.key(3), dense["v"].shape, jnp.float32)
+    dense = {"k": fill_k, "v": fill_v}
+    cl = dense["k"].shape[1]
+    w = -(-cl // ps)
+    paged = init_paged_cache(cfg, b * w, ps, jnp.float32)
+    table = jnp.arange(b * w, dtype=jnp.int32).reshape(b, w)
+    pad = (-cl) % ps
+    as_pages = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0))).reshape(
+        b * w, ps, *a.shape[2:]
+    )
+    paged = {"k_pages": as_pages(fill_k), "v_pages": as_pages(fill_v)}
+
+    out_d, new_d = attn_decode(params, x, cfg, dense, pos)
+    out_p, new_p = attn_decode(params, x, cfg, paged, pos, page_table=table)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_d), rtol=1e-5, atol=1e-5)
+    # the paged write landed exactly where the dense ring write did
+    posv = np.asarray(pos)
+    slot = posv % cl if cfg.sliding_window > 0 else np.minimum(posv, cl - 1)
+    for i in range(b):
+        np.testing.assert_allclose(
+            np.asarray(new_p["k_pages"][table[i, slot[i] // ps], slot[i] % ps]),
+            np.asarray(new_d["k"][i, slot[i]]),
+            rtol=1e-6, atol=1e-6,
+        )
+
+
+def test_flash_decode_is_inference_only():
+    """The grad-safety guard: flash_decode claims no backward and must fail
+    loudly (not silently differentiate a gather graph) if it ever enters a
+    loss path — on every backend, including ref."""
+    rng = np.random.RandomState(2)
+    q, k_pages, v_pages, table, pos = _mk_paged(rng, 2, {"h": 4, "kh": 2}, 0, 0.0, 16, 8)
+
+    def loss(q):
+        return jnp.sum(
+            flash_decode(q, k_pages, v_pages, table, pos, cache_len=16, backend="ref")
+        )
+
+    with pytest.raises(NotImplementedError, match="inference-only"):
+        jax.grad(loss)(q)

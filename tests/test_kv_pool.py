@@ -1,0 +1,269 @@
+"""Paged KV-cache pool tests.
+
+ * fail-fast EngineConfig/pool validation (pre-device-allocation, PR 3
+   arg-audit style);
+ * randomized admit/append/evict property test on the allocator: free-list
+   conservation, no page leaks, no double-allocation, exhaustion raises;
+ * the acceptance shape/size pin: the paged state's HBM footprint is
+   ``pool_pages × page_size``-shaped — NOT ``slots × max_len``-shaped — and
+   shrinks when the pool does.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig
+from repro.models import init_lm, init_lm_state
+from repro.serve import EngineConfig, KVPool, ServeEngine
+
+
+def _mk(**kw):
+    base = dict(
+        name="t", family="dense", num_layers=2, d_model=32, num_heads=4,
+        num_kv_heads=2, head_dim=8, d_ff=64, vocab_size=64, scan_layers=False,
+        remat=False, dtype="float32", param_dtype="float32",
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# fail-fast validation
+
+
+def test_engine_config_rejects_bad_paged_knobs():
+    """Every inconsistent knob combination dies at CONSTRUCTION with a clear
+    message — before any device allocation."""
+    with pytest.raises(ValueError, match="power of two"):
+        EngineConfig(page_size=12)
+    with pytest.raises(ValueError, match="power of two"):
+        EngineConfig(page_size=0)
+    with pytest.raises(ValueError, match="multiple of"):
+        EngineConfig(max_seq=40, page_size=16)
+    with pytest.raises(ValueError, match="at least one page"):
+        EngineConfig(pool_pages=1, max_slots=4)
+    with pytest.raises(ValueError, match="kv_layout"):
+        EngineConfig(kv_layout="paged2")
+    with pytest.raises(ValueError, match=">= 1"):
+        EngineConfig(max_slots=0)
+    # dense layout does not care about page knobs
+    EngineConfig(kv_layout="dense", page_size=12, max_seq=40)
+    # and a consistent paged config passes
+    EngineConfig(pool_pages=8, max_slots=4, prefill_bucket=32, page_size=16, max_seq=64)
+
+
+def test_pool_floor_bills_pages_against_model_cache_len():
+    """The pool-vs-burst floor lives in KVPool (it needs the model): it
+    bills whole PAGES per minimal admission, but never more than the slot's
+    ring — so tight SWA pools that a token-level or window-blind bound would
+    spuriously reject are accepted."""
+    with pytest.raises(ValueError, match="exhaust the pool"):
+        # 4 pages < 4 slots × 2 pages per bucket_min(32) admission
+        KVPool(_mk(), EngineConfig(pool_pages=4, max_slots=4, prefill_bucket=32,
+                                   page_size=16, max_seq=64))
+    with pytest.raises(ValueError, match="exhaust the pool"):
+        # bills PAGES, not tokens: 6×16=96 tokens >= 4×24 tokens, but a
+        # 24-token bucket occupies ceil(24/16)=2 whole pages → 8 > 6
+        KVPool(_mk(), EngineConfig(pool_pages=6, max_slots=4, prefill_bucket=24,
+                                   page_size=16, max_seq=48))
+    # an 8-token SWA ring is ONE page per slot no matter the bucket — the
+    # same 4-page pool that fails above backs all 4 slots here
+    pool = KVPool(_mk(sliding_window=8),
+                  EngineConfig(pool_pages=4, max_slots=4, prefill_bucket=32,
+                               page_size=16, max_seq=64))
+    assert pool.pages_per_slot == 1 and pool.n_pages == 4
+
+
+def test_pool_rejects_starved_capacity():
+    cfg = _mk()
+    # bypass EngineConfig's own pool_pages >= max_slots guard, so the pool's
+    # page-billed floor (pages_min >= 1 per slot) is what trips
+    ecfg = EngineConfig(max_slots=4, max_seq=32, prefill_bucket=1, page_size=16, pool_pages=0)
+    object.__setattr__(ecfg, "pool_pages", 2)  # frozen: simulate a raw config
+    with pytest.raises(ValueError, match="exhaust the pool"):
+        KVPool(cfg, ecfg)
+
+
+# ---------------------------------------------------------------------------
+# allocator property test
+
+
+def test_pool_randomized_invariants():
+    """Random admit/append/evict sequences: pages partition exactly into
+    free + owned, no page is ever owned twice, eviction conserves, and
+    over-allocation raises instead of double-booking."""
+    cfg = _mk()
+    ecfg = EngineConfig(max_slots=6, max_seq=64, prefill_bucket=16, page_size=16)
+    pool = KVPool(cfg, ecfg)
+    rng = np.random.RandomState(3)
+    live = set()
+
+    def check():
+        owned_all = [p for s in live for p in pool.owned(s)]
+        assert len(owned_all) == len(set(owned_all)), "page double-booked"
+        assert pool.free_pages + len(owned_all) == pool.n_pages, "free-list leak"
+        assert pool.pages_in_use == len(owned_all)
+
+    for step in range(300):
+        op = rng.randint(3)
+        if op == 0 and len(live) < ecfg.max_slots:  # admit
+            slot = next(s for s in range(ecfg.max_slots) if s not in live)
+            want = int(rng.randint(1, pool.pages_per_slot + 1))
+            if want <= pool.free_pages:
+                pages = pool.alloc(slot, want)
+                assert len(pages) == want and len(set(pages)) == want
+                live.add(slot)
+            else:
+                with pytest.raises(RuntimeError, match="exhausted"):
+                    pool.alloc(slot, want)
+                pool.free_slot(slot)  # alloc failed: slot owns nothing
+        elif op == 1 and live:  # append (idempotent growth)
+            slot = rng.choice(sorted(live))
+            before = pool.owned(slot)
+            want = int(rng.randint(1, pool.pages_per_slot + 1))
+            if max(0, want - len(before)) <= pool.free_pages:
+                pages = pool.alloc(slot, want)
+                assert pages[: len(before)] == before, "growth reordered pages"
+                assert len(pages) == max(want, len(before))
+        elif op == 2 and live:  # evict
+            slot = rng.choice(sorted(live))
+            owned = set(pool.owned(slot))
+            freed = set(pool.free_slot(slot))
+            assert freed == owned
+            live.discard(slot)
+        check()
+
+    for slot in sorted(live):
+        pool.free_slot(slot)
+    assert pool.free_pages == pool.n_pages and pool.pages_in_use == 0
+
+
+def test_pool_table_row_padding():
+    """Padding entries point at the scratch page — never at page 0, which is
+    allocatable (an idle slot's ride-along write through a 0 padding entry
+    would clobber page 0's owner)."""
+    cfg = _mk()
+    pool = KVPool(cfg, EngineConfig(max_slots=2, max_seq=64, page_size=16))
+    pages = pool.alloc(1, 2)
+    row = pool.table_row(1)
+    assert row.shape == (pool.pages_per_slot,)
+    assert list(row[:2]) == pages
+    assert (row[2:] == pool.scratch_page).all()
+    assert pool.scratch_page == pool.n_pages  # one past the pool: unallocatable
+
+
+# ---------------------------------------------------------------------------
+# HBM footprint scaling (acceptance criterion)
+
+
+def _attn_cache_bytes(state):
+    return sum(
+        leaf.nbytes
+        for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]
+        for key in [jax.tree_util.keystr(path)]
+        if "k_pages" in key or "v_pages" in key or key.endswith("['k']") or key.endswith("['v']")
+    )
+
+
+def test_paged_footprint_scales_with_pool_not_slots():
+    """The pool buffer is (pool_pages, page_size, ...)-shaped: shrinking
+    pool_pages shrinks HBM; the dense rectangle is pinned to slots × max_len
+    no matter how little of it is live."""
+    cfg = _mk()
+    slots, max_seq, ps = 8, 256, 16
+    kh, hd, groups = cfg.num_kv_heads, cfg.head_dim_, cfg.num_layers
+    itemsize = 4  # float32
+
+    dense = init_lm_state(cfg, slots, max_seq)
+    assert _attn_cache_bytes(dense) == 2 * groups * slots * max_seq * kh * hd * itemsize
+
+    for pool_pages in (32, 64):
+        paged = init_lm_state(cfg, slots, max_seq, kv_pages=pool_pages, kv_page_size=ps)
+        got = _attn_cache_bytes(paged)
+        assert got == 2 * groups * pool_pages * ps * kh * hd * itemsize
+        assert got < _attn_cache_bytes(dense)
+    # halving the pool halves the footprint — pages, not slots, set the bill
+    small = _attn_cache_bytes(init_lm_state(cfg, slots, max_seq, kv_pages=32, kv_page_size=ps))
+    big = _attn_cache_bytes(init_lm_state(cfg, slots, max_seq, kv_pages=64, kv_page_size=ps))
+    assert big == 2 * small
+
+
+def test_admit_burst_exceeding_pool_is_atomic():
+    """A burst whose bucketed prefills outbill the free pages is rejected
+    BEFORE any slot pop / page alloc / dispatch — the engine stays clean and
+    a smaller burst still admits."""
+    cfg = _mk()
+    params = init_lm(cfg, jax.random.key(0))
+    # 8 pages of 8 tokens: satisfies the construction floor (4 slots × 16
+    # bucket_min), but LONGER prompts bill 4 pages each — the case only the
+    # admission-time check can catch
+    eng = ServeEngine(
+        cfg, params,
+        EngineConfig(
+            max_slots=4, max_seq=32, max_new=4, prefill_bucket=16,
+            page_size=8, pool_pages=8,
+        ),
+    )
+    prompts = [np.arange(20, dtype=np.int32) % cfg.vocab_size] * 4  # 16 pages billed
+    with pytest.raises(RuntimeError, match="cannot admit this burst"):
+        eng.admit_many([(p, 2) for p in prompts])
+    assert sorted(eng.free_slots) == [0, 1, 2, 3]  # no slot leaked
+    assert eng.pool.free_pages == 8 and eng.pool.pages_in_use == 0  # no page leaked
+    assert eng.stats["admitted"] == 0 and eng.stats["prefill_dispatches"] == 0
+    slots = eng.admit_many([(prompts[0], 2), (prompts[1], 2)])  # retry smaller: fine
+    assert len(slots) == 2 and eng.pool.pages_in_use == 8
+
+
+def test_chunk_page_exhaustion_leaves_engine_unchanged():
+    """Decode-time growth past the pool raises BEFORE any mutation: the
+    stale set, the pool free list, and the page table survive intact —
+    partial commitment would either re-open the stale-row clobber or leave
+    a slot owning pages its device table never maps."""
+    cfg = _mk()
+    params = init_lm(cfg, jax.random.key(0))
+    eng = ServeEngine(
+        cfg, params,
+        EngineConfig(
+            max_slots=2, max_seq=64, max_new=32, decode_chunk=16,
+            prefill_bucket=8, page_size=8, pool_pages=4,
+        ),
+    )
+    # two 8-token prompts (1 page each) whose budgets need 3 pages each —
+    # the chunk-time bill (4 new pages) exceeds the 2 remaining
+    s0, s1 = eng.admit_many([(np.arange(8, dtype=np.int32), 16)] * 2)
+    eng._stale_slots.add("sentinel")  # must survive the failed ensure
+    free_before = eng.pool.free_pages
+    owned_before = {s: eng.pool.owned(s) for s in (s0, s1)}
+    table_before = np.asarray(eng._state.page_table).copy()
+    with pytest.raises(RuntimeError, match="engine state is unchanged"):
+        eng.decode_chunk()
+    assert "sentinel" in eng._stale_slots
+    assert eng.pool.free_pages == free_before
+    assert {s: eng.pool.owned(s) for s in (s0, s1)} == owned_before
+    np.testing.assert_array_equal(np.asarray(eng._state.page_table), table_before)
+    assert eng.stats["decode_chunks"] == 0  # nothing dispatched
+
+
+def test_engine_paged_state_uses_pool_shapes():
+    """End-to-end: a ServeEngine built with a small explicit pool carries the
+    pool-shaped cache in its device state (and still serves correctly —
+    parity is pinned in test_serve)."""
+    cfg = _mk()
+    params = init_lm(cfg, jax.random.key(0))
+    ecfg = EngineConfig(
+        max_slots=2, max_seq=64, max_new=8, prefill_bucket=16, page_size=16, pool_pages=6,
+    )
+    eng = ServeEngine(cfg, params, ecfg)
+    leaves = {
+        jax.tree_util.keystr(p): l
+        for p, l in jax.tree_util.tree_flatten_with_path(eng._state.kv)[0]
+    }
+    pages = [l for k, l in leaves.items() if "k_pages" in k or "v_pages" in k]
+    # (G, P+1, ps, KH, hd): pool pages plus the one scratch page idle slots
+    # write through — a constant, not a per-slot cost
+    assert pages and all(l.shape[1:3] == (7, 16) for l in pages)
+    assert eng._state.page_table.shape == (2, 64 // 16)
+    assert eng.pool.n_pages == 6 and eng.pool.scratch_page == 6

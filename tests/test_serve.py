@@ -5,12 +5,15 @@
    and gradient parity through the Pallas custom-vjp;
  * attention backend dispatch rules (auto never interprets off-TPU);
  * continuous engine vs fused static batch: exact greedy token parity for
-   identical prompts (incl. slot reuse and bucketed ragged prompts);
+   identical prompts (incl. slot reuse and bucketed ragged prompts), in
+   BOTH KV layouts — the static arm is always dense, so the paged run pins
+   paged==dense token-for-token across full/SWA/softcap attention;
  * the fused static path vs the legacy per-token decode loop;
  * O(1) host syncs per decode chunk (the zero-per-token-sync contract);
  * scheduler invariants under randomized admission: every request drains,
-   no slot leaks, slots never double-booked;
- * launch.serve fail-fast argument audit.
+   no slot leaks, slots never double-booked — and in the paged layout, no
+   page leaks and free-list conservation on every transition;
+ * launch.serve fail-fast argument audit (incl. the paged-KV knobs).
 """
 from __future__ import annotations
 
@@ -108,11 +111,17 @@ def test_attn_backend_dispatch_rules():
 # continuous engine vs static batch
 
 
-@pytest.mark.parametrize("kw", [{}, {"sliding_window": 8}], ids=["dense", "swa"])
-def test_engine_matches_static_tokens(kw):
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+@pytest.mark.parametrize(
+    "kw", [{}, {"sliding_window": 8}, {"attn_logit_softcap": 20.0}],
+    ids=["full", "swa", "softcap"],
+)
+def test_engine_matches_static_tokens(kw, layout):
     """Identical prompts through the slot engine and the fused static batch
     yield identical greedy tokens — including ragged bucketed prompts,
-    prompts longer than the SWA window, and slot reuse (requests > slots)."""
+    prompts longer than the SWA window, and slot reuse (requests > slots).
+    The static arm always decodes the dense cache, so the paged runs are the
+    paged==dense acceptance pin across the decode feature matrix."""
     cfg = _mk(**kw)
     params = init_lm(cfg, jax.random.key(0))
     rng = np.random.RandomState(0)
@@ -124,7 +133,10 @@ def test_engine_matches_static_tokens(kw):
     ]
     eng = ServeEngine(
         cfg, params,
-        EngineConfig(max_slots=2, max_seq=48, max_new=gen, decode_chunk=3, prefill_bucket=8),
+        EngineConfig(
+            max_slots=2, max_seq=48, max_new=gen, decode_chunk=3, prefill_bucket=8,
+            kv_layout=layout, page_size=16,
+        ),
     )
     comps = ContinuousScheduler(eng, clock=ManualClock()).run(
         [Request(rid=i, tokens=p, max_new_tokens=gen) for i, p in enumerate(prompts)]
@@ -132,6 +144,174 @@ def test_engine_matches_static_tokens(kw):
     assert [c.rid for c in comps] == list(range(len(prompts)))
     for c, ref in zip(comps, refs):
         np.testing.assert_array_equal(c.tokens, ref)
+    if layout == "paged":
+        assert eng.pool.pages_in_use == 0 and eng.pool.free_pages == eng.pool.n_pages
+
+
+def test_engine_paged_matches_dense_ragged_budgets():
+    """Paged vs dense engines on the SAME ragged-budget staggered stream:
+    token-for-token identical completions, with slot reuse and decode-time
+    page appends in play (a tight pool forces the append path)."""
+    cfg = _mk()
+    params = init_lm(cfg, jax.random.key(0))
+    rng = np.random.RandomState(4)
+    reqs = [
+        Request(
+            rid=i,
+            tokens=rng.randint(0, cfg.vocab_size, size=int(rng.randint(4, 14))).astype(np.int32),
+            max_new_tokens=int(rng.randint(2, 9)),
+            arrival=float(rng.uniform(0.0, 3.0)),
+        )
+        for i in range(7)
+    ]
+    outs = {}
+    for layout, pool_pages in (("dense", 0), ("paged", 8)):
+        eng = ServeEngine(
+            cfg, params,
+            EngineConfig(
+                max_slots=2, max_seq=48, max_new=8, decode_chunk=3, prefill_bucket=8,
+                kv_layout=layout, page_size=8, pool_pages=pool_pages,
+            ),
+        )
+        comps = ContinuousScheduler(eng, clock=ManualClock(tick=0.2)).run(reqs)
+        outs[layout] = {c.rid: c.tokens for c in comps}
+        if layout == "paged":
+            assert eng.stats["page_appends"] > 0  # the append path actually ran
+    assert outs["dense"].keys() == outs["paged"].keys()
+    for rid in outs["dense"]:
+        np.testing.assert_array_equal(outs["dense"][rid], outs["paged"][rid])
+
+
+def test_scheduler_defers_admission_on_tight_pool():
+    """A pool too small for a full burst DEFERS the excess (requests stay
+    queued until a drain returns pages) instead of crashing the run — and
+    the deferred stream still matches the dense engine token-for-token. A
+    request that outbills even the empty pool raises up front."""
+    cfg = _mk()
+    params = init_lm(cfg, jax.random.key(0))
+    rng = np.random.RandomState(6)
+    prompts = [rng.randint(0, cfg.vocab_size, size=20).astype(np.int32) for _ in range(4)]
+    reqs = [Request(rid=i, tokens=p, max_new_tokens=4) for i, p in enumerate(prompts)]
+    outs = {}
+    for layout, pool_pages in (("dense", 0), ("paged", 4)):
+        # paged: a 20-token prompt buckets to 32 tokens = ALL 4 pages, so
+        # only ONE request fits at a time even though 2 slots are free —
+        # the pool, not the slot count, is the binding constraint here
+        eng = ServeEngine(
+            cfg, params,
+            EngineConfig(
+                max_slots=2, max_seq=32, max_new=4, decode_chunk=4,
+                prefill_bucket=16, kv_layout=layout, page_size=8,
+                pool_pages=pool_pages,
+            ),
+        )
+        comps = ContinuousScheduler(eng, clock=ManualClock()).run(reqs)
+        outs[layout] = {c.rid: c.tokens for c in comps}
+        assert sorted(outs[layout]) == [0, 1, 2, 3]  # every request drained
+        if layout == "paged":
+            assert eng.stats["admitted"] == 4
+            assert eng.pool.pages_in_use == 0
+    for rid in outs["dense"]:
+        np.testing.assert_array_equal(outs["dense"][rid], outs["paged"][rid])
+
+    # budget-driven deferral: prefills alone fit together, but admission
+    # bills LIFETIMES (prompt+budget), so the requests serve one at a time
+    # and decode growth can never exhaust the pool mid-run
+    eng = ServeEngine(
+        cfg, params,
+        EngineConfig(
+            max_slots=2, max_seq=32, max_new=16, decode_chunk=4,
+            prefill_bucket=8, page_size=8, pool_pages=4,
+        ),
+    )
+    comps = ContinuousScheduler(eng, clock=ManualClock()).run(
+        [Request(rid=i, tokens=np.arange(8, dtype=np.int32), max_new_tokens=16)
+         for i in range(2)]
+    )
+    assert sorted(c.rid for c in comps) == [0, 1]
+    assert all(len(c.tokens) == 16 for c in comps)
+    assert eng.pool.pages_in_use == 0
+
+    # impossible request: bills more than the WHOLE pool — fail fast, not hang
+    eng = ServeEngine(
+        cfg, params,
+        EngineConfig(
+            max_slots=2, max_seq=32, max_new=4, decode_chunk=4,
+            prefill_bucket=8, page_size=8, pool_pages=2,
+        ),
+    )
+    big = Request(rid=0, tokens=rng.randint(0, 64, size=26).astype(np.int32), max_new_tokens=4)
+    with pytest.raises(RuntimeError, match="never be admitted"):
+        ContinuousScheduler(eng, clock=ManualClock()).run([big])
+
+
+def test_engine_paged_idle_slots_cannot_clobber():
+    """Regression: an evicted slot keeps rewriting its frozen position as it
+    rides along in the batched decode. Its stale page-table row must be
+    re-aimed at the scratch page BEFORE its old pages are reissued — here a
+    short request drains early (its slot stays idle; no refill queued) while
+    the survivors' decode-time appends pop exactly the returned pages. With
+    a stale row, the idle slot's writes land INSIDE a live slot's new page.
+    Greedy argmax can mask that (degenerate random-init streams), so this
+    pins the cache CONTENTS: every live logical position of the survivors'
+    paged caches must equal the dense engine's rows bit-for-bit."""
+    cfg = _mk()
+    params = init_lm(cfg, jax.random.key(0))
+    rng = np.random.RandomState(5)
+    prompts = [rng.randint(0, cfg.vocab_size, size=4).astype(np.int32) for _ in range(3)]
+    budgets = [2, 14, 14]  # index 0 drains after the first chunk, slot never refilled
+
+    def drive(layout):
+        eng = ServeEngine(
+            cfg, params,
+            EngineConfig(
+                max_slots=3, max_seq=32, max_new=16, decode_chunk=2, prefill_bucket=4,
+                kv_layout=layout, page_size=4, pool_pages=12,
+            ),
+        )
+        slots = eng.admit_many(list(zip(prompts, budgets)))
+        freed_pages = None
+        for _ in range(20):
+            eng.decode_chunk()
+            active, n_out = eng.sync()
+            if not active[slots[0]] and freed_pages is None:
+                if eng.pool is not None:
+                    freed_pages = set(eng.pool.owned(slots[0]))
+                eng.fetch(slots[0], int(n_out[slots[0]]))  # early drain; no refill
+            if not active.any():
+                break
+        assert not active.any()
+        return eng, slots, freed_pages
+
+    eng_d, slots_d, _ = drive("dense")
+    eng_p, slots_p, freed = drive("paged")
+    assert slots_d == slots_p
+    # the hazard really occurred: survivors' appends reissued the freed pages
+    survivors_pages = {
+        p for s in (slots_p[1], slots_p[2]) for p in eng_p.pool.owned(s)
+    }
+    assert freed and freed <= survivors_pages
+
+    # tight allclose, not bitwise: the two layouts are different XLA programs
+    # (~1e-6 reassociation noise); a clobbered position differs by O(1)
+    dense_kv = jax.device_get(eng_d._state.kv)
+    paged_kv = jax.device_get(eng_p._state.kv)
+    table = np.asarray(eng_p._state.page_table)
+    ps = 4
+    for idx in (1, 2):  # the survivors
+        slot = slots_p[idx]
+        live = 4 + budgets[idx]  # prompt + generated positions
+        for key in dense_kv:  # p0, p1, ... per-group stacks
+            for dn, pn in (("k", "k_pages"), ("v", "v_pages")):
+                dense_rows = dense_kv[key][dn][:, slot]  # (G, cl, KH, hd)
+                pages = paged_kv[key][pn]  # (G, P, ps, KH, hd)
+                for j in range(live):
+                    got = pages[:, table[slot, j // ps], j % ps]
+                    np.testing.assert_allclose(
+                        got, dense_rows[:, j], rtol=1e-4, atol=1e-4,
+                        err_msg=f"{key}/{pn} slot {slot} logical pos {j} clobbered",
+                    )
+    assert eng_p.stats["table_resets"] >= 1  # the idle slot was re-aimed
 
 
 def test_static_generate_matches_legacy_loop():
@@ -166,7 +346,7 @@ def test_decode_host_syncs_O1_per_chunk():
     for gen in (4, 16):
         eng = ServeEngine(
             cfg, params,
-            EngineConfig(max_slots=1, max_seq=40, max_new=16, decode_chunk=8),
+            EngineConfig(max_slots=1, max_seq=48, max_new=16, decode_chunk=8),
         )
         ContinuousScheduler(eng, clock=ManualClock()).run(
             [Request(rid=0, tokens=prompt, max_new_tokens=gen)]
@@ -179,14 +359,20 @@ def test_decode_host_syncs_O1_per_chunk():
     assert counts[16] == 2 and counts[4] == 1
 
 
-def test_scheduler_randomized_invariants():
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_scheduler_randomized_invariants(layout):
     """Randomized admission: every request drains exactly once with its full
-    budget, slots are never double-booked, and no slot leaks."""
+    budget, slots are never double-booked, and no slot leaks. In the paged
+    layout the auditing wrapper additionally asserts pool hygiene on every
+    transition: free + owned partitions the pool, no page double-booked."""
     cfg = _mk()
     params = init_lm(cfg, jax.random.key(0))
     eng = ServeEngine(
         cfg, params,
-        EngineConfig(max_slots=3, max_seq=48, max_new=10, decode_chunk=4, prefill_bucket=8),
+        EngineConfig(
+            max_slots=3, max_seq=48, max_new=10, decode_chunk=4, prefill_bucket=8,
+            kv_layout=layout, page_size=8,
+        ),
     )
     rng = np.random.RandomState(7)
     requests = [
@@ -202,7 +388,8 @@ def test_scheduler_randomized_invariants():
     # MID-decode and freed slots are refilled while others keep decoding
 
     class AuditEngine:
-        """Delegating wrapper asserting slot hygiene on every transition."""
+        """Delegating wrapper asserting slot AND page hygiene on every
+        transition."""
 
         def __init__(self, inner):
             self._e = inner
@@ -211,18 +398,35 @@ def test_scheduler_randomized_invariants():
         def __getattr__(self, name):
             return getattr(self._e, name)
 
+        def _check_pool(self):
+            pool = self._e.pool
+            if pool is None:
+                return
+            owned = [p for s in range(self._e.ecfg.max_slots) for p in pool.owned(s)]
+            assert len(owned) == len(set(owned)), "page double-booked"
+            assert pool.free_pages + len(owned) == pool.n_pages, "free-list leak"
+            # only resident slots hold pages
+            assert all(not pool.owned(s) for s in self._e.free_slots)
+
         def admit_many(self, requests):
             slots = self._e.admit_many(requests)
             assert len(set(slots)) == len(slots), f"burst reused a slot: {slots}"
             for slot in slots:
                 assert slot not in self.in_use, f"slot {slot} double-booked"
                 self.in_use.add(slot)
+            self._check_pool()
             return slots
+
+        def decode_chunk(self):
+            self._e.decode_chunk()  # may append pages mid-decode
+            self._check_pool()
 
         def fetch(self, slot, n_out):
             assert slot in self.in_use
             self.in_use.discard(slot)
-            return self._e.fetch(slot, n_out)
+            toks = self._e.fetch(slot, n_out)
+            self._check_pool()
+            return toks
 
     audit = AuditEngine(eng)
     comps = ContinuousScheduler(audit, clock=ManualClock(tick=0.3)).run(requests)
@@ -236,6 +440,8 @@ def test_scheduler_randomized_invariants():
     assert sorted(eng.free_slots) == [0, 1, 2]  # no slot leak
     assert not bool(np.asarray(eng._state.active).any())
     assert eng.stats["evicted"] == eng.stats["admitted"] == len(requests)
+    if eng.pool is not None:
+        assert eng.pool.pages_in_use == 0 and eng.pool.free_pages == eng.pool.n_pages
 
 
 # ---------------------------------------------------------------------------
@@ -261,4 +467,18 @@ def test_serve_args_fail_fast():
         validate_args(parser.parse_args(["--max-slots", "0"]), dec)
     with pytest.raises(SystemExit, match="gen"):
         validate_args(parser.parse_args(["--gen", "0"]), dec)
+    with pytest.raises(SystemExit, match="power of two"):
+        validate_args(parser.parse_args(["--page-size", "12"]), dec)
+    with pytest.raises(SystemExit, match="pool-pages"):
+        validate_args(parser.parse_args(["--pool-pages", "-1"]), dec)
+    with pytest.raises(SystemExit, match="at least one page"):
+        # EngineConfig's own floor, surfaced by the dry construction
+        validate_args(parser.parse_args(["--pool-pages", "2", "--max-slots", "4"]), dec)
+    with pytest.raises(SystemExit, match="exhaust the pool"):
+        # passes the per-slot floor (4 >= 4) but not the bucket_min bill —
+        # the dry EngineConfig construction catches it pre-device
+        validate_args(parser.parse_args(["--pool-pages", "4", "--max-slots", "4"]), dec)
+    # dense layout ignores page knobs; static engine ignores them entirely
+    validate_args(parser.parse_args(["--kv-layout", "dense", "--page-size", "12"]), dec)
+    validate_args(parser.parse_args(["--engine", "static", "--page-size", "12"]), dec)
     validate_args(parser.parse_args([]), dec)  # defaults pass
