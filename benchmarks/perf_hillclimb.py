@@ -1,7 +1,7 @@
 """§Perf hillclimb driver (deliverable g): the three selected pairs, each
 iterated hypothesis → change → measure on the dominant roofline term.
 
-    PYTHONPATH=src python -m benchmarks.perf_hillclimb [--pair qwen3moe|mixtral|coboost]
+    PYTHONPATH=src python -m benchmarks.perf_hillclimb [--pair NAME] [--list-pairs]
 
 Every iteration re-lowers + recompiles the production program with one
 lever changed and reports the three roofline terms; the narrative lives in
@@ -13,8 +13,10 @@ import os
 os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
 
 import argparse
+import dataclasses
 import json
 import time
+from typing import Callable, Optional
 
 from repro.utils import get_logger
 
@@ -161,23 +163,32 @@ def pair_coboost(out):
     )
 
 
-def _coboost_ab(arms, cfg, classes, shape, short, long):
+def _coboost_ab(arms, cfg, classes, shape, short, long, archs=None, grouped_market=False):
     """Shared live-market Co-Boosting A/B harness: each arm is
     ``(name, cfg_overrides, run_kwargs)``, timed as the difference of a long
     and a short run so compile + market setup cancel. Returns the epochs/sec
-    record plus each arm's final server params (for parity checks)."""
-    import dataclasses
+    record plus each arm's final server params (for parity checks).
+    ``archs`` (one per client, default all-mlp) makes the market
+    heterogeneous; ``grouped_market=True`` trains the clients through the
+    vmapped build_market_grouped path (one program per arch group — the only
+    sane way to stand up a K=64 market on CPU)."""
     from functools import partial
 
     import jax
 
     from repro.core import default_image_setup, run_coboosting
     from repro.data import make_synth_images
-    from repro.fed import build_market
+    from repro.fed import build_market, build_market_grouped
     from repro.models.cnn import cnn_apply, init_cnn
 
     x, y = make_synth_images(0, classes, 40, shape)
-    applies, params, _, _ = build_market(0, x, y, cfg, classes, archs=["mlp"] * cfg.num_clients)
+    archs = list(archs) if archs else ["mlp"] * cfg.num_clients
+    if grouped_market:
+        bank, bank_params, _, _ = build_market_grouped(0, x, y, cfg, classes, archs=archs)
+        params = bank.unstack_params(bank_params)
+        applies = [bank.client_apply(k) for k in range(bank.num_clients)]
+    else:
+        applies, params, _, _ = build_market(0, x, y, cfg, classes, archs=archs)
     server_apply = partial(cnn_apply, "mlp")
 
     def run(cfg_overrides, run_kwargs, epochs):
@@ -475,26 +486,191 @@ def pair_decodepath(out):
     out["decodepath:paged_vs_dense"] = rec
 
 
+def _ensemblepath_setup(args):
+    """Parse --ks into the K sweep (setup hook)."""
+    spec = getattr(args, "ks", "") or "8,32"
+    return {"ks": [int(k) for k in spec.split(",")]}
+
+
+def pair_ensemblepath(out, args=None, ctx=None):
+    """Grouped-ensemble A/B (the ClientBank PR's headline number): the SAME
+    fused Co-Boosting epoch program on a MIXED-ARCH live market, client
+    forwards routed through the grouped ClientBank (one vmap per arch group,
+    O(#groups) trace) vs the K-way python-unrolled loop (O(K) trace). Same
+    PRNG stream, so the final server params double as the parity check.
+
+    The headline is END-TO-END epochs/sec for a quick-scale run, compile
+    included: the bank's O(#groups) trace collapses the unrolled program's
+    trace+compile cost, which at K=32 dwarfs the steady-state epochs of a
+    short run (and grows with K, while the bank's stays flat). Steady-state
+    s/epoch and trace+compile seconds are reported separately so the two
+    effects stay distinguishable. Sweeps K via --ks (default 8,32; the full
+    story adds 64)."""
+    import dataclasses as _dc
+    import time as _time
+    from functools import partial
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.config.train import OFLConfig
+    from repro.core import default_image_setup, run_coboosting
+    from repro.data import make_synth_images
+    from repro.fed import build_market_grouped
+    from repro.models.cnn import cnn_apply, init_cnn
+
+    classes, shape = 4, (8, 8, 3)
+    SHORT, LONG = 2, 10
+    x, y = make_synth_images(0, classes, 40, shape)
+    for K in (ctx or _ensemblepath_setup(args))["ks"]:
+        cfg = OFLConfig(
+            num_clients=K, local_epochs=1, local_batch_size=16,
+            gen_iters=3, batch_size=16, latent_dim=8, buffer_batches=4,
+        )
+        archs = [("mlp", "cnn2")[k % 2] for k in range(K)]  # 2 arch groups
+        bank, bank_params, _, _ = build_market_grouped(0, x, y, cfg, classes, archs=archs)
+        params = bank.unstack_params(bank_params)
+        applies = [bank.client_apply(k) for k in range(K)]
+        server_apply = partial(cnn_apply, "mlp")
+
+        def run(impl, epochs):
+            # each call builds fresh jitted programs, so one wall-clock run
+            # is exactly trace+compile + epochs * steady
+            c = _dc.replace(cfg, epochs=epochs, ensemble_impl=impl)
+            sp = init_cnn(jax.random.key(99), "mlp", classes, shape)
+            gen_apply, gp = default_image_setup(jax.random.key(5), c, classes, shape)
+            t0 = _time.time()
+            st = run_coboosting(
+                applies, params, server_apply, sp, gen_apply, gp, c, classes,
+                jax.random.key(0),
+            )
+            jax.block_until_ready(st.server_params)
+            return _time.time() - t0, st
+
+        rec = {"status": "ok", "epochs": LONG, "num_clients": K,
+               "num_groups": bank.num_groups, "jax_backend": jax.default_backend()}
+        finals = {}
+        for impl in ("looped", "grouped"):
+            t_long, st = run(impl, LONG)
+            t_short, _ = run(impl, SHORT)
+            finals[impl] = st.server_params
+            steady = max(t_long - t_short, 1e-9) / (LONG - SHORT)
+            rec[f"{impl}_epochs_per_sec"] = round(LONG / t_long, 3)
+            rec[f"{impl}_steady_s_per_epoch"] = round(steady, 3)
+            rec[f"{impl}_compile_s"] = round(max(t_long - LONG * steady, 0.0), 3)
+        rec["speedup"] = round(
+            rec["grouped_epochs_per_sec"] / rec["looped_epochs_per_sec"], 3
+        )
+        rec["compile_speedup"] = round(
+            rec["looped_compile_s"] / max(rec["grouped_compile_s"], 1e-9), 3
+        )
+        rec["server_params_max_diff"] = float(
+            max(
+                jnp.max(jnp.abs(u.astype(jnp.float32) - v.astype(jnp.float32)))
+                for u, v in zip(
+                    jax.tree_util.tree_leaves(finals["looped"]),
+                    jax.tree_util.tree_leaves(finals["grouped"]),
+                )
+            )
+        )
+        log.info(
+            "ensemblepath K=%d: grouped=%.2f ep/s looped=%.2f ep/s speedup=%.2fx "
+            "(compile %.1fs vs %.1fs, steady %.2f vs %.2f s/ep) parity=%.2e (%d groups)",
+            K, rec["grouped_epochs_per_sec"], rec["looped_epochs_per_sec"],
+            rec["speedup"], rec["grouped_compile_s"], rec["looped_compile_s"],
+            rec["grouped_steady_s_per_epoch"], rec["looped_steady_s_per_epoch"],
+            rec["server_params_max_diff"], rec["num_groups"],
+        )
+        out[f"ensemblepath:K{K}"] = rec
+
+
+def _ensemblepath_report(out):
+    """Report hook: one summary line over the K sweep."""
+    recs = {k: v for k, v in out.items() if k.startswith("ensemblepath:")}
+    if recs:
+        log.info(
+            "ensemblepath summary: %s",
+            {k.split(":")[1]: f'{v["speedup"]}x' for k, v in recs.items()},
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class PairSpec:
+    """One registry entry: ``setup(args) -> ctx`` builds shared context,
+    ``run(out, args, ctx)`` fills ``out`` with records, ``report(out)``
+    prints a cross-record summary. Legacy single-argument pair functions are
+    adapted via :func:`_nullary`."""
+
+    help: str
+    run: Callable
+    setup: Optional[Callable] = None
+    report: Optional[Callable] = None
+
+    def execute(self, out, args):
+        ctx = self.setup(args) if self.setup else None
+        self.run(out, args, ctx)
+        if self.report:
+            self.report(out)
+
+
+def _nullary(fn):
+    """Adapt a classic ``fn(out)`` pair function to the hook signature."""
+    return lambda out, args, ctx: fn(out)
+
+
 PAIRS = {
-    "qwen3moe": pair_qwen3moe,
-    "mixtral": pair_mixtral,
-    "coboost": pair_coboost,
-    "epochdrv": pair_epochdrv,
-    "kernelpath": pair_kernelpath,
-    "servepath": pair_servepath,
-    "decodepath": pair_decodepath,
+    "qwen3moe": PairSpec(
+        help="MoE dryrun hillclimb: qwen3-moe-235b x train_4k (worst roofline)",
+        run=_nullary(pair_qwen3moe),
+    ),
+    "mixtral": PairSpec(
+        help="MoE dryrun hillclimb: mixtral-8x7b x train_4k (most collective-bound)",
+        run=_nullary(pair_mixtral),
+    ),
+    "coboost": PairSpec(
+        help="LM-scale Co-Boosting distillation dryrun: granite-3-2b x train_4k",
+        run=_nullary(pair_coboost),
+    ),
+    "epochdrv": PairSpec(
+        help="fused single-dispatch epoch engine vs legacy per-batch loop (live market)",
+        run=_nullary(pair_epochdrv),
+    ),
+    "kernelpath": PairSpec(
+        help="Pallas fused-loss kernels vs pure-jnp ref under the fused epoch engine",
+        run=_nullary(pair_kernelpath),
+    ),
+    "servepath": PairSpec(
+        help="continuous-batching engine vs fused static-batch serving",
+        run=_nullary(pair_servepath),
+    ),
+    "decodepath": PairSpec(
+        help="paged KVPool + flash-decode vs dense per-slot KV + SDPA",
+        run=_nullary(pair_decodepath),
+    ),
+    "ensemblepath": PairSpec(
+        help="grouped ClientBank ensemble vs K-way looped client forwards (mixed archs)",
+        run=pair_ensemblepath,
+        setup=_ensemblepath_setup,
+        report=_ensemblepath_report,
+    ),
 }
 
 
 def main():
     p = argparse.ArgumentParser()
     p.add_argument("--pair", default="all", choices=list(PAIRS) + ["all"])
+    p.add_argument("--list-pairs", action="store_true", help="print the registry and exit")
+    p.add_argument("--ks", default="", help="ensemblepath client-count sweep, e.g. 8,32,64")
     p.add_argument("--out", default="results/perf_hillclimb.json")
     args = p.parse_args()
+    if args.list_pairs:
+        for name, spec in PAIRS.items():
+            print(f"{name:14s} {spec.help}")
+        return
     out = {}
-    for name, fn in PAIRS.items():
+    for name, spec in PAIRS.items():
         if args.pair in (name, "all"):
-            fn(out)
+            spec.execute(out, args)
     if args.out:
         os.makedirs(os.path.dirname(args.out), exist_ok=True)
         with open(args.out, "w") as f:

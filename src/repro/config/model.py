@@ -11,6 +11,8 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
+from repro.kernels.dispatch import BackendPolicy
+
 
 @dataclass(frozen=True)
 class ModelConfig:
@@ -65,15 +67,14 @@ class ModelConfig:
     frontend_dim: int = 0  # raw patch/frame embedding dim fed to the projector
     num_prefix_tokens: int = 0  # patch/frame embeddings provided by input_specs
 
-    # train/prefill attention backend (repro.kernels.dispatch): "auto" is the
-    # compiled Pallas flash kernel on TPU and the blocked-jnp flash_attn_jax
-    # twin elsewhere; "pallas-interpret" is the debug/parity lane; "ref" is
-    # the jnp twin explicitly.
+    # unified backend policy for the dispatched ops this model touches
+    # ("attn": train/prefill flash attention; "decode": paged Sq=1 decode —
+    # dense caches always use the small SDPA path). See
+    # repro.kernels.dispatch.BackendPolicy; resolved via backend_for(op).
+    backend: Optional[BackendPolicy] = None
+    # DEPRECATED aliases (the pre-policy knobs). Still honored when no
+    # `backend` policy is set; an explicit policy wins over both.
     attn_backend: str = "auto"
-    # decode (Sq=1) attention backend for PAGED serve caches: "auto" is the
-    # Pallas flash-decode kernel on TPU and its blocked-jnp ref twin
-    # elsewhere (same dispatch semantics as attn_backend). Dense caches
-    # always use the small SDPA path regardless of this knob.
     decode_backend: str = "auto"
 
     # numerics -----------------------------------------------------------------
@@ -84,6 +85,18 @@ class ModelConfig:
     logit_dtype: str = "float32"
 
     # derived -------------------------------------------------------------------
+    def backend_for(self, op: str) -> str:
+        """The requested backend for ``op`` under the policy/alias
+        precedence: an explicit :class:`BackendPolicy` wins; otherwise the
+        deprecated ``attn_backend`` / ``decode_backend`` aliases apply."""
+        if self.backend is not None:
+            return self.backend.for_op(op)
+        if op == "attn":
+            return self.attn_backend
+        if op == "decode":
+            return self.decode_backend
+        return "auto"
+
     @property
     def head_dim_(self) -> int:
         return self.head_dim or (self.d_model // self.num_heads)

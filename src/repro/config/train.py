@@ -4,6 +4,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
+from repro.kernels.dispatch import BackendPolicy
+
 
 @dataclass(frozen=True)
 class TrainConfig:
@@ -66,9 +68,32 @@ class OFLConfig:
     use_ee: bool = True  # ensemble enhancement (Eq. 12)
     use_adv: bool = True  # adversarial term (Eq. 7); part of GHS in ablations
 
-    # fused-loss kernel backend for the Eq. 4/Eq. 6 hot path in the fused
-    # epoch engine: "auto" (pallas on TPU, jnp ref elsewhere) | "pallas" |
-    # "pallas-interpret" (debug/parity) | "ref" — see repro.kernels.dispatch
+    # client ensemble forward engine: "grouped" (ClientBank — clients grouped
+    # by arch, one vmapped forward per group, O(#groups) trace cost) or
+    # "looped" (the original K-way python-unrolled loop, kept as the parity
+    # baseline). The legacy driver always loops.
+    ensemble_impl: str = "grouped"
+    # >0: cap concurrent client forwards inside a grouped vmap — a group
+    # larger than this is evaluated as a lax.scan over vmapped chunks of
+    # this size (bounds live (chunk, B, C) activations at hundreds of
+    # clients; 0 = one vmap per group)
+    ensemble_scan_chunk: int = 0
+
+    # unified backend policy for every dispatched op (loss/attn/decode) —
+    # see repro.kernels.dispatch.BackendPolicy. When None, the deprecated
+    # kernel_backend alias below feeds the "loss" op.
+    backend: Optional[BackendPolicy] = None
+    # DEPRECATED alias (the pre-policy knob): fused-loss kernel backend for
+    # the Eq. 4/Eq. 6 hot path. Forwarded into backend_for("loss") when no
+    # policy is set; an explicit `backend` policy wins over it.
     kernel_backend: str = "auto"
 
     seed: int = 0
+
+    def backend_for(self, op: str) -> str:
+        """The requested backend for ``op`` under the policy/alias
+        precedence: an explicit :class:`BackendPolicy` wins; otherwise the
+        deprecated ``kernel_backend`` alias covers the "loss" op."""
+        if self.backend is not None:
+            return self.backend.for_op(op)
+        return self.kernel_backend if op == "loss" else "auto"

@@ -5,6 +5,7 @@ Eq. 5-8      -> :mod:`repro.core.hardness`
 Eq. 9-10     -> :mod:`repro.core.hard_samples`
 Eq. 11-12    -> :mod:`repro.core.weight_search`
 Algorithm 1  -> :mod:`repro.core.coboosting`
+ClientBank   -> :mod:`repro.core.client_bank`
 Baselines    -> :mod:`repro.core.baselines`
 LM-scale     -> :mod:`repro.core.distributed`
 Replay ring  -> :mod:`repro.core.buffer`
@@ -34,6 +35,7 @@ from repro.core.ensemble import (
     ensemble_logits,
     ensemble_accuracy,
 )
+from repro.core.client_bank import ClientBank, ENSEMBLE_IMPLS, make_ensemble
 from repro.core.hardness import sample_difficulty, ghs_loss, adversarial_loss, generator_loss
 from repro.core.hard_samples import diversify
 from repro.core.weight_search import normalize_weights, weight_loss, update_weights
@@ -73,6 +75,9 @@ __all__ = [
     "make_logits_all_stacked",
     "ensemble_logits",
     "ensemble_accuracy",
+    "ClientBank",
+    "ENSEMBLE_IMPLS",
+    "make_ensemble",
     "sample_difficulty",
     "ghs_loss",
     "adversarial_loss",

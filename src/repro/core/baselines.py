@@ -14,7 +14,7 @@ All reuse the distillation machinery of :mod:`repro.core.coboosting`; the
 only differences are the synthesis objective and the fixed uniform weights,
 which is exactly the contrast the paper draws (no co-boosting of data and
 ensemble). Under ``driver="fused"`` every distillation sweep here (DENSE,
-F-DAFL, F-ADI, FedDF) runs the Eq. 4 loss through the ``cfg.kernel_backend``
+F-DAFL, F-ADI, FedDF) runs the Eq. 4 loss through the ``cfg.backend_for("loss")``
 kernel path of :func:`repro.core.epoch.make_kd_loss`; the legacy loops stay
 pure jnp as the parity baseline.
 """
@@ -30,9 +30,10 @@ import numpy as np
 
 from repro.config.train import OFLConfig
 from repro.core.buffer import buffer_as_lists, buffer_init
+from repro.core.client_bank import make_ensemble
 from repro.core.coboosting import OFLState, _sample_zy, init_synth_buffer, make_distill_step
 from repro.core.epoch import distill_schedule, make_adi_epoch, make_coboost_epoch, make_feddf_epoch
-from repro.core.ensemble import ensemble_logits, make_logits_all, uniform_weights
+from repro.core.ensemble import ensemble_logits, uniform_weights
 from repro.core.losses import ce_loss, ce_per_sample, entropy, kl_loss
 from repro.optim import adam, constant_schedule
 from repro.optim.optimizers import apply_updates
@@ -107,8 +108,10 @@ def run_generator_baseline(
     params — invalidated after epoch 0; copy first if reused."""
     objective = GEN_OBJECTIVES[method]
     n = len(client_applies)
-    logits_all_fn = make_logits_all(client_applies)
-    client_params = tuple(client_params)
+    impl = cfg.ensemble_impl if driver == "fused" else "looped"
+    logits_all_fn, client_params = make_ensemble(
+        client_applies, client_params, impl=impl, scan_chunk=cfg.ensemble_scan_chunk
+    )
     w = uniform_weights(n)
 
     if driver == "fused":
@@ -220,8 +223,10 @@ def run_adi_baseline(
     """F-ADI: optimize pixel batches directly (DeepInversion without BN
     statistics — our clients are GroupNorm, so only image priors apply)."""
     n = len(client_applies)
-    logits_all_fn = make_logits_all(client_applies)
-    client_params = tuple(client_params)
+    impl = cfg.ensemble_impl if driver == "fused" else "looped"
+    logits_all_fn, client_params = make_ensemble(
+        client_applies, client_params, impl=impl, scan_chunk=cfg.ensemble_scan_chunk
+    )
     w = uniform_weights(n)
     opt = adam(constant_schedule(0.05))
 
@@ -314,8 +319,10 @@ def run_feddf(
     """FedDF: distill the uniform ensemble on real validation data (the
     paper marks this baseline as impractical — it needs data)."""
     n = len(client_applies)
-    logits_all_fn = make_logits_all(client_applies)
-    client_params = tuple(client_params)
+    impl = cfg.ensemble_impl if driver == "fused" else "looped"
+    logits_all_fn, client_params = make_ensemble(
+        client_applies, client_params, impl=impl, scan_chunk=cfg.ensemble_scan_chunk
+    )
     w = uniform_weights(n)
     nb = val_x.shape[0] // cfg.batch_size
 

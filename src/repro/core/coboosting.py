@@ -20,7 +20,7 @@ Two epoch drivers share this module's loss machinery:
   * ``driver="fused"`` (default) — the whole epoch is one jitted program
     over the device-resident ring buffer (:mod:`repro.core.epoch`): O(1)
     dispatches per epoch, losses synced only at eval boundaries. Its Eq. 4 /
-    Eq. 6 losses follow ``cfg.kernel_backend`` (the fused differentiable
+    Eq. 6 losses follow ``cfg.backend_for("loss")`` (the fused differentiable
     Pallas kernels on TPU, the jnp composition elsewhere).
   * ``driver="legacy"`` — the original python loop, one jitted program per
     stage and per replay batch; kept as the pure-jnp parity/benchmark
@@ -38,7 +38,8 @@ import numpy as np
 
 from repro.config.train import OFLConfig, TrainConfig
 from repro.core.buffer import ReplayBuffer, buffer_as_lists, buffer_init
-from repro.core.ensemble import ensemble_logits, make_logits_all, uniform_weights
+from repro.core.client_bank import make_ensemble
+from repro.core.ensemble import ensemble_logits, uniform_weights
 from repro.core.epoch import _sample_zy, distill_schedule, make_coboost_epoch
 from repro.core.hard_samples import diversify
 from repro.core.hardness import generator_loss
@@ -175,7 +176,7 @@ def run_coboosting(
     """Algorithm 1. ``eval_fn(server_params, w) -> dict`` is called every
     ``eval_every`` epochs for history logging. ``driver`` selects the fused
     single-dispatch epoch program (whose distillation/generator losses run
-    the ``cfg.kernel_backend`` kernel path) or the legacy per-batch python
+    the ``cfg.backend_for("loss")`` kernel path) or the legacy per-batch python
     loop (always pure jnp — the parity baseline).
 
     NOTE: on accelerator backends the fused driver donates the caller's
@@ -183,8 +184,13 @@ def run_coboosting(
     program — they are invalidated after the first epoch; copy them first if
     you need them again (e.g. for a legacy A/B run from the same init)."""
     n = len(client_applies)
-    logits_all_fn = make_logits_all(client_applies)
-    client_params = tuple(client_params)
+    # fused driver: client forwards run through the grouped ClientBank
+    # (cfg.ensemble_impl, O(#groups) trace) — the legacy driver always uses
+    # the python-unrolled per-client loop, keeping it the parity baseline.
+    impl = cfg.ensemble_impl if driver == "fused" else "looped"
+    logits_all_fn, client_params = make_ensemble(
+        client_applies, client_params, impl=impl, scan_chunk=cfg.ensemble_scan_chunk
+    )
     w = uniform_weights(n) if init_weights is None else init_weights
 
     if driver == "fused":

@@ -14,6 +14,12 @@ from typing import Any, Callable, List, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+# The stack dtype every consumer of logits_all sees. Clients may run in
+# mixed precision (a bf16 client next to f32 ones); normalizing each
+# client's output here makes the (n, B, C) stack deterministic instead of
+# inheriting whatever promotion jnp.stack derives from client order.
+ENSEMBLE_DTYPE = jnp.float32
+
 
 def uniform_weights(n: int) -> jax.Array:
     return jnp.full((n,), 1.0 / n, jnp.float32)
@@ -28,7 +34,7 @@ def make_logits_all(apply_fns: List[Callable]) -> Callable:
     """Returns f(client_params_list, x) -> (n, B, C) stacked client logits."""
 
     def logits_all(client_params: List[Any], x: jax.Array) -> jax.Array:
-        outs = [f(p, x) for f, p in zip(apply_fns, client_params)]
+        outs = [f(p, x).astype(ENSEMBLE_DTYPE) for f, p in zip(apply_fns, client_params)]
         return jnp.stack(outs, axis=0)
 
     return logits_all
@@ -39,7 +45,8 @@ def make_logits_all_stacked(apply_fn: Callable) -> Callable:
     the leading axis — this is the form the distributed LM ensemble uses)."""
 
     def logits_all(stacked_params: Any, x: jax.Array) -> jax.Array:
-        return jax.vmap(apply_fn, in_axes=(0, None))(stacked_params, x)
+        out = jax.vmap(apply_fn, in_axes=(0, None))(stacked_params, x)
+        return out.astype(ENSEMBLE_DTYPE)
 
     return logits_all
 

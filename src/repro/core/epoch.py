@@ -27,7 +27,7 @@ backends (donation is a no-op on CPU, so we skip it there to avoid warnings).
 
 The Eq. 4 / Eq. 6 losses inside these programs route through the
 differentiable fused Pallas kernels (:mod:`repro.kernels`) according to
-``cfg.kernel_backend`` — "auto" runs the compiled kernels on TPU and the
+``cfg.backend_for("loss")`` — "auto" runs the compiled kernels on TPU and the
 pure-jnp composition elsewhere (see :mod:`repro.kernels.dispatch`), so the
 CPU parity contract with the legacy loops below is preserved bit-for-bit.
 """
@@ -47,7 +47,8 @@ from repro.core.hard_samples import diversify
 from repro.core.hardness import generator_loss
 from repro.core.losses import kl_loss
 from repro.core.weight_search import update_weights
-from repro.kernels import ensemble_kl, ghm_ce, resolve_backend
+from repro.kernels import ensemble_kl, ghm_ce
+from repro.kernels.dispatch import resolve
 from repro.optim import adam, constant_schedule, sgdm
 from repro.optim.optimizers import apply_updates
 
@@ -93,7 +94,7 @@ def make_kd_loss(
     the differentiable fused :func:`repro.kernels.ensemble_kl` kernel — the
     Pallas paths never materialize A_w in the forward pass — or through the
     legacy jnp composition (``"ref"``; the auto choice off-TPU)."""
-    backend = resolve_backend(kernel_backend)
+    backend = resolve("loss", kernel_backend)
 
     if backend == "ref":
 
@@ -120,7 +121,7 @@ def make_distill_sweep(
 ):
     """The fused replacement for the per-batch ``distill_step`` loop: one
     ``lax.scan`` over ring slots, masked while the buffer warms up."""
-    loss_fn = make_kd_loss(logits_all_fn, server_apply, cfg.kd_temperature, cfg.kernel_backend)
+    loss_fn = make_kd_loss(logits_all_fn, server_apply, cfg.kd_temperature, cfg.backend_for("loss"))
 
     def sweep(server_params, srv_opt_state, buf, k3, w, client_params, slot_order, n_valid, srv_step0):
         def body(carry, xs):
@@ -197,7 +198,7 @@ def make_coboost_epoch(
     # any EE variant needs the 4th key so k2 never aliases the distill chain
     nsplit = 4 if (gen_objective is None or use_ee) else 3
 
-    backend = resolve_backend(cfg.kernel_backend)
+    backend = resolve("loss", cfg.backend_for("loss"))
 
     def gen_loss_fn(gp, z, y, client_params, w, server_params):
         x = gen_apply(gp, z, y)
@@ -314,7 +315,7 @@ def make_feddf_epoch(logits_all_fn: Callable, server_apply: Callable, cfg: OFLCo
     """FedDF fused epoch: one scan over the (pre-stacked, fixed-size) real
     validation batches in a host-supplied permutation — no buffer, no mask."""
     srv_opt = sgdm(constant_schedule(cfg.server_lr), momentum=0.9)
-    loss_fn = make_kd_loss(logits_all_fn, server_apply, cfg.kd_temperature, cfg.kernel_backend)
+    loss_fn = make_kd_loss(logits_all_fn, server_apply, cfg.kd_temperature, cfg.backend_for("loss"))
 
     def epoch_step(server_params, srv_opt_state, key, srv_step0, order, val_batches, w, client_params):
         key, k3 = jax.random.split(key)

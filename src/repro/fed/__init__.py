@@ -1,4 +1,11 @@
-from repro.fed.client import local_train, evaluate_cnn
-from repro.fed.market import build_market, market_eval_fn
+from repro.fed.client import local_train, local_train_group, evaluate_cnn
+from repro.fed.market import build_market, build_market_grouped, market_eval_fn
 
-__all__ = ["local_train", "evaluate_cnn", "build_market", "market_eval_fn"]
+__all__ = [
+    "local_train",
+    "local_train_group",
+    "evaluate_cnn",
+    "build_market",
+    "build_market_grouped",
+    "market_eval_fn",
+]

@@ -3,14 +3,14 @@ communication round — Co-Boosting never touches it, per the model-market
 constraint)."""
 from __future__ import annotations
 
-from typing import Any, Callable, Tuple
+from typing import Any, Callable, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.config.train import TrainConfig
-from repro.core.losses import ce_loss
+from repro.core.losses import ce_loss, ce_per_sample
 from repro.data.loader import batch_iterator
 from repro.optim import make_optimizer
 from repro.optim.optimizers import apply_updates, clip_by_global_norm
@@ -45,6 +45,109 @@ def local_train(
         params, opt_state, _ = step(params, opt_state, jnp.asarray(xb), jnp.asarray(yb), jnp.asarray(i, jnp.int32))
         i += 1
     return params
+
+
+def _group_schedule(
+    shard_sizes: Sequence[int], batch_size: int, seed: int, epochs: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side replica of every group member's ``batch_iterator`` walk.
+
+    For each client: per-epoch ``RandomState(seed+e)`` shuffle, contiguous
+    batches, partial last batch kept (padded up to ``batch_size`` and
+    masked). Clients with fewer steps than the group max get invalid
+    (masked-out) trailing steps. Returns ``(idx, m, valid)`` with shapes
+    ``(S, G, B)``, ``(S, G, B)``, ``(S, G)`` — step-major so the device scan
+    slices one step for the whole group at a time.
+    """
+    G, B = len(shard_sizes), batch_size
+    steps = [epochs * -(-n // B) for n in shard_sizes]
+    S = max(steps)
+    idx = np.zeros((G, S, B), np.int32)
+    m = np.zeros((G, S, B), np.float32)
+    valid = np.zeros((G, S), bool)
+    for k, n in enumerate(shard_sizes):
+        t = 0
+        for e in range(epochs):
+            order = np.random.RandomState(seed + e).permutation(n)
+            for i in range(0, n, B):
+                b = order[i : i + B]
+                idx[k, t, : len(b)] = b
+                m[k, t, : len(b)] = 1.0
+                valid[k, t] = True
+                t += 1
+    return idx.swapaxes(0, 1), m.swapaxes(0, 1), valid.swapaxes(0, 1)
+
+
+def local_train_group(
+    apply_fn: Callable,
+    stacked_params: Any,
+    shards: Sequence[Tuple[np.ndarray, np.ndarray]],
+    tc: TrainConfig,
+    epochs: int,
+) -> Any:
+    """Local training for one homogeneous client group as a single jitted
+    program: ``lax.scan`` over steps, ``vmap`` over the group's client axis.
+
+    Matches per-client :func:`local_train` semantics exactly — same
+    ``batch_iterator`` batch composition per client (replicated host-side by
+    :func:`_group_schedule`), same masked-mean CE on partial batches
+    (``sum(ce·mask)/count`` == the legacy per-batch mean), and clients whose
+    shard yields fewer steps than the group max simply stop updating
+    (masked param/optimizer carry-through), so unbalanced shards never see
+    extra steps.
+
+    ``stacked_params``: the group's init params with clients on the leading
+    axis; ``shards``: one ``(x_k, y_k)`` pair per client, any sizes.
+    """
+    opt = make_optimizer(tc)
+    G = len(shards)
+    sizes = [len(x) for x, _ in shards]
+    max_n = max(sizes)
+    x0 = np.asarray(shards[0][0])
+    X = np.zeros((G, max_n, *x0.shape[1:]), x0.dtype)
+    Y = np.zeros((G, max_n), np.asarray(shards[0][1]).dtype)
+    for k, (xk, yk) in enumerate(shards):
+        X[k, : sizes[k]] = xk
+        Y[k, : sizes[k]] = yk
+    idx, m, valid = _group_schedule(sizes, tc.batch_size, tc.seed, epochs)
+
+    def one_client(params, opt_state, xk, yk, idx_t, m_t, valid_t, i):
+        xb, yb = xk[idx_t], yk[idx_t]
+
+        def loss_fn(p):
+            ce = ce_per_sample(apply_fn(p, xb), yb)
+            return jnp.sum(ce * m_t) / jnp.maximum(jnp.sum(m_t), 1.0)
+
+        _, grads = jax.value_and_grad(loss_fn)(params)
+        if tc.grad_clip_norm > 0:
+            grads = clip_by_global_norm(grads, tc.grad_clip_norm)
+        updates, opt_state2 = opt.update(grads, opt_state, params, i)
+        params2 = apply_updates(params, updates)
+        keep = lambda old, new: jax.tree_util.tree_map(
+            lambda a, b: jnp.where(valid_t, b, a), old, new
+        )
+        return keep(params, params2), keep(opt_state, opt_state2)
+
+    @jax.jit
+    def run(stacked_params, X, Y, idx, m, valid):
+        opt_state = jax.vmap(opt.init)(stacked_params)
+
+        def body(carry, sched):
+            params, st = carry
+            idx_t, m_t, valid_t, i = sched
+            params, st = jax.vmap(one_client, in_axes=(0, 0, 0, 0, 0, 0, 0, None))(
+                params, st, X, Y, idx_t, m_t, valid_t, i
+            )
+            return (params, st), None
+
+        S = idx.shape[0]
+        (params, _), _ = jax.lax.scan(
+            body, (stacked_params, opt_state),
+            (idx, m, valid, jnp.arange(S, dtype=jnp.int32)),
+        )
+        return params
+
+    return run(stacked_params, jnp.asarray(X), jnp.asarray(Y), jnp.asarray(idx), jnp.asarray(m), jnp.asarray(valid))
 
 
 def evaluate_cnn(

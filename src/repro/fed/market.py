@@ -14,9 +14,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config.train import OFLConfig, TrainConfig
-from repro.core.ensemble import ensemble_logits, make_logits_all
+from repro.core.client_bank import ClientBank, make_ensemble
+from repro.core.ensemble import ensemble_logits
 from repro.data.partitions import partition_dataset
-from repro.fed.client import evaluate_cnn, local_train
+from repro.fed.client import evaluate_cnn, local_train, local_train_group
 from repro.models.cnn import cnn_apply, init_cnn
 from repro.utils import get_logger
 
@@ -63,6 +64,57 @@ def build_market(
     return applies, params_list, sizes, parts
 
 
+def build_market_grouped(
+    seed: int,
+    x: np.ndarray,
+    y: np.ndarray,
+    cfg: OFLConfig,
+    num_classes: int,
+    archs: Optional[Sequence[str]] = None,
+    local_epochs: Optional[int] = None,
+) -> Tuple[ClientBank, Tuple[Any, ...], List[int], List[np.ndarray]]:
+    """The grouped-bank twin of :func:`build_market`: same partition, same
+    per-client inits and ``batch_iterator`` step sequences, but clients of
+    the same arch train as ONE vmapped program per group
+    (:func:`repro.fed.client.local_train_group`) instead of K sequential
+    loops. Returns ``(bank, bank_params, shard_sizes, shard_indices)`` —
+    the bank's params feed the server pipeline directly (its
+    ``bank.logits_all`` is the ``logits_all_fn``), or convert back with
+    ``bank.unstack_params`` for per-client APIs."""
+    n = cfg.num_clients
+    archs = list(archs) if archs else ["cnn5"] * n
+    assert len(archs) == n
+    parts = partition_dataset(seed, y, cfg)
+    in_shape = x.shape[1:]
+    tc = TrainConfig(
+        optimizer="sgdm",
+        learning_rate=cfg.local_lr,
+        momentum=cfg.local_momentum,
+        batch_size=cfg.local_batch_size,
+        seed=seed,
+    )
+    epochs = cfg.local_epochs if local_epochs is None else local_epochs
+    applies, inits = [], []
+    for k in range(n):
+        key = jax.random.fold_in(jax.random.key(seed), k)
+        applies.append(partial(cnn_apply, archs[k]))
+        inits.append(init_cnn(key, archs[k], num_classes, in_shape))
+    bank, bank_params0 = ClientBank.build(applies, inits, scan_chunk=cfg.ensemble_scan_chunk)
+    bank_params, at = [], 0
+    for g, count in enumerate(bank.counts):
+        members = bank.order[at : at + count]
+        at += count
+        shards = [(x[parts[k]], y[parts[k]]) for k in members]
+        trained = local_train_group(bank.applies[g], bank_params0[g], shards, tc, epochs)
+        bank_params.append(trained)
+        log.info(
+            "group %d (%s): %d clients, shards=%s",
+            g, archs[members[0]], count, [len(s[0]) for s in shards],
+        )
+    sizes = [len(parts[k]) for k in range(n)]
+    return bank, tuple(bank_params), sizes, parts
+
+
 def market_eval_fn(
     client_applies: List[Callable],
     client_params: List[Any],
@@ -70,14 +122,15 @@ def market_eval_fn(
     test_x: np.ndarray,
     test_y: np.ndarray,
     batch_size: int = 512,
+    impl: str = "grouped",
 ) -> Callable:
     """Builds eval_fn(server_params, w) -> {server_acc, ensemble_acc}.
     ``server_params=None`` skips the server forward entirely and returns only
     ``ensemble_acc`` (ensemble-only methods like FedENS have no trained
     server — evaluating a random init would be wasted work and a misleading
-    number)."""
-    logits_all_fn = make_logits_all(client_applies)
-    client_params = tuple(client_params)
+    number). ``impl`` picks the client-forward engine (grouped ClientBank by
+    default; "looped" is the unrolled parity baseline)."""
+    logits_all_fn, client_params = make_ensemble(client_applies, client_params, impl=impl)
 
     @jax.jit
     def _ens_preds(w, xb):

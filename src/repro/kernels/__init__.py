@@ -13,7 +13,15 @@ Each subpackage: ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
 ``ensemble_kl`` and ``ghm_ce`` carry ``jax.custom_vjp`` rules on the Pallas
 paths so they are loss-grade (used in the fused epoch engine's hot path).
 """
-from repro.kernels.dispatch import KERNEL_BACKENDS, kernel_arm, resolve_backend
+from repro.kernels.dispatch import (
+    BACKEND_OPS,
+    BackendPolicy,
+    KERNEL_BACKENDS,
+    kernel_arm,
+    policy_from_flags,
+    resolve,
+    resolve_backend,
+)
 from repro.kernels.ensemble_kl import ensemble_kl, ensemble_kl_ref
 from repro.kernels.ghm_ce import ghm_ce, ghm_ce_ref
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
@@ -22,8 +30,12 @@ from repro.kernels.flash_decode import flash_decode, flash_decode_ref
 __all__ = [
     "flash_decode",
     "flash_decode_ref",
+    "BACKEND_OPS",
+    "BackendPolicy",
     "KERNEL_BACKENDS",
     "kernel_arm",
+    "policy_from_flags",
+    "resolve",
     "resolve_backend",
     "ensemble_kl",
     "ensemble_kl_ref",

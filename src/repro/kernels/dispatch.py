@@ -1,10 +1,13 @@
 """Kernel backend dispatch: which implementation of a Pallas-backed op
 actually runs on this process' default JAX backend.
 
-Values (the ``kernel_backend`` knob on :class:`repro.config.train.OFLConfig`,
-the ``attn_backend``/``decode_backend`` knobs on ``ModelConfig``, and the
-``backend=`` kwarg of :func:`repro.kernels.ensemble_kl` /
-:func:`repro.kernels.ghm_ce` / :func:`repro.kernels.flash_decode`):
+The unified entry point is :func:`resolve`, keyed by *op*:
+
+* ``"loss"``   — the Eq. 4/6/11-12 fused losses (``ensemble_kl`` / ``ghm_ce``)
+* ``"attn"``   — train/prefill flash attention (``flash_attention``)
+* ``"decode"`` — paged Sq=1 decode attention (``flash_decode``)
+
+and by *backend* value:
 
 * ``"auto"``             — ``"pallas"`` on TPU, ``"ref"`` everywhere else.
                            CPU/GPU production paths must never silently run
@@ -19,35 +22,137 @@ the ``attn_backend``/``decode_backend`` knobs on ``ModelConfig``, and the
 * ``"ref"``              — the pure-jnp oracle (XLA-fused). Differentiable by
                            plain autodiff; the custom_vjp path is bypassed.
 
-``resolve_backend`` is evaluated at trace/make time (the choice is static in
-the jitted programs), so a resolved value never changes mid-run.
+:class:`BackendPolicy` bundles one choice per op (plus a shared default) and
+is the single configuration surface for all of them: ``OFLConfig.backend``
+and ``ModelConfig.backend`` carry one, and every ``--*-backend`` CLI flag
+routes through :func:`policy_from_flags`. The scattered per-op knobs the
+policy replaced — ``OFLConfig.kernel_backend``, ``ModelConfig.attn_backend``,
+``ModelConfig.decode_backend`` — survive as deprecated aliases that forward
+into the policy (``cfg.backend_for(op)`` on either config resolves the
+precedence: an explicit policy wins, else the alias).
+
+Resolution happens at trace/make time (the choice is static in the jitted
+programs), so a resolved value never changes mid-run.
 """
 from __future__ import annotations
+
+import dataclasses
+import warnings
+from dataclasses import dataclass
+from typing import Optional
 
 import jax
 
 KERNEL_BACKENDS = ("auto", "pallas", "pallas-interpret", "ref")
 
+#: The ops the dispatch layer routes; each has one slot on BackendPolicy.
+BACKEND_OPS = ("loss", "attn", "decode")
 
-def resolve_backend(backend: str | None = "auto") -> str:
-    """Map a requested backend to a concrete one ("pallas" | "pallas-interpret"
-    | "ref"), validating it against the running JAX backend."""
+
+def _check_value(value: str, what: str) -> None:
+    if value not in KERNEL_BACKENDS:
+        raise ValueError(
+            f"unknown {what} {value!r}; expected one of {KERNEL_BACKENDS}"
+        )
+
+
+@dataclass(frozen=True)
+class BackendPolicy:
+    """One backend choice per dispatched op, with a shared default.
+
+    Empty per-op fields fall back to ``default``; every field takes the
+    :data:`KERNEL_BACKENDS` values. Construct directly, or from CLI flags via
+    :func:`policy_from_flags`.
+    """
+
+    default: str = "auto"
+    loss: str = ""  # ensemble_kl / ghm_ce (the OFL fused-epoch losses)
+    attn: str = ""  # train/prefill flash attention
+    decode: str = ""  # paged Sq=1 decode attention
+
+    def __post_init__(self):
+        _check_value(self.default, "backend")
+        for op in BACKEND_OPS:
+            v = getattr(self, op)
+            if v:
+                _check_value(v, f"{op} backend")
+
+    def for_op(self, op: str) -> str:
+        """The requested (unresolved) backend for ``op``."""
+        if op not in BACKEND_OPS:
+            raise ValueError(f"unknown backend op {op!r}; expected one of {BACKEND_OPS}")
+        return getattr(self, op) or self.default
+
+    def resolve(self, op: str, platform: Optional[str] = None) -> str:
+        return resolve(op, self.for_op(op), platform=platform)
+
+    def replace(self, **kw) -> "BackendPolicy":
+        return dataclasses.replace(self, **kw)
+
+
+def resolve(op: str, backend: Optional[str] = "auto", platform: Optional[str] = None) -> str:
+    """Map (op, requested backend) to a concrete implementation choice
+    ("pallas" | "pallas-interpret" | "ref") on ``platform`` (default: the
+    running JAX backend). This is the single entry point every dispatched op
+    goes through; ``op`` scopes validation/error messages and is the
+    extension point for per-op auto rules."""
+    if op not in BACKEND_OPS:
+        raise ValueError(f"unknown backend op {op!r}; expected one of {BACKEND_OPS}")
     if backend is None:
         backend = "auto"
-    if backend not in KERNEL_BACKENDS:
-        raise ValueError(
-            f"unknown kernel backend {backend!r}; expected one of {KERNEL_BACKENDS}"
-        )
-    on_tpu = jax.default_backend() == "tpu"
+    _check_value(backend, f"{op} backend")
+    on_tpu = (platform or jax.default_backend()) == "tpu"
     if backend == "auto":
         return "pallas" if on_tpu else "ref"
     if backend == "pallas" and not on_tpu:
         raise ValueError(
-            "kernel_backend='pallas' requires a TPU backend "
-            f"(running on {jax.default_backend()!r}); use 'pallas-interpret' "
-            "for debugging or 'ref' for the XLA-fused jnp path"
+            f"{op} backend 'pallas' requires a TPU backend "
+            f"(running on {platform or jax.default_backend()!r}); use "
+            "'pallas-interpret' for debugging or 'ref' for the XLA-fused jnp path"
         )
     return backend
+
+
+def resolve_backend(backend: Optional[str] = "auto") -> str:
+    """Back-compat shim for the original single-knob entry (op-agnostic:
+    resolution rules are currently identical across ops). Prefer
+    :func:`resolve` / :meth:`BackendPolicy.resolve`."""
+    if backend is not None and backend not in KERNEL_BACKENDS:
+        # the pre-policy error wording, which callers and tests match on
+        raise ValueError(
+            f"unknown kernel backend {backend!r}; expected one of {KERNEL_BACKENDS}"
+        )
+    return resolve("loss", backend)
+
+
+def policy_from_flags(
+    backend: Optional[str] = None,
+    kernel_backend: Optional[str] = None,
+    attn_backend: Optional[str] = None,
+    decode_backend: Optional[str] = None,
+    warn: bool = True,
+) -> BackendPolicy:
+    """Build a :class:`BackendPolicy` from CLI flag values. ``backend`` is
+    the new unified ``--backend`` flag (the policy default); the per-op
+    arguments are the deprecated ``--kernel-backend`` / ``--attn-backend`` /
+    ``--decode-backend`` flags, which still work but warn. ``None`` means
+    "flag not given"."""
+    fields = {}
+    for op, value, flag in (
+        ("loss", kernel_backend, "--kernel-backend"),
+        ("attn", attn_backend, "--attn-backend"),
+        ("decode", decode_backend, "--decode-backend"),
+    ):
+        if value is not None:
+            if warn:
+                warnings.warn(
+                    f"{flag} is deprecated; use --backend (all ops) or a "
+                    f"BackendPolicy({op}=...) — forwarding to the policy",
+                    DeprecationWarning,
+                    stacklevel=2,
+                )
+            fields[op] = value
+    return BackendPolicy(default=backend or "auto", **fields)
 
 
 def kernel_arm() -> str:

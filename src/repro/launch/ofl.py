@@ -28,8 +28,8 @@ from repro.core import (
     uniform_weights,
 )
 from repro.data import make_synth_images
-from repro.fed import build_market, market_eval_fn
-from repro.kernels import KERNEL_BACKENDS
+from repro.fed import build_market, build_market_grouped, market_eval_fn
+from repro.kernels import KERNEL_BACKENDS, policy_from_flags
 from repro.models.cnn import cnn_apply, init_cnn
 from repro.utils import get_logger
 
@@ -124,10 +124,22 @@ def main() -> None:
     p.add_argument("--no-adv", action="store_true",
                    help="drop the adversarial generator term L_A (independent "
                         "of --no-ghs, so every Table 7 row is reachable)")
-    p.add_argument("--kernel-backend", default="auto", choices=KERNEL_BACKENDS,
-                   help="fused-loss kernel path for the fused driver: auto "
+    p.add_argument("--backend", default=None, choices=KERNEL_BACKENDS,
+                   help="kernel backend for every dispatched op: auto "
                         "(pallas on TPU, jnp ref elsewhere) | pallas | "
                         "pallas-interpret | ref")
+    p.add_argument("--kernel-backend", default=None, choices=KERNEL_BACKENDS,
+                   help="DEPRECATED: use --backend (this alias sets only the "
+                        "fused-loss op)")
+    p.add_argument("--ensemble-impl", default="grouped", choices=("grouped", "looped"),
+                   help="client forward engine: grouped ClientBank (one vmap "
+                        "per arch group) or the K-way looped baseline")
+    p.add_argument("--ensemble-scan-chunk", type=int, default=0,
+                   help=">0: scan over vmapped chunks of this many clients "
+                        "inside each group (memory bound at large K)")
+    p.add_argument("--grouped-market", action="store_true",
+                   help="vmap local client training within arch groups "
+                        "(build_market_grouped) instead of the per-client loop")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--out", default=None)
     args = p.parse_args()
@@ -149,13 +161,20 @@ def main() -> None:
         use_dhs=not args.no_dhs,
         use_ee=not args.no_ee,
         use_adv=not args.no_adv,
-        kernel_backend=args.kernel_backend,
+        backend=policy_from_flags(backend=args.backend, kernel_backend=args.kernel_backend),
+        ensemble_impl=args.ensemble_impl,
+        ensemble_scan_chunk=args.ensemble_scan_chunk,
         seed=args.seed,
     )
     x, y = make_synth_images(args.seed, args.classes, args.per_class, shape)
     test_x, test_y = make_synth_images(args.seed + 1, args.classes, max(40, args.per_class // 4), shape)
     archs = args.client_archs.split(",") if args.client_archs else None
-    applies, params, sizes, _ = build_market(args.seed, x, y, cfg, args.classes, archs)
+    if args.grouped_market:
+        bank, bank_params, sizes, _ = build_market_grouped(args.seed, x, y, cfg, args.classes, archs)
+        params = bank.unstack_params(bank_params)
+        applies = [bank.client_apply(k) for k in range(bank.num_clients)]
+    else:
+        applies, params, sizes, _ = build_market(args.seed, x, y, cfg, args.classes, archs)
 
     result = run_method(
         args.method, cfg, args.classes, shape, applies, params, sizes,

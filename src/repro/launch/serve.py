@@ -36,6 +36,7 @@ from repro.serve import (
     ServeEngine,
     static_generate,
 )
+from repro.kernels import policy_from_flags
 from repro.utils import get_logger
 
 log = get_logger("serve")
@@ -51,8 +52,12 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--prompt-len", type=int, default=64)
     p.add_argument("--gen", type=int, default=32)
     p.add_argument("--temperature", type=float, default=0.0)
-    p.add_argument("--attn-backend", default="auto",
-                   choices=("auto", "pallas", "pallas-interpret", "ref"))
+    p.add_argument("--backend", default=None,
+                   choices=("auto", "pallas", "pallas-interpret", "ref"),
+                   help="kernel backend for every dispatched op (attn + decode)")
+    p.add_argument("--attn-backend", default=None,
+                   choices=("auto", "pallas", "pallas-interpret", "ref"),
+                   help="DEPRECATED: use --backend (this alias sets only the attn op)")
     # static arm
     p.add_argument("--batch", type=int, default=4)
     # continuous arm
@@ -68,9 +73,10 @@ def build_parser() -> argparse.ArgumentParser:
                    help="tokens per KV page (power of two)")
     p.add_argument("--pool-pages", type=int, default=0,
                    help="KV pool capacity in pages (0 = full per-slot capacity)")
-    p.add_argument("--decode-backend", default="auto",
+    p.add_argument("--decode-backend", default=None,
                    choices=("auto", "pallas", "pallas-interpret", "ref"),
-                   help="paged decode attention backend (kernels/dispatch semantics)")
+                   help="DEPRECATED: use --backend (this alias sets only the "
+                        "paged decode op)")
     return p
 
 
@@ -212,7 +218,11 @@ def main() -> None:
         # model's actual cache length (a reduced variant clamps the window)
         cfg = reduced_variant(cfg).replace(dtype="float32", param_dtype="float32")
     validate_args(args, cfg)  # before any device/mesh work
-    cfg = cfg.replace(attn_backend=args.attn_backend, decode_backend=args.decode_backend)
+    cfg = cfg.replace(backend=policy_from_flags(
+        backend=args.backend,
+        attn_backend=args.attn_backend,
+        decode_backend=args.decode_backend,
+    ))
     mesh = {"host": make_host_mesh, "production": make_production_mesh}[args.mesh]()
     with mesh_context(mesh):
         params = init_lm(cfg, jax.random.key(args.seed))

@@ -23,7 +23,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.dispatch import resolve_backend
+from repro.kernels.dispatch import resolve
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.models.layers import apply_rope, dense_init, rms_norm
 from repro.sharding import constrain
@@ -338,11 +338,12 @@ _flash_pallas.defvjp(_flash_pallas_fwd, _flash_pallas_bwd)
 
 def _attn_mix(q, k, v, cfg):
     """Full-sequence (train/prefill) attention core, routed through the
-    kernel dispatch layer: ``cfg.attn_backend`` "auto" runs the compiled
+    kernel dispatch layer: ``cfg.backend_for("attn")`` (the BackendPolicy,
+    or the deprecated ``attn_backend`` alias) — "auto" runs the compiled
     Pallas flash kernel on TPU and the blocked-jnp twin elsewhere (auto
     never interprets off-TPU); "ref" is the jnp twin explicitly — the parity
     oracle for the kernel path."""
-    backend = resolve_backend(getattr(cfg, "attn_backend", "auto"))
+    backend = resolve("attn", cfg.backend_for("attn"))
     if backend == "ref":
         return flash_attn_jax(
             q, k, v, causal=cfg.causal, window=cfg.sliding_window,
@@ -516,7 +517,7 @@ def _attn_decode_paged(params, q, k_new, v_new, cfg, cache, posv, page_table, x)
     out = flash_decode(
         q[:, 0], k_pages, v_pages, page_table, posv,
         window=cfg.sliding_window, softcap=cfg.attn_logit_softcap,
-        cache_len=cl, backend=getattr(cfg, "decode_backend", "auto"),
+        cache_len=cl, backend=cfg.backend_for("decode"),
     )
     out = jnp.einsum("bhk,hkd->bd", out, params["wo"].astype(x.dtype))[:, None]
     return constrain(out, "batch", None, None), {"k_pages": k_pages, "v_pages": v_pages}

@@ -39,6 +39,9 @@ LogicalSpec = Tuple[Optional[str], ...]
 _LOGICAL_TO_MESH: Dict[str, Tuple[str, ...]] = {
     "batch": ("pod", "data"),
     "fsdp": ("pod", "data"),
+    # stacked client axis of a grouped ClientBank (core/client_bank.py):
+    # clients within a homogeneous group data-parallelize across the mesh
+    "clients": ("pod", "data"),
     "tp": ("model",),
     "experts": ("model",),
     "seq": ("model",),

@@ -1,0 +1,306 @@
+"""ClientBank grouped-ensemble engine: parity with the K-way looped path.
+
+Pins the tentpole contracts:
+  * grouped logits == looped logits on randomized heterogeneous markets
+    (random arch assignment, random group sizes, singletons,
+    all-homogeneous) — the stack comes back in original client order;
+    bitwise for matmul archs / singleton groups, one-ULP-scale float
+    tolerance where a multi-client conv group rebatches the conv;
+  * input gradients through the bank match the loop (DHS / generator path);
+  * the stack dtype is normalized to f32 at the ensemble boundary even on
+    mixed-dtype markets (a bf16 client next to f32 ones);
+  * building the grouped forward traces each apply fn once per GROUP, not
+    once per client (the O(#groups) trace-cost claim);
+  * ``scan_chunk`` (the memory lever) changes nothing numerically;
+  * ``local_train_group`` reproduces per-client ``local_train`` bitwise,
+    including partial batches and unequal shard step counts;
+  * a fused Co-Boosting epoch run grouped matches the looped run on a
+    heterogeneous market (server params, EE weights).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.train import OFLConfig, TrainConfig
+from repro.core import default_image_setup, run_coboosting
+from repro.core.client_bank import ClientBank, make_ensemble
+from repro.core.ensemble import ENSEMBLE_DTYPE
+from repro.data import make_synth_images
+from repro.fed import build_market, build_market_grouped, local_train, local_train_group
+from repro.models.cnn import cnn_apply, init_cnn
+from repro.utils import tree_stack
+from repro.utils.trees import tree_unstack
+
+pytestmark = pytest.mark.tier1
+
+CLASSES = 5
+SHAPE = (8, 8, 3)
+ARCH_POOL = ("mlp", "cnn2", "lenet5")
+
+
+def _market(archs, seed=0):
+    applies = [partial(cnn_apply, a) for a in archs]
+    params = [
+        init_cnn(jax.random.fold_in(jax.random.key(seed), k), a, CLASSES, SHAPE)
+        for k, a in enumerate(archs)
+    ]
+    return applies, params
+
+
+def _logits_pair(archs, x, **bank_kw):
+    applies, params = _market(archs)
+    loop_fn, loop_p = make_ensemble(applies, params, impl="looped")
+    grp_fn, grp_p = make_ensemble(applies, params, impl="grouped", **bank_kw)
+    return loop_fn(loop_p, x), grp_fn(grp_p, x)
+
+
+# ---------------------------------------------------------------------------
+# logits parity
+
+
+# a multi-client conv group lowers to a batched conv whose accumulation
+# order may differ from the per-client conv — tight float tolerance there;
+# matmul archs and singleton groups stay bitwise
+ATOL = 1e-5
+
+
+@pytest.mark.parametrize(
+    "archs",
+    [
+        ["mlp"] * 4,                       # all-homogeneous: one group
+        ["mlp", "cnn2", "lenet5"],         # all-singleton groups
+        ["mlp", "cnn2", "mlp", "cnn2"],    # interleaved (order restore)
+        ["cnn2", "mlp", "mlp", "lenet5", "cnn2", "mlp"],
+    ],
+)
+def test_grouped_matches_looped(archs):
+    x = jax.random.normal(jax.random.key(7), (4, *SHAPE))
+    la, ga = _logits_pair(archs, x)
+    assert la.shape == ga.shape == (len(archs), 4, CLASSES)
+    np.testing.assert_allclose(np.asarray(la), np.asarray(ga), atol=ATOL)
+
+
+def test_grouped_matches_looped_bitwise_matmul_archs():
+    """Where no conv rebatching is involved the stack is bit-identical."""
+    x = jax.random.normal(jax.random.key(7), (4, *SHAPE))
+    la, ga = _logits_pair(["mlp"] * 5, x)
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(ga))
+    la, ga = _logits_pair(["mlp", "cnn2", "lenet5"], x)  # singleton groups
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(ga))
+
+
+def test_grouped_matches_looped_randomized():
+    """Hypothesis-style randomized heterogeneous markets (seeded numpy keeps
+    it deterministic; hypothesis strategies can't draw jax trees cheaply)."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @given(st.integers(1, 9), st.integers(0, 10_000))
+    @settings(max_examples=15, deadline=None)
+    def check(k, seed):
+        rng = np.random.RandomState(seed)
+        archs = [ARCH_POOL[i] for i in rng.randint(0, len(ARCH_POOL), size=k)]
+        x = jax.random.normal(jax.random.key(seed), (3, *SHAPE))
+        la, ga = _logits_pair(archs, x)
+        np.testing.assert_allclose(np.asarray(la), np.asarray(ga), atol=ATOL)
+
+    check()
+
+
+def test_grouped_under_jit_and_grad():
+    """Input gradients (the DHS/Eq. 10 and generator paths differentiate the
+    ensemble wrt x) agree between the bank and the loop."""
+    archs = ["mlp", "cnn2", "mlp", "lenet5"]
+    applies, params = _market(archs)
+    x = jax.random.normal(jax.random.key(3), (4, *SHAPE))
+    loop_fn, loop_p = make_ensemble(applies, params, impl="looped")
+    grp_fn, grp_p = make_ensemble(applies, params, impl="grouped")
+    gl = jax.jit(jax.grad(lambda xx: jnp.sum(loop_fn(loop_p, xx) ** 2)))(x)
+    gg = jax.jit(jax.grad(lambda xx: jnp.sum(grp_fn(grp_p, xx) ** 2)))(x)
+    np.testing.assert_allclose(np.asarray(gl), np.asarray(gg), atol=1e-5)
+
+
+def test_scan_chunk_parity():
+    archs = ["mlp"] * 7 + ["cnn2"] * 3
+    x = jax.random.normal(jax.random.key(11), (2, *SHAPE))
+    base, _ = _logits_pair(archs, x)
+    for chunk in (1, 2, 3, 7, 16):
+        _, chunked = _logits_pair(archs, x, scan_chunk=chunk)
+        np.testing.assert_allclose(np.asarray(base), np.asarray(chunked), atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# grouping structure + trace cost
+
+
+def test_bank_grouping_and_order():
+    archs = ["cnn2", "mlp", "mlp", "lenet5", "cnn2", "mlp"]
+    applies, params = _market(archs)
+    bank, bank_params = ClientBank.build(applies, params)
+    assert bank.num_groups == 3
+    assert bank.counts == (2, 3, 1)           # first-seen group order
+    assert bank.order == (0, 4, 1, 2, 5, 3)   # within-group client order kept
+    assert bank.num_clients == 6 and not bank.is_client_ordered
+    # params round-trip in original client order
+    back = bank.unstack_params(bank_params)
+    for p0, p1 in zip(params, back):
+        for u, v in zip(jax.tree_util.tree_leaves(p0), jax.tree_util.tree_leaves(p1)):
+            np.testing.assert_array_equal(np.asarray(u), np.asarray(v))
+    # and regroup to the identical stacked layout
+    restacked = bank.stack_params(back)
+    for u, v in zip(jax.tree_util.tree_leaves(bank_params), jax.tree_util.tree_leaves(restacked)):
+        np.testing.assert_array_equal(np.asarray(u), np.asarray(v))
+    for k, a in enumerate(archs):
+        assert bank.client_apply(k).args == (a,)
+
+
+def test_grouped_traces_once_per_group():
+    """The O(#groups) trace-cost pin, mirroring the fused-epoch dispatch
+    count test: tracing the grouped forward calls each apply fn once per
+    GROUP (vmap traces the fn body once), while the looped forward unrolls
+    once per CLIENT."""
+    archs = ["mlp", "cnn2"] * 4  # K=8, 2 groups
+    calls = []
+
+    def counting_apply(arch, p, x):
+        calls.append(arch)
+        return cnn_apply(arch, p, x)
+
+    applies = [partial(counting_apply, a) for a in archs]
+    _, params = _market(archs)
+    x = jax.random.normal(jax.random.key(0), (2, *SHAPE))
+
+    grp_fn, grp_p = make_ensemble(applies, params, impl="grouped")
+    calls.clear()
+    jax.jit(grp_fn)(grp_p, x).block_until_ready()
+    assert len(calls) == 2  # once per group, independent of K
+
+    loop_fn, loop_p = make_ensemble(applies, params, impl="looped")
+    calls.clear()
+    jax.jit(loop_fn)(loop_p, x).block_until_ready()
+    assert len(calls) == len(archs)  # the unrolled baseline is O(K)
+
+
+def test_unknown_callables_fall_back_to_singletons():
+    """Apply fns the grouping key can't prove identical degrade to singleton
+    groups — still correct, never wrongly merged."""
+    archs = ["mlp", "mlp"]
+    _, params = _market(archs)
+    applies = [lambda p, x: cnn_apply("mlp", p, x), lambda p, x: cnn_apply("mlp", p, x)]
+    bank, bank_params = ClientBank.build(applies, params)
+    assert bank.num_groups == 2
+    x = jax.random.normal(jax.random.key(1), (2, *SHAPE))
+    ref = jnp.stack([f(p, x) for f, p in zip(applies, params)])
+    np.testing.assert_array_equal(np.asarray(bank.logits_all(bank_params, x)), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# dtype normalization at the ensemble boundary
+
+
+def test_mixed_dtype_market_normalizes_to_f32():
+    """A bf16 client next to f32 ones: both impls produce the same f32 stack
+    (pre-fix, jnp.stack promotion depended on client order)."""
+    archs = ["mlp", "mlp", "cnn2"]
+    applies, params = _market(archs)
+    params[1] = jax.tree_util.tree_map(lambda l: l.astype(jnp.bfloat16), params[1])
+    bf16_apply = lambda p, x: cnn_apply("mlp", p, x.astype(jnp.bfloat16))
+    applies[1] = bf16_apply
+    x = jax.random.normal(jax.random.key(2), (3, *SHAPE))
+    for impl in ("looped", "grouped"):
+        fn, p = make_ensemble(applies, params, impl=impl)
+        la = fn(p, x)
+        assert la.dtype == ENSEMBLE_DTYPE == jnp.float32
+        # rows are each client's own output, cast — not a promoted mixture
+        np.testing.assert_array_equal(
+            np.asarray(la[1]), np.asarray(bf16_apply(params[1], x).astype(jnp.float32))
+        )
+
+
+# ---------------------------------------------------------------------------
+# grouped local training (build_market_grouped path)
+
+
+def test_local_train_group_matches_sequential_bitwise():
+    rng = np.random.RandomState(0)
+    sizes = [37, 64, 19]  # partial batches + unequal step counts
+    shards = [
+        (rng.randn(n, *SHAPE).astype(np.float32), rng.randint(0, CLASSES, n))
+        for n in sizes
+    ]
+    tc = TrainConfig(optimizer="sgdm", learning_rate=0.01, momentum=0.9,
+                     batch_size=16, seed=3)
+    apply_fn = partial(cnn_apply, "mlp")
+    inits = [
+        init_cnn(jax.random.fold_in(jax.random.key(0), k), "mlp", CLASSES, SHAPE)
+        for k in range(3)
+    ]
+    seq = [local_train(apply_fn, p0, x, y, tc, epochs=2) for p0, (x, y) in zip(inits, shards)]
+    grp = tree_unstack(local_train_group(apply_fn, tree_stack(inits), shards, tc, epochs=2), 3)
+    for a, b in zip(seq, grp):
+        for u, v in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+            np.testing.assert_array_equal(np.asarray(u), np.asarray(v))
+
+
+def test_build_market_grouped_matches_build_market():
+    cfg = OFLConfig(num_clients=4, local_epochs=2, local_batch_size=16, alpha=0.5)
+    archs = ["mlp", "cnn2", "mlp", "cnn2"]
+    x, y = make_synth_images(0, CLASSES, 30, SHAPE)
+    applies, params, sizes, parts = build_market(0, x, y, cfg, CLASSES, archs=archs)
+    bank, bank_params, g_sizes, g_parts = build_market_grouped(0, x, y, cfg, CLASSES, archs=archs)
+    assert g_sizes == sizes
+    for a, b in zip(parts, g_parts):
+        np.testing.assert_array_equal(a, b)
+    grouped_clients = bank.unstack_params(bank_params)
+    # the cnn2 group trains under a vmapped conv whose grads reassociate
+    # (~1e-8); the mlp group stays bitwise (pinned separately above)
+    for a, b in zip(params, grouped_clients):
+        for u, v in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+            np.testing.assert_allclose(np.asarray(u), np.asarray(v), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: fused epoch on a heterogeneous market, grouped vs looped
+
+
+def test_fused_epoch_grouped_matches_looped_hetero():
+    """The whole Algorithm 1 loop (generator + DHS + EE + KD) on a mixed-arch
+    market: routing the client forwards through the bank must reproduce the
+    looped run — same PRNG stream, float-reassociation tolerance only."""
+    cfg = OFLConfig(
+        num_clients=3, local_epochs=2, local_batch_size=16,
+        epochs=4, gen_iters=3, batch_size=8, latent_dim=8, buffer_batches=3,
+    )
+    x, y = make_synth_images(0, CLASSES, 30, SHAPE)
+    archs = ["mlp", "cnn2", "mlp"]
+    applies, params, _, _ = build_market(0, x, y, cfg, CLASSES, archs=archs)
+    server_apply = partial(cnn_apply, "mlp")
+
+    def run(impl):
+        c = dataclasses.replace(cfg, ensemble_impl=impl)
+        sp = init_cnn(jax.random.key(99), "mlp", CLASSES, SHAPE)
+        gen_apply, gp = default_image_setup(jax.random.key(5), c, CLASSES, SHAPE)
+        return run_coboosting(
+            applies, params, server_apply, sp, gen_apply, gp, c, CLASSES,
+            jax.random.key(0),
+        )
+
+    grouped, looped = run("grouped"), run("looped")
+    diff = max(
+        float(jnp.max(jnp.abs(u - v)))
+        for u, v in zip(
+            jax.tree_util.tree_leaves(grouped.server_params),
+            jax.tree_util.tree_leaves(looped.server_params),
+        )
+    )
+    assert diff < 1e-4
+    np.testing.assert_allclose(
+        np.asarray(grouped.weights), np.asarray(looped.weights), atol=1e-5
+    )
