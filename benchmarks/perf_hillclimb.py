@@ -486,6 +486,114 @@ def pair_decodepath(out):
     out["decodepath:paged_vs_dense"] = rec
 
 
+def pair_fleetpath(out):
+    """Fleet-path A/B (the serving-fleet PR's headline number): the SAME
+    staggered ragged request stream against (A) one monolithic colocated
+    ServeEngine with 2N slots and (B) a FleetRouter over two N-slot
+    replicas — equal total slot/pool capacity — with replica 0 running as
+    an explicitly disaggregated prefill/decode worker pair (the handoff
+    path in the timed loop). Both arms run meshless on this process's
+    devices, so the CPU number isolates the ROUTING + handoff overhead
+    (parity of tokens is pinned by tests/test_fleet.py); the fleet's win on
+    real hardware is replicas on disjoint mesh slices. Reports tok/s and
+    end-to-end p50/p95 like the other serve pairs PLUS the queue-wait
+    percentiles (admitted - arrival) that the Completion split now makes
+    visible — the router-attributable share of latency."""
+    import jax
+    import numpy as np
+
+    from repro.config import get_arch, reduced_variant
+    from repro.models import init_lm
+    from repro.serve import (
+        ContinuousScheduler, EngineConfig, FleetRouter, Request, ServeEngine,
+    )
+
+    cfg = reduced_variant(get_arch("smollm-135m")).replace(
+        dtype="float32", param_dtype="float32", num_layers=4, d_model=256,
+    )
+    params = init_lm(cfg, jax.random.key(0))
+    R, PROMPT, MAX_GEN, SLOTS, REPEATS = 16, 32, 48, 4, 5
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab_size, size=PROMPT).astype(np.int32) for _ in range(R)]
+    budgets = [int(g) for g in rng.randint(8, MAX_GEN + 1, size=R)]  # ragged
+
+    def mk_ecfg(slots, disagg=False):
+        return EngineConfig(
+            max_slots=slots, max_seq=PROMPT + MAX_GEN, max_new=MAX_GEN,
+            decode_chunk=8, disagg=disagg,
+        )
+
+    mono = ServeEngine(cfg, params, mk_ecfg(SLOTS))
+    replicas = [
+        ServeEngine(cfg, params, mk_ecfg(SLOTS // 2, disagg=True)),
+        ServeEngine(cfg, params, mk_ecfg(SLOTS // 2)),
+    ]
+    arms = {
+        "mono": ContinuousScheduler(mono),
+        "fleet": FleetRouter(replicas),
+    }
+
+    def run_arm(name, dt):
+        t0 = time.time()
+        comps = arms[name].run(
+            [Request(rid=i, tokens=prompts[i], max_new_tokens=budgets[i], arrival=i * dt)
+             for i in range(R)]
+        )
+        wall = time.time() - t0
+        return (
+            sum(len(c.tokens) for c in comps) / max(wall, 1e-9),
+            [c.latency for c in comps],
+            [c.queue_wait for c in comps],
+        )
+
+    # warm every compile cache (both replicas + the monolith), calibrate the
+    # arrival gap to the monolith's service time exactly like servepath
+    for eng in [mono] + replicas:
+        eng.warmup(prompts[0])
+    run_arm("mono", 0.0)
+    run_arm("fleet", 0.0)
+    t0 = time.time()
+    run_arm("mono", 0.0)
+    dt = max((time.time() - t0) / (2 * R), 1e-3)
+
+    runs = {"mono": [], "fleet": []}
+    for _ in range(REPEATS):
+        for name in ("mono", "fleet"):
+            runs[name].append(run_arm(name, dt))
+    pct = lambda xs, q: float(np.percentile(np.asarray(xs), q))
+    med = {k: sorted(v, key=lambda r: r[0])[REPEATS // 2] for k, v in runs.items()}
+    rec = {
+        "status": "ok",
+        "requests": R, "prompt_len": PROMPT, "budgets": budgets,
+        "mono_slots": SLOTS, "fleet_replicas": len(replicas),
+        "fleet_slots_per_replica": SLOTS // 2, "disagg_replicas": 1,
+        "arrival_dt_s": round(dt, 4),
+        "mono_tok_per_s": round(med["mono"][0], 2),
+        "fleet_tok_per_s": round(med["fleet"][0], 2),
+        "speedup": round(med["fleet"][0] / max(med["mono"][0], 1e-9), 3),
+        "mono_p50_s": round(pct(med["mono"][1], 50), 4),
+        "mono_p95_s": round(pct(med["mono"][1], 95), 4),
+        "fleet_p50_s": round(pct(med["fleet"][1], 50), 4),
+        "fleet_p95_s": round(pct(med["fleet"][1], 95), 4),
+        "mono_queue_wait_p50_s": round(pct(med["mono"][2], 50), 4),
+        "mono_queue_wait_p95_s": round(pct(med["mono"][2], 95), 4),
+        "fleet_queue_wait_p50_s": round(pct(med["fleet"][2], 50), 4),
+        "fleet_queue_wait_p95_s": round(pct(med["fleet"][2], 95), 4),
+        "handoffs": sum(e.stats["handoffs"] for e in replicas),
+        "requeued": arms["fleet"].stats["requeued"],
+        "jax_backend": jax.default_backend(),
+    }
+    log.info(
+        "fleetpath: fleet=%.1f tok/s mono=%.1f tok/s speedup=%.2fx "
+        "p95 %.3fs vs %.3fs queue-wait p95 %.3fs vs %.3fs (%d handoffs)",
+        rec["fleet_tok_per_s"], rec["mono_tok_per_s"], rec["speedup"],
+        rec["fleet_p95_s"], rec["mono_p95_s"],
+        rec["fleet_queue_wait_p95_s"], rec["mono_queue_wait_p95_s"],
+        rec["handoffs"],
+    )
+    out["fleetpath:router_disagg_vs_mono"] = rec
+
+
 def _ensemblepath_setup(args):
     """Parse --ks into the K sweep (setup hook)."""
     spec = getattr(args, "ks", "") or "8,32"
@@ -646,6 +754,10 @@ PAIRS = {
     "decodepath": PairSpec(
         help="paged KVPool + flash-decode vs dense per-slot KV + SDPA",
         run=_nullary(pair_decodepath),
+    ),
+    "fleetpath": PairSpec(
+        help="routed fleet (2 replicas, one disaggregated pair) vs monolithic engine",
+        run=_nullary(pair_fleetpath),
     ),
     "ensemblepath": PairSpec(
         help="grouped ClientBank ensemble vs K-way looped client forwards (mixed archs)",

@@ -1,4 +1,4 @@
-"""Serving driver for the distilled server LM: continuous-batching engine
+"""Serving driver for the distilled server LM: continuous-batching fleet
 (default) or the fused static-batch baseline.
 
     # continuous batching: staggered requests through the slot engine
@@ -8,12 +8,21 @@
         --engine continuous --requests 8 --request-rate 20 --max-slots 4 \
         --page-size 16 --pool-pages 0
 
+    # serving FLEET: N engine replicas behind the least-loaded router, each
+    # replica optionally a disaggregated prefill/decode pair on disjoint
+    # mesh halves (needs >= 2 devices per replica to actually split)
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
+        --engine continuous --replicas 2 --disagg --requests 8
+
     # static baseline: one batch, prefill + single-dispatch decode
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
         --reduced --engine static --batch 4 --prompt-len 64 --gen 32
 
-Argument validation fails fast — encoder-only archs and unsupported mesh
-shapes are rejected with a clear message BEFORE any device allocation.
+Argument validation fails fast — encoder-only archs, vlm continuous
+serving, ``--disagg`` with the dense KV layout, and unsupported static mesh
+shapes are rejected with a clear message BEFORE any device allocation, and
+the exact fleet EngineConfig/KVPool pair is dry-constructed pre-device.
 """
 from __future__ import annotations
 
@@ -26,11 +35,19 @@ import numpy as np
 
 from repro.config import get_arch, reduced_variant
 from repro.data import make_token_stream
-from repro.launch.mesh import make_host_mesh, make_production_mesh, mesh_context
+from repro.launch.mesh import (
+    disagg_submeshes,
+    make_fleet_mesh,
+    make_host_mesh,
+    make_production_mesh,
+    mesh_context,
+    replica_meshes,
+)
 from repro.models import group_pattern, init_lm
 from repro.serve import (
     ContinuousScheduler,
     EngineConfig,
+    FleetRouter,
     KVPool,
     Request,
     ServeEngine,
@@ -66,6 +83,14 @@ def build_parser() -> argparse.ArgumentParser:
                    help="arrivals per second (0 = all at t=0)")
     p.add_argument("--max-slots", type=int, default=4)
     p.add_argument("--decode-chunk", type=int, default=8)
+    # fleet topology (continuous arm)
+    p.add_argument("--replicas", type=int, default=1,
+                   help="engine replicas behind the least-loaded router "
+                        "(each replica shards over its own mesh slice)")
+    p.add_argument("--disagg", action="store_true",
+                   help="split each replica into a disaggregated prefill/decode "
+                        "worker pair (paged KV layout only; the pair colocates "
+                        "on a single-device replica)")
     # paged KV pool (continuous arm)
     p.add_argument("--kv-layout", default="paged", choices=("paged", "dense"),
                    help="paged: KVPool + flash-decode; dense: per-slot rectangle + SDPA")
@@ -80,6 +105,13 @@ def build_parser() -> argparse.ArgumentParser:
     return p
 
 
+def _effective_replicas(args) -> int:
+    """``--mesh multipod`` serves one fleet per pod: a decode engine is a
+    single-pod program (the pod axis is a DCN boundary), so each of the two
+    pods carries its own replica group behind the shared router."""
+    return args.replicas * (2 if args.mesh == "multipod" else 1)
+
+
 def validate_args(args, cfg) -> None:
     """Fail fast, with a clear message, before any device allocation."""
     if cfg.is_encoder_only:
@@ -87,17 +119,24 @@ def validate_args(args, cfg) -> None:
             f"{cfg.name} is encoder-only: no autoregressive decode, nothing to "
             "serve (DESIGN.md skip). Pick a decoder arch."
         )
-    if args.mesh == "multipod":
+    if args.mesh == "multipod" and args.engine == "static":
         raise SystemExit(
-            "--mesh multipod is not supported for serving: a decode engine is a "
-            "single-pod program (the pod axis is data-parallel replication — run "
-            "one engine per pod behind a router instead). Use --mesh host or "
-            "--mesh production."
+            "--mesh multipod is not supported for static serving: the fused "
+            "static program is single-pod (the pod axis is data-parallel "
+            "replication). Use --engine continuous, which runs one engine "
+            "replica group per pod behind the fleet router."
         )
     if args.prompt_len < 1 or args.gen < 1:
         raise SystemExit(f"--prompt-len ({args.prompt_len}) and --gen ({args.gen}) must be >= 1")
     if args.engine == "static" and args.batch < 1:
         raise SystemExit(f"--batch must be >= 1, got {args.batch}")
+    if args.replicas < 1:
+        raise SystemExit(f"--replicas must be >= 1, got {args.replicas}")
+    if (args.replicas > 1 or args.disagg) and args.engine != "continuous":
+        raise SystemExit(
+            "--replicas/--disagg describe the continuous serving fleet; the "
+            "static baseline is a single fused program. Use --engine continuous."
+        )
     if args.engine == "continuous":
         if cfg.frontend == "vision":
             raise SystemExit(
@@ -115,13 +154,26 @@ def validate_args(args, cfg) -> None:
             raise SystemExit(f"--decode-chunk must be >= 1, got {args.decode_chunk}")
         if args.kv_layout == "paged" and args.pool_pages < 0:
             raise SystemExit(f"--pool-pages must be >= 0, got {args.pool_pages}")
+        if args.disagg and args.kv_layout == "dense":
+            raise SystemExit(
+                '--disagg requires --kv-layout paged: the prefill->decode '
+                "handoff moves sealed KV PAGES between worker pools, and the "
+                "dense per-slot rectangle has no page units to hand off."
+            )
         # dry-construct the exact EngineConfig (and, for the paged layout,
         # the KVPool — which bills the pool floor against the MODEL's cache
-        # length) that run_continuous will build: both are pure-host, so the
-        # full paged consistency matrix dies HERE, not after init_lm
+        # length) that every fleet replica will build: both are pure-host,
+        # so the full paged consistency matrix (including disagg) dies HERE,
+        # not after init_lm
         try:
             ecfg = _continuous_engine_config(args)
             has_attn = any(m == "attn" for m, _ in group_pattern(cfg))
+            if args.disagg and not has_attn:
+                raise ValueError(
+                    f"{cfg.name} has no attention layers: its serving state "
+                    "degrades to the dense layout, which has no page units to "
+                    "hand off — --disagg needs an attention arch."
+                )
             if args.kv_layout == "paged" and has_attn:  # pure-SSM runs dense
                 KVPool(cfg, ecfg)
         except ValueError as ex:
@@ -166,7 +218,31 @@ def _continuous_engine_config(args) -> EngineConfig:
         kv_layout=args.kv_layout,
         page_size=args.page_size,
         pool_pages=args.pool_pages,
+        disagg=args.disagg,
     )
+
+
+def build_fleet(args, cfg, params) -> list:
+    """Construct the engine replicas. With more than one device the fleet
+    mesh splits them ``replicas × (data=1) × model`` and each engine shards
+    over its slice (``--disagg`` further halves a slice into the prefill and
+    decode workers' submeshes); on one device the replicas colocate meshless
+    (distinct pools and programs, shared device) — same topology, same
+    router, degenerate placement."""
+    replicas = _effective_replicas(args)
+    ecfg = _continuous_engine_config(args)
+    n_dev = len(jax.devices())
+    if n_dev > 1 and replicas > 1:
+        subs = replica_meshes(make_fleet_mesh(replicas))
+    else:
+        subs = [None] * replicas
+    engines = []
+    for sub in subs:
+        pmesh = dmesh = sub
+        if args.disagg and sub is not None:
+            pmesh, dmesh = disagg_submeshes(sub)
+        engines.append(ServeEngine(cfg, params, ecfg, mesh=dmesh, prefill_mesh=pmesh))
+    return engines
 
 
 def run_continuous(args, cfg, params) -> None:
@@ -181,32 +257,50 @@ def run_continuous(args, cfg, params) -> None:
         )
         for i in range(args.requests)
     ]
-    engine = ServeEngine(cfg, params, _continuous_engine_config(args))
-    sched = ContinuousScheduler(engine)
-    # compile every admit size + the chunk program before timing
-    engine.warmup(requests[0].tokens, min(2, args.gen))
+    engines = build_fleet(args, cfg, params)
+    sched = (
+        ContinuousScheduler(engines[0]) if len(engines) == 1 else FleetRouter(engines)
+    )
+    # compile every admit size + the chunk program on every replica before
+    # timing (replicas over identical mesh slices share the compile cache)
+    for eng in engines:
+        eng.warmup(requests[0].tokens, min(2, args.gen))
     t0 = time.time()
     completions = sched.run(requests)
     wall = time.time() - t0
     toks = sum(len(c.tokens) for c in completions)
-    lats = sorted(c.latency for c in completions)
-    p50 = lats[len(lats) // 2]
-    p95 = lats[min(len(lats) - 1, int(len(lats) * 0.95))]
+
+    def pct(xs, q):
+        xs = sorted(xs)
+        return xs[min(len(xs) - 1, int(len(xs) * q))] if xs else 0.0
+
+    lats = [c.latency for c in completions]
+    waits = [c.queue_wait for c in completions]
     log.info(
-        "continuous: %d reqs, %d tokens in %.3fs (%.1f tok/s) p50=%.3fs p95=%.3fs",
-        len(completions), toks, wall, toks / max(wall, 1e-9), p50, p95,
+        "fleet[%d%s]: %d reqs, %d tokens in %.3fs (%.1f tok/s) "
+        "p50=%.3fs p95=%.3fs queue-wait p50=%.3fs p95=%.3fs",
+        len(engines), "+disagg" if args.disagg else "",
+        len(completions), toks, wall, toks / max(wall, 1e-9),
+        pct(lats, 0.5), pct(lats, 0.95), pct(waits, 0.5), pct(waits, 0.95),
     )
-    log.info(
-        "engine: %d decode chunks, %d host syncs, %d prefills (%.2f syncs/token)",
-        engine.stats["decode_chunks"], engine.stats["host_syncs"],
-        engine.stats["prefill_dispatches"], engine.stats["host_syncs"] / max(toks, 1),
-    )
-    if engine.pool is not None:
+    for i, eng in enumerate(engines):
+        served = sum(1 for c in completions if c.replica == i)
         log.info(
-            "kv pool: %d pages x %d tokens (%s layout), %d decode-time appends",
-            engine.pool.n_pages, engine.pool.page_size, engine.layout,
-            engine.stats["page_appends"],
+            "replica %d: %d reqs, %d decode chunks, %d host syncs, %d prefills, "
+            "%d handoffs",
+            i, served, eng.stats["decode_chunks"], eng.stats["host_syncs"],
+            eng.stats["prefill_dispatches"], eng.stats["handoffs"],
         )
+        if eng.pool is not None:
+            log.info(
+                "replica %d kv pool: %d pages x %d tokens (%s layout), "
+                "%d decode-time appends",
+                i, eng.pool.n_pages, eng.pool.page_size, eng.layout,
+                eng.stats["page_appends"],
+            )
+    if isinstance(sched, FleetRouter) and len(engines) > 1:
+        log.info("router: %d routed, %d requeued-on-defer", sched.stats["routed"],
+                 sched.stats["requeued"])
     log.info("sample continuation (rid 0): %s", completions[0].tokens[:16].tolist())
 
 
@@ -223,6 +317,16 @@ def main() -> None:
         attn_backend=args.attn_backend,
         decode_backend=args.decode_backend,
     ))
+    fleet = args.engine == "continuous" and (
+        _effective_replicas(args) > 1 or args.disagg
+    )
+    if fleet:
+        # no global mesh context: each replica shards params/state against
+        # ITS submesh explicitly (a context mesh with a replica axis would
+        # leak into init-time sharding constraints)
+        params = init_lm(cfg, jax.random.key(args.seed))
+        run_continuous(args, cfg, params)
+        return
     mesh = {"host": make_host_mesh, "production": make_production_mesh}[args.mesh]()
     with mesh_context(mesh):
         params = init_lm(cfg, jax.random.key(args.seed))

@@ -1,25 +1,39 @@
 """Continuous-batching serving subsystem for the distilled server LM.
 
-* :mod:`repro.serve.engine`    — slot-based device engine: bucketed prefill
-  admission, ``lax.while_loop`` decode chunks with on-device sampling (O(1)
-  host syncs per chunk), per-slot positions.
+* :mod:`repro.serve.engine`    — the worker pair: :class:`PrefillWorker`
+  (bucketed prefill admission sealed into :class:`KVHandoff`\\ s) and
+  :class:`DecodeWorker` (slot-based ``lax.while_loop`` decode chunks with
+  on-device sampling, O(1) host syncs per chunk, per-slot positions), with
+  :class:`ServeEngine` as their colocated composition — one fleet replica.
 * :mod:`repro.serve.kv_pool`   — paged KV memory: fixed-size page pool +
   free list + per-slot page tables (the default ``kv_layout="paged"``; HBM
-  scales with live tokens, decode attention runs the flash-decode kernel).
-* :mod:`repro.serve.scheduler` — request queue, admission into free slots,
-  eviction/drain of finished sequences, arrival clock.
+  scales with live tokens, decode attention runs the flash-decode kernel),
+  plus the ``donate``/``adopt`` handoff protocol between worker pools.
+* :mod:`repro.serve.scheduler` — :class:`FleetRouter`: request queue +
+  least-loaded admission across N replicas, requeue-on-defer, per-replica
+  eviction/drain, arrival clock; ``ContinuousScheduler`` is the N=1 case.
 * :mod:`repro.serve.static`    — the static-batch baseline arm, fused into
   a single dispatch (no per-token host sync; always the dense cache — the
   cross-layout parity oracle).
 
 A/B: ``python -m benchmarks.perf_hillclimb --pair servepath`` (continuous vs
-static) and ``--pair decodepath`` (paged-flash vs dense-SDPA decode).
+static), ``--pair decodepath`` (paged-flash vs dense-SDPA decode) and
+``--pair fleetpath`` (routed disaggregated fleet vs monolithic engine).
 """
-from repro.serve.engine import DecodeState, EngineConfig, ServeEngine, sample_tokens
+from repro.serve.engine import (
+    DecodeState,
+    DecodeWorker,
+    EngineConfig,
+    KVHandoff,
+    PrefillWorker,
+    ServeEngine,
+    sample_tokens,
+)
 from repro.serve.kv_pool import KVPool
 from repro.serve.scheduler import (
     Completion,
     ContinuousScheduler,
+    FleetRouter,
     ManualClock,
     MonotonicClock,
     Request,
@@ -28,12 +42,16 @@ from repro.serve.static import make_static_generator, static_generate
 
 __all__ = [
     "DecodeState",
+    "DecodeWorker",
     "EngineConfig",
+    "KVHandoff",
     "KVPool",
+    "PrefillWorker",
     "ServeEngine",
     "sample_tokens",
     "Completion",
     "ContinuousScheduler",
+    "FleetRouter",
     "ManualClock",
     "MonotonicClock",
     "Request",

@@ -1,48 +1,55 @@
-"""Slot-based continuous-batching engine for the distilled server LM.
+"""Serving engines for the distilled server LM: a prefill/decode worker pair
+composed either colocated (the classic :class:`ServeEngine`) or
+disaggregated behind an explicit KV handoff.
 
-The engine owns a device-resident batched decode state: every request lives
-in one of ``max_slots`` slots of the KV-cache / SSM-state pytree, with its
-OWN position counter — :func:`repro.models.attention.attn_decode` accepts a
-per-row position vector, so slots at different depths decode in one step.
+The monolithic slot engine of earlier revisions is now TWO jitted programs
+owned by two workers:
 
-Two KV layouts (``EngineConfig.kv_layout``):
-
-  * **paged** (default) — attention caches are a shared page pool
-    (:class:`repro.serve.kv_pool.KVPool`): admission allocates the pages the
-    bucketed prefill fills and splices each row's cache into them, decode
-    appends a page when a slot's position crosses a page boundary (checked
-    once per chunk, before the dispatch — the device program never touches
-    the free list), and eviction returns the slot's pages. Decode attention
-    takes the page-table view through the flash-decode kernel dispatch
-    (``ModelConfig.decode_backend``). HBM scales with allocated pages.
-  * **dense** — the per-slot ``(slots, cache_len, ...)`` rectangle attending
-    via the small SDPA path; kept as the parity baseline and for archs with
-    no attention layers at all (pure SSM), where paged silently degrades to
-    dense because there is nothing to page.
-
-The two jitted programs:
-
-  * **admit** — prefill an admission burst of prompts (padded up to a
-    ``prefill_bucket`` multiple so ragged lengths share compilations; the
-    pad tail is never attended because decode overwrites position ``p``
-    before reading it) in one dispatch per (bucket, power-of-two group),
-    splice each row's state into its slot (or its slot's pages), and sample
-    each first token from that row's true-last-prompt-position logits.
-  * **decode chunk** — a ``lax.while_loop`` of up to ``decode_chunk`` steps:
-    batched one-token decode over ALL slots, on-device greedy/temperature
-    sampling, per-slot output accumulation and finish bookkeeping. Zero
-    per-token host syncs — the host reads back only the tiny
-    ``(active, n_out)`` vectors once per chunk (``sync``), and a finished
+  * :class:`PrefillWorker` — **compute-bound admission**: prefills a bucketed
+    burst of prompts in one dispatch (padded up to a ``prefill_bucket``
+    multiple so ragged lengths share compilations; the pad tail is never
+    attended because decode overwrites position ``p`` before reading it),
+    samples each row's first token from its true-last-prompt-position logits,
+    and SEALS the result into a :class:`KVHandoff`: attention KV re-viewed as
+    page units ``(G, N, n_alloc, page, KH, hd)`` plus the dense rows of any
+    recurrent mixer state. A staging :class:`~repro.serve.kv_pool.KVPool`
+    accounts the in-flight handoff pages (backpressure: a prefill worker
+    cannot run unboundedly ahead of decode capacity); the sealed buffers
+    themselves travel with the handoff.
+  * :class:`DecodeWorker` — **bandwidth-bound decode**: owns the device-
+    resident per-slot :class:`DecodeState` (each request lives in one of
+    ``max_slots`` slots with its OWN position counter), ``adopt``s handoffs
+    (pool ids allocated in ITS pool, sealed pages scattered into ITS buffers
+    — pure data movement, no model forward), and runs ``lax.while_loop``
+    decode chunks with on-device sampling. The host reads back only the tiny
+    ``(active, n_out)`` vectors once per chunk (``sync``) and a finished
     request's token row once at eviction (``fetch``).
 
+Because adoption is data movement, a request prefilled by one worker can
+land on a DIFFERENT worker's pool than it decodes from — that is the
+disaggregation seam (``EngineConfig.disagg``; paged-only, since the dense
+per-slot rectangle has no page units to hand off). The classic
+:class:`ServeEngine` survives as a thin colocated composition of the two
+workers sharing one stats dict — the parity oracle and the default on one
+device. Both compositions run the SAME two programs, so fleet==engine greedy
+token parity is structural, not coincidental.
+
+Two KV layouts (``EngineConfig.kv_layout``): **paged** (default) — a shared
+page pool; admission allocates the pages the bucketed prefill fills, decode
+appends a page when a slot's position crosses a page boundary (checked once
+per chunk, host-side), eviction returns the slot's pages, and decode
+attention takes the page-table view through the flash-decode dispatch.
+**dense** — the per-slot ``(slots, cache_len, ...)`` rectangle attending via
+the small SDPA path; the parity baseline, and what pure-SSM archs (nothing
+to page) silently degrade to.
+
 Inactive slots ride along in the batched decode (their position is frozen,
-so they idempotently rewrite one cache location) — that is the cost of a
-fixed batch shape, and exactly what admission refills. The dense layout
-absorbs those writes in the slot's own row; the paged layout re-aims every
+so they idempotently rewrite one cache location). The dense layout absorbs
+those writes in the slot's own row; the paged layout re-aims every
 idle/evicted slot's page-table row at the pool's never-allocated SCRATCH
 page before the next chunk, because its old pages may already belong to
-another slot (a stale row was a real cross-slot clobber, caught by the
-serve smoke and pinned by ``test_engine_paged_idle_slots_cannot_clobber``).
+another slot (a stale row was a real cross-slot clobber, pinned by
+``test_engine_paged_idle_slots_cannot_clobber``).
 
 ``stats`` counts dispatches and host syncs; tests pin host syncs = O(1) per
 decode chunk, independent of chunk length and token count.
@@ -55,9 +62,12 @@ from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.models import group_pattern, init_lm_state, lm_decode, lm_prefill
 from repro.serve.kv_pool import KVPool
+from repro.sharding import infer_param_specs, shard_engine_state
 
 KV_LAYOUTS = ("paged", "dense")
 
@@ -90,6 +100,7 @@ class EngineConfig:
     kv_layout: str = "paged"  # paged (KVPool + flash-decode) | dense (SDPA)
     page_size: int = 16  # tokens per KV page (power of two)
     pool_pages: int = 0  # pool capacity; 0 => max_slots × full per-slot width
+    disagg: bool = False  # prefill and decode as separate fleet workers
 
     def __post_init__(self):
         for field in ("max_slots", "max_seq", "max_new", "decode_chunk", "prefill_bucket"):
@@ -100,6 +111,13 @@ class EngineConfig:
                 f"EngineConfig.kv_layout must be one of {KV_LAYOUTS}, got {self.kv_layout!r}"
             )
         if self.kv_layout != "paged":
+            if self.disagg:
+                raise ValueError(
+                    'disagg=True requires kv_layout="paged": the prefill->decode '
+                    "handoff moves sealed KV PAGES between worker pools, and the "
+                    "dense per-slot rectangle has no page units to hand off. Drop "
+                    "--disagg or use --kv-layout paged."
+                )
             return
         if self.page_size < 1 or (self.page_size & (self.page_size - 1)):
             raise ValueError(
@@ -137,26 +155,184 @@ class DecodeState(NamedTuple):
     page_table: jax.Array  # (S, W) int32 — per-slot page ids ((S, 1) dummy when dense)
 
 
-class ServeEngine:
-    """Device side of the serving stack; :class:`repro.serve.scheduler.
-    ContinuousScheduler` drives it from the request queue."""
+class KVHandoff(NamedTuple):
+    """One sealed prefill burst in flight between a prefill worker and a
+    decode worker. ``sealed`` carries the page-unit attention KV (and dense
+    rows for recurrent mixers); ids are pool-local and never travel — the
+    adopting pool assigns its own."""
 
-    def __init__(self, cfg, params, ecfg: EngineConfig):
-        if cfg.is_encoder_only:
-            raise ValueError(f"{cfg.name} is encoder-only: nothing to decode")
-        if cfg.frontend == "vision":
-            raise ValueError(
-                f"{cfg.name} needs per-request vision prefix embeddings, which "
-                "the slot engine does not thread through admission yet; serve "
-                "vlm archs with the static batch path"
-            )
+    sealed: Any  # device pytree; attn leaves (G, N, n_alloc, page, KH, hd)
+    first_tok: jax.Array  # (N,) int32 — first sampled token per row
+    true_lens: np.ndarray  # (N,) host — true prompt lengths
+    budgets: np.ndarray  # (N,) host — generation budgets
+    n_alloc: int  # sealed pages per row (0 for the dense layout)
+    staging_id: int  # staging-pool reservation on the source (-1 when none)
+    source: Any  # the PrefillWorker that sealed this burst
+
+    @property
+    def n(self) -> int:
+        return len(self.true_lens)
+
+
+def bucket_len(cfg, ecfg: EngineConfig, prompt_len: int) -> int:
+    """The padded prefill length a prompt compiles under."""
+    if cfg.family in ("ssm", "hybrid"):
+        # a recurrent carry (mamba/xlstm state) absorbs pad tokens — the
+        # prefill must stop exactly at the prompt end, so recurrent archs
+        # compile one prefill per distinct prompt length instead of per
+        # bucket. Attention caches are position-addressed: the pad tail
+        # is overwritten before it is ever attended, so bucketing is safe.
+        return prompt_len
+    b = ecfg.prefill_bucket
+    lb = min(-(-prompt_len // b) * b, ecfg.max_seq)
+    if cfg.sliding_window > 0:
+        # the SWA cache is a ring of min(window, max_seq) slots holding
+        # the LAST cache-len prefill positions; padding past the ring
+        # length would evict real prompt tokens in favor of pad garbage.
+        cl = min(cfg.sliding_window, ecfg.max_seq)
+        lb = prompt_len if prompt_len > cl else min(lb, cl)
+    return lb
+
+
+def _engine_layout(cfg, ecfg: EngineConfig) -> str:
+    has_attn = any(mixer == "attn" for mixer, _ in group_pattern(cfg))
+    # pure-SSM archs have no KV to page: degrade to the dense state layout
+    return ecfg.kv_layout if has_attn else "dense"
+
+
+def _fresh_stats() -> Dict[str, int]:
+    return {
+        "admitted": 0,
+        "prefill_dispatches": 0,
+        "handoffs": 0,
+        "decode_chunks": 0,
+        "host_syncs": 0,
+        "evicted": 0,
+        "page_appends": 0,
+        "table_resets": 0,
+    }
+
+
+def _shard_params(params, mesh):
+    """Place a per-replica copy of the params on ``mesh`` (tensor-parallel
+    along the rules of sharding/partition.py)."""
+    specs = infer_param_specs(params, mesh_axes=dict(mesh.shape))
+    shardings = jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), specs, is_leaf=lambda x: isinstance(x, P)
+    )
+    return jax.device_put(params, shardings)
+
+
+class PrefillWorker:
+    """Compute-bound half of the serving pair: bucketed prefill admission
+    sealed into :class:`KVHandoff`s. Owns its own jitted program, rng chain
+    and (paged layout) a staging pool bounding in-flight handoff pages."""
+
+    def __init__(self, cfg, params, ecfg: EngineConfig, *, mesh=None,
+                 stats: Optional[Dict[str, int]] = None):
         self.cfg = cfg
-        self.params = params
         self.ecfg = ecfg
-        has_attn = any(mixer == "attn" for mixer, _ in group_pattern(cfg))
-        # pure-SSM archs have no KV to page: degrade to the dense state layout
-        self.layout = ecfg.kv_layout if has_attn else "dense"
+        self.mesh = mesh
+        self.params = _shard_params(params, mesh) if mesh is not None else params
+        self.layout = _engine_layout(cfg, ecfg)
+        self.staging: Optional[KVPool] = KVPool(cfg, ecfg) if self.layout == "paged" else None
+        self.stats = stats if stats is not None else _fresh_stats()
+        self._hid = 0  # staging reservation ids (handoff "slots")
+        self._prefill_jit = jax.jit(self._prefill_fn)
+        self.reset()
+
+    def reset(self) -> None:
+        self._rng = jax.random.key(self.ecfg.seed + 1)  # decode chain owns seed
+        self._hid = 0
+        if self.staging is not None:
+            self.staging.reset()
+
+    def bucket_len(self, prompt_len: int) -> int:
+        return bucket_len(self.cfg, self.ecfg, prompt_len)
+
+    def _prefill_fn(self, params, rng, tokens, true_lens):
+        """ONE dispatch per (bucket, burst-size) combination: prefill N
+        prompts, sample first tokens, seal attention KV into page units.
+        N and the bucket length are compile-time constants per call."""
+        cfg, e = self.cfg, self.ecfg
+        n = tokens.shape[0]
+        rng, key = jax.random.split(rng)
+        st1 = init_lm_state(cfg, n, e.max_seq)
+        logits, st1 = lm_prefill(params, cfg, {"tokens": tokens}, st1, last_index=true_lens - 1)
+        toks0 = sample_tokens(logits[:, 0], key, e.temperature)  # (N,)
+        if self.layout != "paged":
+            return rng, st1, toks0
+        ps = self.staging.page_size
+        n_alloc = self.staging.required_pages(tokens.shape[1])
+        sealed: Dict[str, Any] = {}
+        for i, (mixer, _) in enumerate(group_pattern(cfg)):
+            key_i = f"p{i}"
+            if mixer != "attn":
+                sealed[key_i] = st1[key_i]  # recurrent carry: dense rows
+                continue
+            sub = {}
+            for pages_name, dense_name in (("k_pages", "k"), ("v_pages", "v")):
+                one = st1[key_i][dense_name]  # (G, N, cl, KH, hd)
+                g_, _, cl_, kh_, hd_ = one.shape
+                pad = (-cl_) % ps
+                if pad:
+                    one = jnp.pad(one, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+                # re-view the bucketed prefill as page units and keep only the
+                # pages it actually filled — the sealed shape the adopting
+                # pool scatters verbatim
+                sub[pages_name] = one.reshape(g_, n, -1, ps, kh_, hd_)[:, :, :n_alloc]
+            sealed[key_i] = sub
+        return rng, sealed, toks0
+
+    def prefill_group(self, group) -> KVHandoff:
+        """Prefill one same-bucket group of ``(tokens, budget)`` pairs in a
+        single dispatch and seal it for handoff. The caller (admit_many or a
+        router) is responsible for power-of-two group sizing so the compiled
+        program set stays O(log max_slots) per bucket."""
+        n = len(group)
+        lb = self.bucket_len(max(len(t) for t, _ in group))
+        padded = np.zeros((n, lb), np.int32)
+        lens = np.zeros((n,), np.int32)
+        buds = np.zeros((n,), np.int32)
+        for j, (tokens, budget) in enumerate(group):
+            padded[j, : len(tokens)] = tokens
+            lens[j], buds[j] = len(tokens), budget
+        staging_id, n_alloc = -1, 0
+        if self.staging is not None:
+            # backpressure: the staging pool caps how many sealed-but-not-
+            # adopted pages can be in flight; adopt() donates them back
+            n_alloc = self.staging.required_pages(lb)
+            staging_id, self._hid = self._hid, self._hid + 1
+            self.staging.alloc(staging_id, n * n_alloc)
+        self._rng, sealed, toks0 = self._prefill_jit(
+            self.params, self._rng, jnp.asarray(padded), jnp.asarray(lens)
+        )
+        self.stats["prefill_dispatches"] += 1
+        return KVHandoff(
+            sealed=sealed, first_tok=toks0, true_lens=lens, budgets=buds,
+            n_alloc=n_alloc, staging_id=staging_id, source=self,
+        )
+
+    def release(self, handoff: KVHandoff) -> None:
+        """Donate a handoff's staging reservation back (the adopting worker
+        has issued its copy of the sealed pages)."""
+        if self.staging is not None and handoff.staging_id >= 0:
+            self.staging.donate(handoff.staging_id)
+
+
+class DecodeWorker:
+    """Bandwidth-bound half of the serving pair: owns the slots, the KV pool
+    and the chunked decode program; ingests sealed prefills via ``adopt``."""
+
+    def __init__(self, cfg, params, ecfg: EngineConfig, *, mesh=None,
+                 stats: Optional[Dict[str, int]] = None):
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.mesh = mesh
+        self.params = _shard_params(params, mesh) if mesh is not None else params
+        self.layout = _engine_layout(cfg, ecfg)
         self.pool: Optional[KVPool] = KVPool(cfg, ecfg) if self.layout == "paged" else None
+        self.stats = stats if stats is not None else _fresh_stats()
         self.free_slots: List[int] = list(range(ecfg.max_slots))
         self._state: Optional[DecodeState] = None
         # host-side per-slot metadata for page planning: (true_len, budget)
@@ -165,11 +341,9 @@ class ServeEngine:
         self._pos_est: Dict[int, int] = {}
         # evicted slots whose table rows still point at returned pages; their
         # ride-along writes must be re-aimed at the scratch page before the
-        # next chunk (unless admission rewrites the row first)
+        # next chunk (unless adoption rewrites the row first)
+        self._adopt_jit = jax.jit(self._adopt_fn)
         self._stale_slots: set = set()
-        # jit caches per abstract (N, bucket) tokens shape — one wrapper serves
-        # every admission-burst size/bucket combination
-        self._admit_jit = jax.jit(self._admit_fn)
         donate = () if jax.default_backend() == "cpu" else (1,)
         self._chunk_jit = jax.jit(self._chunk_fn, donate_argnums=donate)
         self.reset()
@@ -191,59 +365,34 @@ class ServeEngine:
             )
         return kv
 
-    def _splice_paged(self, kv, st1, slots, page_ids, n: int):
-        """Mixed splice for the paged layout: attention caches scatter into
-        the slot's allocated pages (the dense prefill rows are re-viewed as
-        pages); recurrent mixer states stay per-slot dense. page_ids:
-        (N, n_alloc) int32 — n_alloc is static per compiled admission (all
-        rows of a burst share a bucket, hence a page count)."""
-        ps = self.pool.page_size
-        n_alloc = page_ids.shape[1]
-        kv = dict(kv)
-        for i, (mixer, _) in enumerate(group_pattern(self.cfg)):
-            key = f"p{i}"
-            if mixer != "attn":
-                kv[key] = self._splice_dense(kv[key], st1[key], slots, n)
-                continue
-            sub = dict(kv[key])
-            for pages_name, dense_name in (("k_pages", "k"), ("v_pages", "v")):
-                big = sub[pages_name]  # (G, P, ps, KH, hd)
-                one = st1[key][dense_name]  # (G, N, cl, KH, hd)
-                g_, _, cl_, kh_, hd_ = one.shape
-                pad = (-cl_) % ps
-                if pad:
-                    one = jnp.pad(one, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
-                one = one.reshape(g_, n, -1, ps, kh_, hd_)  # (G, N, W, ps, KH, hd)
-                # ONE scatter for the whole burst: page ids are disjoint
-                # across rows (allocator invariant), so the (N, n_alloc)
-                # index array never collides
-                sub[pages_name] = big.at[:, page_ids].set(
-                    one[:, :, :n_alloc].astype(big.dtype)
-                )
-            kv[key] = sub
-        return kv
-
-    def _admit_fn(self, params, ds: DecodeState, tokens, slots, true_lens, budgets,
+    def _adopt_fn(self, ds: DecodeState, sealed, toks0, slots, true_lens, budgets,
                   table_rows, page_ids):
-        """Batched admission: prefill N prompts (N is a compile-time constant
-        per call — the scheduler's admission burst) in ONE dispatch and
-        splice each row into its slot. tokens: (N, Lb); slots/true_lens/
-        budgets: (N,) int32; table_rows: (N, W) full page-table rows and
-        page_ids: (N, n_alloc) the allocated prefix (both ignored when
-        dense). The sampling key comes from the state's own rng chain — no
-        host-side key dispatch per admission."""
-        cfg, e = self.cfg, self.ecfg
-        n = tokens.shape[0]
-        rng, key = jax.random.split(ds.rng)
-        st1 = init_lm_state(cfg, n, e.max_seq)
-        logits, st1 = lm_prefill(params, cfg, {"tokens": tokens}, st1, last_index=true_lens - 1)
+        """Ingest one sealed burst: PURE data movement (no model forward).
+        Paged: sealed page units scatter into this worker's pool buffers at
+        the ids its pool assigned (one scatter per leaf for the whole burst —
+        page ids are disjoint across rows by the allocator invariant, so the
+        (N, n_alloc) index array never collides); recurrent mixer states stay
+        per-slot dense. Dense: per-row dynamic-update splice. Either way the
+        slot bookkeeping vectors are rewritten for the adopted rows."""
+        n = toks0.shape[0]
         if self.layout == "paged":
-            kv = self._splice_paged(ds.kv, st1, slots, page_ids, n)
+            kv = dict(ds.kv)
+            for i, (mixer, _) in enumerate(group_pattern(self.cfg)):
+                key = f"p{i}"
+                if mixer != "attn":
+                    kv[key] = self._splice_dense(kv[key], sealed[key], slots, n)
+                    continue
+                sub = dict(kv[key])
+                for pages_name in ("k_pages", "v_pages"):
+                    big = sub[pages_name]  # (G, P, ps, KH, hd)
+                    sub[pages_name] = big.at[:, page_ids].set(
+                        sealed[key][pages_name].astype(big.dtype)
+                    )
+                kv[key] = sub
             page_table = ds.page_table.at[slots].set(table_rows)
         else:
-            kv = self._splice_dense(ds.kv, st1, slots, n)
+            kv = self._splice_dense(ds.kv, sealed, slots, n)
             page_table = ds.page_table
-        toks0 = sample_tokens(logits[:, 0], key, e.temperature)  # (N,)
         return DecodeState(
             kv=kv,
             last_tok=ds.last_tok.at[slots, 0].set(toks0),
@@ -252,7 +401,7 @@ class ServeEngine:
             out=ds.out.at[slots].set(0).at[slots, 0].set(toks0),
             n_out=ds.n_out.at[slots].set(1),
             budget=ds.budget.at[slots].set(budgets),
-            rng=rng,
+            rng=ds.rng,
             page_table=page_table,
         )
 
@@ -298,22 +447,14 @@ class ServeEngine:
     # -- host API -----------------------------------------------------------
 
     def reset(self) -> None:
-        """(Re)build the device state: all slots free, caches zeroed, stats
-        zeroed (so a warm-up run never contaminates timed counters)."""
+        """(Re)build the device state: all slots free, caches zeroed. Stats
+        are NOT zeroed here — the shared dict belongs to the composition
+        (ServeEngine.reset) or to the caller of a bare worker."""
         cfg, e = self.cfg, self.ecfg
         self.free_slots = list(range(e.max_slots))
         self._meta = {}
         self._pos_est = {}
         self._stale_slots = set()
-        self.stats: Dict[str, int] = {
-            "admitted": 0,
-            "prefill_dispatches": 0,
-            "decode_chunks": 0,
-            "host_syncs": 0,
-            "evicted": 0,
-            "page_appends": 0,
-            "table_resets": 0,
-        }
         if self.pool is not None:
             self.pool.reset()
             # +1: the scratch page — the write target of idle slots' frozen
@@ -328,7 +469,7 @@ class ServeEngine:
             kv = init_lm_state(cfg, e.max_slots, e.max_seq)
             width = 1
             table0 = jnp.zeros((e.max_slots, width), jnp.int32)
-        self._state = DecodeState(
+        state = DecodeState(
             kv=kv,
             last_tok=jnp.zeros((e.max_slots, 1), jnp.int32),
             pos=jnp.zeros((e.max_slots,), jnp.int32),
@@ -339,34 +480,44 @@ class ServeEngine:
             rng=jax.random.key(e.seed),
             page_table=table0,
         )
-
-    def bucket_len(self, prompt_len: int) -> int:
-        if self.cfg.family in ("ssm", "hybrid"):
-            # a recurrent carry (mamba/xlstm state) absorbs pad tokens — the
-            # prefill must stop exactly at the prompt end, so recurrent archs
-            # compile one prefill per distinct prompt length instead of per
-            # bucket. Attention caches are position-addressed: the pad tail
-            # is overwritten before it is ever attended, so bucketing is safe.
-            return prompt_len
-        b = self.ecfg.prefill_bucket
-        lb = min(-(-prompt_len // b) * b, self.ecfg.max_seq)
-        if self.cfg.sliding_window > 0:
-            # the SWA cache is a ring of min(window, max_seq) slots holding
-            # the LAST cache-len prefill positions; padding past the ring
-            # length would evict real prompt tokens in favor of pad garbage.
-            cl = min(self.cfg.sliding_window, self.ecfg.max_seq)
-            lb = prompt_len if prompt_len > cl else min(lb, cl)
-        return lb
-
-    def admit(self, tokens: np.ndarray, max_new_tokens: int) -> int:
-        """Prefill one prompt (1-D int32) into a free slot; returns its id."""
-        return self.admit_many([(tokens, max_new_tokens)])[0]
+        if self.mesh is not None:
+            # shard the engine state over this worker's mesh slice (page
+            # pools and caches along the heads axis; bookkeeping replicated)
+            specs = shard_engine_state(state, mesh_axes=dict(self.mesh.shape))
+            shardings = jax.tree_util.tree_map(
+                lambda spec: NamedSharding(self.mesh, spec), specs,
+                is_leaf=lambda x: isinstance(x, P),
+            )
+            state = jax.device_put(state, shardings)
+        self._state = state
 
     def _lifetime_pages(self, prompt_len: int, budget: int) -> int:
         """A request's TOTAL page bill over its life: the bucketed prefill
         plus every decode position its budget can reach (ring-clamped)."""
-        lb = self.bucket_len(prompt_len)
+        lb = bucket_len(self.cfg, self.ecfg, prompt_len)
         return self.pool.required_pages(max(lb, prompt_len + budget))
+
+    def request_load(self, prompt_len: int, budget: int) -> int:
+        """The admission-load unit a router bills for one request: lifetime
+        pages in the paged layout, one slot otherwise."""
+        if self.pool is None:
+            return 1
+        return self._lifetime_pages(prompt_len, budget)
+
+    def billed_pages(self) -> int:
+        """Resident load: lifetime page bill of every resident request
+        (paged) or the resident count (dense)."""
+        if self.pool is None:
+            return self.ecfg.max_slots - len(self.free_slots)
+        return sum(self._lifetime_pages(tl, b) for tl, b in self._meta.values())
+
+    def can_ever_admit(self, prompt_len: int, budget: int) -> bool:
+        """Whether an EMPTY instance of this worker could admit the request
+        (its lifetime bill fits the whole pool). A router uses this to fail
+        fast on requests no amount of draining can make admissible."""
+        if self.pool is None:
+            return True
+        return self._lifetime_pages(prompt_len, budget) <= self.pool.n_pages
 
     def max_admissible(self, requests) -> int:
         """Largest prefix of ``requests`` ((tokens, budget) pairs) admissible
@@ -379,8 +530,7 @@ class ServeEngine:
         n = min(len(requests), len(self.free_slots))
         if self.pool is None:
             return n
-        reserved = sum(self._lifetime_pages(tl, b) for tl, b in self._meta.values())
-        free = self.pool.n_pages - reserved
+        free = self.pool.n_pages - self.billed_pages()
         count = 0
         for tokens, budget in list(requests)[:n]:
             tokens = np.asarray(tokens, np.int32).reshape(-1)
@@ -391,108 +541,61 @@ class ServeEngine:
             count += 1
         return count
 
-    def admit_many(self, requests) -> List[int]:
-        """Admit several prompts; returns their slots, input-aligned.
-
-        Prompts sharing a bucket length prefill together: each group is
-        split into power-of-two admission batches (4+2+1…) so the set of
-        compiled (bucket, N) programs stays O(log max_slots) per bucket
-        instead of one per burst size — a freed-slot refill after warm-up
-        never hits the compiler. In the paged layout each row also gets the
-        pages its bucketed prefill will fill (a per-group constant, so page
-        allocation adds no compilation keys)."""
-        e = self.ecfg
-        prepped = []
-        for tokens, max_new_tokens in requests:
-            tokens = np.asarray(tokens, np.int32).reshape(-1)
-            if len(tokens) + max_new_tokens > e.max_seq:
-                raise ValueError(
-                    f"prompt ({len(tokens)}) + budget ({max_new_tokens}) exceeds max_seq={e.max_seq}"
-                )
-            if not 1 <= max_new_tokens <= e.max_new:
-                raise ValueError(
-                    f"max_new_tokens must be in [1, {e.max_new}], got {max_new_tokens}"
-                )
-            prepped.append((tokens, max_new_tokens))
-        if len(prepped) > len(self.free_slots):
+    def adopt(self, handoff: KVHandoff) -> List[int]:
+        """Land one sealed burst on this worker's slots/pool. Atomic w.r.t.
+        pool exhaustion: the whole burst's page bill is checked before a slot
+        is popped or a page adopted, so a caller that catches the error has a
+        clean worker and an intact handoff to retry elsewhere."""
+        n = handoff.n
+        if n > len(self.free_slots):
             raise RuntimeError(
-                f"{len(prepped)} admissions but only {len(self.free_slots)} free slots"
+                f"{n} adoptions but only {len(self.free_slots)} free slots"
             )
         if self.pool is not None:
-            # admission is ATOMIC w.r.t. pool exhaustion: check the whole
-            # burst's page bill before popping a slot or allocating a page,
-            # so a caller that catches the error has a clean engine (no
-            # half-admitted rows, no leaked slots/pages) and can retry with
-            # a smaller burst
-            need = sum(
-                self.pool.required_pages(self.bucket_len(len(tokens)))
-                for tokens, _ in prepped
-            )
-            if need > self.pool.free_pages:
+            if handoff.n_alloc == 0:
+                raise ValueError(
+                    "dense handoff offered to a paged decode worker: the "
+                    "prefill and decode halves of a pair must share kv_layout"
+                )
+            if n * handoff.n_alloc > self.pool.free_pages:
                 raise RuntimeError(
-                    f"KV pool cannot admit this burst: its bucketed prefills need "
-                    f"{need} pages but only {self.pool.free_pages}/{self.pool.n_pages} "
-                    f"are free (page_size={self.pool.page_size}). Admit fewer "
-                    "requests, raise --pool-pages, or lower --max-slots."
+                    f"KV pool cannot adopt this burst: its sealed prefills need "
+                    f"{n * handoff.n_alloc} pages but only {self.pool.free_pages}/"
+                    f"{self.pool.n_pages} are free (page_size={self.pool.page_size}). "
+                    "Adopt fewer requests, raise --pool-pages, or lower --max-slots."
                 )
-        by_bucket: Dict[int, List[int]] = {}
-        for i, (tokens, _) in enumerate(prepped):
-            by_bucket.setdefault(self.bucket_len(len(tokens)), []).append(i)
-        slots = [0] * len(prepped)
-        for lb, idxs in by_bucket.items():
-            while idxs:
-                n = 1 << (len(idxs).bit_length() - 1)  # largest pow2 <= len
-                group, idxs = idxs[:n], idxs[n:]
-                padded = np.zeros((n, lb), np.int32)
-                lens = np.zeros((n,), np.int32)
-                buds = np.zeros((n,), np.int32)
-                gslots = [self.free_slots.pop() for _ in group]
-                width = self.pool.pages_per_slot if self.pool is not None else 1
-                n_alloc = self.pool.required_pages(lb) if self.pool is not None else 1
-                table_rows = np.zeros((n, width), np.int32)
-                page_ids = np.zeros((n, n_alloc), np.int32)
-                for j, i in enumerate(group):
-                    tokens, budget = prepped[i]
-                    padded[j, : len(tokens)] = tokens
-                    lens[j], buds[j] = len(tokens), budget
-                    slots[i] = gslots[j]
-                    if self.pool is not None:
-                        page_ids[j] = self.pool.alloc(gslots[j], n_alloc)
-                        table_rows[j] = self.pool.table_row(gslots[j])
-                        self._meta[gslots[j]] = (len(tokens), budget)
-                        self._pos_est[gslots[j]] = len(tokens)
-                        self._stale_slots.discard(gslots[j])  # row fully rewritten
-                self._state = self._admit_jit(
-                    self.params,
-                    self._state,
-                    jnp.asarray(padded),
-                    jnp.asarray(gslots, jnp.int32),
-                    jnp.asarray(lens),
-                    jnp.asarray(buds),
-                    jnp.asarray(table_rows),
-                    jnp.asarray(page_ids),
-                )
-                self.stats["admitted"] += n
-                self.stats["prefill_dispatches"] += 1
-        return slots
-
-    def warmup(self, prompt: np.ndarray, budget: int = 2) -> None:
-        """Compile every admission program a serving run can hit — one per
-        power-of-two burst size up to ``max_slots`` for ``prompt``'s bucket —
-        plus the decode-chunk program, then reset. Without this, the first
-        burst of a previously-unseen size pays XLA compilation mid-serving."""
-        budget = min(budget, self.ecfg.max_new)
-        n = 1
-        while n <= self.ecfg.max_slots:
-            self.reset()
-            reqs = [(prompt, budget)] * n
-            if self.max_admissible(reqs) < n:
-                break  # a tight pool caps the burst; larger sizes can't fit either
-            self.admit_many(reqs)
-            self.decode_chunk()
-            self.sync()
-            n *= 2
-        self.reset()
+        sealed, toks0 = handoff.sealed, handoff.first_tok
+        if self.mesh is not None and getattr(handoff.source, "mesh", None) is not self.mesh:
+            # cross-worker transport: the sealed buffers were produced on the
+            # prefill worker's mesh slice — replicate them onto ours (the
+            # ICI/DCN hop of a real disaggregated fleet)
+            rep = NamedSharding(self.mesh, P())
+            sealed, toks0 = jax.device_put((sealed, toks0), rep)
+        gslots = [self.free_slots.pop() for _ in range(n)]
+        width = self.pool.pages_per_slot if self.pool is not None else 1
+        table_rows = np.zeros((n, width), np.int32)
+        page_ids = np.zeros((n, max(handoff.n_alloc, 1)), np.int32)
+        for j, slot in enumerate(gslots):
+            if self.pool is not None:
+                page_ids[j] = self.pool.adopt(slot, handoff.n_alloc)
+                table_rows[j] = self.pool.table_row(slot)
+                self._meta[slot] = (int(handoff.true_lens[j]), int(handoff.budgets[j]))
+                self._pos_est[slot] = int(handoff.true_lens[j])
+                self._stale_slots.discard(slot)  # row fully rewritten
+        self._state = self._adopt_jit(
+            self._state,
+            sealed,
+            toks0,
+            jnp.asarray(gslots, jnp.int32),
+            jnp.asarray(handoff.true_lens),
+            jnp.asarray(handoff.budgets),
+            jnp.asarray(table_rows),
+            jnp.asarray(page_ids),
+        )
+        handoff.source.release(handoff)
+        self.stats["admitted"] += n
+        self.stats["handoffs"] += 1
+        return gslots
 
     def _ensure_chunk_pages(self) -> None:
         """Grow resident slots' page tables to cover the positions the next
@@ -587,3 +690,177 @@ class ServeEngine:
             self._stale_slots.add(slot)
         self.stats["evicted"] += 1
         return toks
+
+
+class ServeEngine:
+    """One fleet replica: a :class:`PrefillWorker` and a
+    :class:`DecodeWorker` composed behind the classic engine API that
+    :class:`repro.serve.scheduler.FleetRouter` (and its N=1 case,
+    ``ContinuousScheduler``) drives from the request queue.
+
+    Colocated by default: both workers share the params and (if given) the
+    same mesh slice. With ``ecfg.disagg`` (or distinct ``prefill_mesh``/
+    ``mesh``) the pair is disaggregated — prefill seals pages on its slice,
+    adoption scatters them into the decode worker's pool, the classic
+    production split of compute-bound admission from bandwidth-bound decode.
+    Either way admission runs the SAME two programs, so the colocated engine
+    is the disaggregated pair's parity oracle by construction."""
+
+    def __init__(self, cfg, params, ecfg: EngineConfig, *, mesh=None, prefill_mesh=None):
+        if cfg.is_encoder_only:
+            raise ValueError(f"{cfg.name} is encoder-only: nothing to decode")
+        if cfg.frontend == "vision":
+            raise ValueError(
+                f"{cfg.name} needs per-request vision prefix embeddings, which "
+                "the slot engine does not thread through admission yet; serve "
+                "vlm archs with the static batch path"
+            )
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self.layout = _engine_layout(cfg, ecfg)
+        if ecfg.disagg and self.layout != "paged":
+            raise ValueError(
+                f"{cfg.name} has no attention layers: its serving state degrades "
+                "to the dense layout, which has no page units to hand off — a "
+                "disaggregated prefill/decode pair is paged-only. Drop --disagg."
+            )
+        self.stats: Dict[str, int] = _fresh_stats()
+        self.prefill = PrefillWorker(
+            cfg, params, ecfg, mesh=prefill_mesh if prefill_mesh is not None else mesh,
+            stats=self.stats,
+        )
+        self.decode = DecodeWorker(cfg, params, ecfg, mesh=mesh, stats=self.stats)
+
+    # -- delegation (the device state lives on the workers) -----------------
+
+    @property
+    def pool(self) -> Optional[KVPool]:
+        return self.decode.pool
+
+    @property
+    def free_slots(self) -> List[int]:
+        return self.decode.free_slots
+
+    @property
+    def _state(self) -> Optional[DecodeState]:
+        return self.decode._state
+
+    @property
+    def _meta(self) -> Dict[int, Tuple[int, int]]:
+        return self.decode._meta
+
+    @property
+    def _stale_slots(self) -> set:
+        return self.decode._stale_slots
+
+    def reset(self) -> None:
+        """(Re)build both workers' device state and zero the shared stats
+        (so a warm-up run never contaminates timed counters)."""
+        for k in list(self.stats):
+            self.stats[k] = 0
+        self.prefill.reset()
+        self.decode.reset()
+
+    def bucket_len(self, prompt_len: int) -> int:
+        return bucket_len(self.cfg, self.ecfg, prompt_len)
+
+    def request_load(self, prompt_len: int, budget: int) -> int:
+        return self.decode.request_load(prompt_len, budget)
+
+    def billed_pages(self) -> int:
+        return self.decode.billed_pages()
+
+    def can_ever_admit(self, prompt_len: int, budget: int) -> bool:
+        return self.decode.can_ever_admit(prompt_len, budget)
+
+    def max_admissible(self, requests) -> int:
+        return self.decode.max_admissible(requests)
+
+    def admit(self, tokens: np.ndarray, max_new_tokens: int) -> int:
+        """Prefill one prompt (1-D int32) into a free slot; returns its id."""
+        return self.admit_many([(tokens, max_new_tokens)])[0]
+
+    def admit_many(self, requests) -> List[int]:
+        """Admit several prompts; returns their slots, input-aligned.
+
+        Prompts sharing a bucket length prefill together: each group is
+        split into power-of-two admission batches (4+2+1…) so the set of
+        compiled (bucket, N) programs stays O(log max_slots) per bucket
+        instead of one per burst size — a freed-slot refill after warm-up
+        never hits the compiler. Each group is ONE prefill dispatch sealed
+        into a KVHandoff and ONE adoption scatter on the decode worker."""
+        e = self.ecfg
+        prepped = []
+        for tokens, max_new_tokens in requests:
+            tokens = np.asarray(tokens, np.int32).reshape(-1)
+            if len(tokens) + max_new_tokens > e.max_seq:
+                raise ValueError(
+                    f"prompt ({len(tokens)}) + budget ({max_new_tokens}) exceeds max_seq={e.max_seq}"
+                )
+            if not 1 <= max_new_tokens <= e.max_new:
+                raise ValueError(
+                    f"max_new_tokens must be in [1, {e.max_new}], got {max_new_tokens}"
+                )
+            prepped.append((tokens, max_new_tokens))
+        if len(prepped) > len(self.free_slots):
+            raise RuntimeError(
+                f"{len(prepped)} admissions but only {len(self.free_slots)} free slots"
+            )
+        if self.pool is not None:
+            # admission is ATOMIC w.r.t. pool exhaustion: check the whole
+            # burst's page bill before prefilling, popping a slot or adopting
+            # a page, so a caller that catches the error has a clean engine
+            # (no half-admitted rows, no leaked slots/pages) and can retry
+            # with a smaller burst
+            need = sum(
+                self.pool.required_pages(self.bucket_len(len(tokens)))
+                for tokens, _ in prepped
+            )
+            if need > self.pool.free_pages:
+                raise RuntimeError(
+                    f"KV pool cannot admit this burst: its bucketed prefills need "
+                    f"{need} pages but only {self.pool.free_pages}/{self.pool.n_pages} "
+                    f"are free (page_size={self.pool.page_size}). Admit fewer "
+                    "requests, raise --pool-pages, or lower --max-slots."
+                )
+        by_bucket: Dict[int, List[int]] = {}
+        for i, (tokens, _) in enumerate(prepped):
+            by_bucket.setdefault(self.bucket_len(len(tokens)), []).append(i)
+        slots = [0] * len(prepped)
+        for lb, idxs in by_bucket.items():
+            while idxs:
+                n = 1 << (len(idxs).bit_length() - 1)  # largest pow2 <= len
+                group, idxs = idxs[:n], idxs[n:]
+                handoff = self.prefill.prefill_group([prepped[i] for i in group])
+                gslots = self.decode.adopt(handoff)
+                for j, i in enumerate(group):
+                    slots[i] = gslots[j]
+        return slots
+
+    def warmup(self, prompt: np.ndarray, budget: int = 2) -> None:
+        """Compile every admission program a serving run can hit — one per
+        power-of-two burst size up to ``max_slots`` for ``prompt``'s bucket —
+        plus the decode-chunk program, then reset. Without this, the first
+        burst of a previously-unseen size pays XLA compilation mid-serving."""
+        budget = min(budget, self.ecfg.max_new)
+        n = 1
+        while n <= self.ecfg.max_slots:
+            self.reset()
+            reqs = [(prompt, budget)] * n
+            if self.max_admissible(reqs) < n:
+                break  # a tight pool caps the burst; larger sizes can't fit either
+            self.admit_many(reqs)
+            self.decode_chunk()
+            self.sync()
+            n *= 2
+        self.reset()
+
+    def decode_chunk(self) -> None:
+        self.decode.decode_chunk()
+
+    def sync(self):
+        return self.decode.sync()
+
+    def fetch(self, slot: int, n_out: int) -> np.ndarray:
+        return self.decode.fetch(slot, n_out)

@@ -120,6 +120,34 @@ class KVPool:
         self._free.extend(pages)
         return pages
 
+    # -- handoff protocol ----------------------------------------------------
+    #
+    # A disaggregated prefill->decode handoff moves SEALED pages between two
+    # pools that index two different device buffers: the sending side
+    # ``donate``s (its reservation is released once the receiver has copied
+    # the sealed contents out) and the receiving side ``adopt``s (fresh ids
+    # in ITS buffer for the incoming pages). The page *contents* travel with
+    # the handoff structure (repro.serve.engine.KVHandoff) — ids are local to
+    # a pool and never cross it.
+
+    def adopt(self, slot: int, n_pages: int) -> List[int]:
+        """Receiving half of a handoff: allocate ``n_pages`` fresh ids for a
+        slot that owns NOTHING yet (an adopted request starts from a clean
+        slot — adopting on top of live pages would orphan them)."""
+        if self._owned.get(slot):
+            raise RuntimeError(
+                f"slot {slot} still owns {len(self._owned[slot])} page(s); adopt "
+                "targets a clean slot — free_slot/donate it first"
+            )
+        return self.alloc(slot, n_pages)
+
+    def donate(self, slot: int) -> List[int]:
+        """Sending half of a handoff: relinquish ``slot``'s pages back to the
+        free list and return their ids. The caller must have materialized (or
+        issued the device copy of) the sealed page contents first — after
+        donation the ids may be reissued to the next staged prefill."""
+        return self.free_slot(slot)
+
     def table_row(self, slot: int) -> np.ndarray:
         """The slot's full-width page-table row, scratch-padded past its
         allocation (padding entries are a safe DMA/write target, never an

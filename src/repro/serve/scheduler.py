@@ -1,28 +1,47 @@
-"""Request scheduler for the continuous-batching engine.
+"""Request routing + scheduling for the serving fleet.
 
-The host-side loop around :class:`repro.serve.engine.ServeEngine`:
+The host-side loop is now a :class:`FleetRouter` over N engine replicas
+(each a :class:`repro.serve.engine.ServeEngine` — colocated or a
+disaggregated prefill/decode pair, possibly on its own mesh slice):
 
   * requests become visible at their ``arrival`` time (a ``Clock`` — real
     monotonic time when serving, a :class:`ManualClock` in tests/benchmarks
     that only advances when the loop sleeps, keeping admission order
-    deterministic);
-  * queued prompts are admitted into free slots in bursts (one batched
-    prefill dispatch per bucket/power-of-two group), interleaved with decode
-    chunks over everything resident;
-  * after each chunk ONE host sync reads the tiny per-slot status, finished
-    sequences are drained (token row copied out, slot freed — and in the
-    paged KV layout the slot's pages go back to the pool free list) and the
-    freed slots are immediately refillable.
+    deterministic) and are ROUTED to the least-loaded replica: load is the
+    billed lifetime page count of everything resident plus everything
+    queued there (slot counts in the dense layout), queue depth breaking
+    ties — the cheapest signal that tracks actual KV occupancy instead of
+    request counts, so one long-budget request doesn't look as light as
+    one 8-token probe;
+  * per replica, queued prompts are admitted into free slots in bursts (one
+    batched prefill dispatch per bucket/power-of-two group, sealed into a
+    KVHandoff and adopted by the replica's decode worker), interleaved with
+    decode chunks over everything resident;
+  * a queue head its replica cannot admit RIGHT NOW may **requeue-on-defer**
+    to an idle replica that can — load is estimated at arrival, but pages
+    drain at decode speed, so the estimate goes stale and a blocked head
+    must not wait out a long resident burst while another replica sits
+    empty;
+  * after each chunk ONE host sync per replica reads the tiny per-slot
+    status, finished sequences are drained (token row copied out, slot
+    freed, pages back to that replica's pool — replicas never touch each
+    other's pages) and freed slots are immediately refillable.
 
-Per decoded token the host does O(1/decode_chunk) syncs — the legacy static
-path did one ``np.asarray`` per token.
+``ContinuousScheduler`` — the single-engine scheduler of earlier revisions
+— is the N=1 router. Per decoded token the host does O(1/decode_chunk)
+syncs per replica; the legacy static path did one ``np.asarray`` per token.
+
+Completions record ``arrival``, ``admitted`` and ``finished`` separately: a
+deferred request's queue wait (``admitted - arrival``) is real latency the
+router caused, and folding it into decode service time (as a single
+``latency`` once did) hides exactly the signal a router exists to optimize.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -43,12 +62,25 @@ class Completion:
     prompt_len: int
     tokens: np.ndarray  # (n,) int32 generated tokens (incl. first)
     arrival: float
-    admitted: float
+    admitted: float  # when the prefill dispatch actually ran (not arrival!)
     finished: float
+    replica: int = 0  # which fleet replica served it
 
     @property
     def latency(self) -> float:
+        """End-to-end: arrival -> finished (queue wait + service)."""
         return self.finished - self.arrival
+
+    @property
+    def queue_wait(self) -> float:
+        """Time spent queued/deferred before the admitting prefill ran —
+        the router-attributable share of latency."""
+        return self.admitted - self.arrival
+
+    @property
+    def service(self) -> float:
+        """Time spent resident on a replica: admission -> finished."""
+        return self.finished - self.admitted
 
 
 class MonotonicClock:
@@ -85,63 +117,149 @@ class ManualClock:
     advance = sleep
 
 
-class ContinuousScheduler:
-    """Admission + eviction loop; returns one Completion per request."""
+class FleetRouter:
+    """Least-loaded admission + eviction loop over N engine replicas;
+    returns one Completion per request (tagged with its replica)."""
 
-    def __init__(self, engine: ServeEngine, clock=None):
-        self.engine = engine
+    def __init__(self, engines: Sequence[ServeEngine], clock=None):
+        if not engines:
+            raise ValueError("FleetRouter needs at least one engine replica")
+        self.engines: List[ServeEngine] = list(engines)
         self.clock = clock
+        self.stats: Dict[str, int] = {"routed": 0, "requeued": 0}
+
+    # -- routing policy -----------------------------------------------------
+
+    def _bill(self, eng: ServeEngine, req: Request) -> int:
+        return eng.request_load(len(req.tokens), req.max_new_tokens)
+
+    def _load(self, i: int, queues: List[deque]) -> Tuple[int, int, int]:
+        """A replica's admission-load key: billed lifetime pages of
+        everything resident AND everything already queued there (queued
+        work is committed load — ignoring it would shotgun a burst of
+        arrivals onto whichever replica drained most recently), queue
+        depth breaking page ties, replica index making the order total."""
+        eng = self.engines[i]
+        q = queues[i]
+        return (
+            eng.billed_pages() + sum(self._bill(eng, r) for r in q),
+            len(q),
+            i,
+        )
+
+    def _route(self, req: Request, queues: List[deque]) -> int:
+        """Least-loaded replica among those that could EVER admit the
+        request (an empty pool fits its lifetime bill)."""
+        feasible = [
+            i
+            for i, eng in enumerate(self.engines)
+            if eng.can_ever_admit(len(req.tokens), req.max_new_tokens)
+        ]
+        if not feasible:
+            eng = self.engines[0]
+            raise RuntimeError(
+                f"request rid={req.rid} (prompt {len(req.tokens)} tokens, "
+                f"budget {req.max_new_tokens}) can never be admitted: its "
+                "lifetime page bill outruns the EMPTY KV pool on every "
+                "replica, so no amount of draining frees enough pages. Raise "
+                "--pool-pages or shrink the prompt/budget."
+            )
+        self.stats["routed"] += 1
+        return min(feasible, key=lambda i: self._load(i, queues))
+
+    # -- the serving loop ---------------------------------------------------
 
     def run(self, requests: Sequence[Request]) -> List[Completion]:
-        eng = self.engine
         clock = self.clock or MonotonicClock()
-        eng.reset()
+        for eng in self.engines:
+            eng.reset()
+        self.stats = {"routed": 0, "requeued": 0}
         pending = deque(sorted(requests, key=lambda r: r.arrival))
-        queue: deque = deque()
-        resident: Dict[int, tuple] = {}  # slot -> (request, admitted_time)
+        queues: List[deque] = [deque() for _ in self.engines]
+        # per replica: slot -> (request, admitted_time)
+        resident: List[Dict[int, tuple]] = [{} for _ in self.engines]
         done: List[Completion] = []
 
-        while pending or queue or resident:
+        def _admit(i: int, burst: List[Request]) -> None:
+            slots = self.engines[i].admit_many(
+                [(r.tokens, r.max_new_tokens) for r in burst]
+            )
+            t_admit = clock.now()
+            for slot, req in zip(slots, burst):
+                resident[i][slot] = (req, t_admit)
+
+        while pending or any(queues) or any(resident):
             now = clock.now()
             while pending and pending[0].arrival <= now:
-                queue.append(pending.popleft())
-            if queue and eng.free_slots:
-                # burst size is bounded by free slots AND (paged layout) by
-                # free KV pages — excess requests stay queued and admit when
-                # a drain returns capacity, instead of crashing the run
-                n = eng.max_admissible([(r.tokens, r.max_new_tokens) for r in queue])
-                if n == 0 and not resident:
-                    r = queue[0]
-                    raise RuntimeError(
-                        f"request rid={r.rid} (prompt {len(r.tokens)} tokens, "
-                        f"budget {r.max_new_tokens}) can never be admitted: its "
-                        "lifetime page bill outruns the EMPTY KV pool, so no "
-                        "amount of draining frees enough pages. Raise --pool-pages "
-                        "or shrink the prompt/budget."
+                req = pending.popleft()
+                queues[self._route(req, queues)].append(req)
+
+            # per-replica burst admission: bounded by free slots AND (paged
+            # layout) by free KV pages — excess requests stay queued and
+            # admit when a drain returns capacity, instead of crashing
+            for i, eng in enumerate(self.engines):
+                if queues[i] and eng.free_slots:
+                    n = eng.max_admissible(
+                        [(r.tokens, r.max_new_tokens) for r in queues[i]]
                     )
-                burst = [queue.popleft() for _ in range(n)]
-                if burst:
-                    slots = eng.admit_many([(r.tokens, r.max_new_tokens) for r in burst])
-                    t_admit = clock.now()
-                    for slot, req in zip(slots, burst):
-                        resident[slot] = (req, t_admit)
-            if resident:
-                eng.decode_chunk()
-                active, n_out = eng.sync()
-                t_done = clock.now()
-                for slot in [s for s in resident if not active[s]]:
-                    req, t_admit = resident.pop(slot)
-                    toks = eng.fetch(slot, int(n_out[slot]))
-                    done.append(
-                        Completion(
-                            rid=req.rid,
-                            prompt_len=len(req.tokens),
-                            tokens=toks,
-                            arrival=req.arrival,
-                            admitted=t_admit,
-                            finished=t_done,
+                    if n:
+                        _admit(i, [queues[i].popleft() for _ in range(n)])
+
+            # requeue-on-defer: arrival-time routing goes stale as pages
+            # drain — a queue head blocked on ITS replica moves to an IDLE
+            # (empty-queue) replica that can admit it immediately. Only the
+            # head moves (later entries would jump the arrival order) and
+            # only to empty queues (a requeued request must admit now, not
+            # trade one wait for another).
+            for i, eng in enumerate(self.engines):
+                if not queues[i]:
+                    continue
+                head = queues[i][0]
+                pair = [(head.tokens, head.max_new_tokens)]
+                if eng.max_admissible(pair):
+                    continue  # admits here next tick; no defer to fix
+                targets = [
+                    j
+                    for j, other in enumerate(self.engines)
+                    if j != i and not queues[j] and other.max_admissible(pair)
+                ]
+                if targets:
+                    j = min(targets, key=lambda j: self._load(j, queues))
+                    queues[i].popleft()
+                    _admit(j, [head])
+                    self.stats["requeued"] += 1
+
+            if any(resident):
+                for i, eng in enumerate(self.engines):
+                    if not resident[i]:
+                        continue
+                    eng.decode_chunk()
+                    active, n_out = eng.sync()
+                    t_done = clock.now()
+                    for slot in [s for s in resident[i] if not active[s]]:
+                        req, t_admit = resident[i].pop(slot)
+                        toks = eng.fetch(slot, int(n_out[slot]))
+                        done.append(
+                            Completion(
+                                rid=req.rid,
+                                prompt_len=len(req.tokens),
+                                tokens=toks,
+                                arrival=req.arrival,
+                                admitted=t_admit,
+                                finished=t_done,
+                                replica=i,
+                            )
                         )
-                    )
-            elif pending:
+            elif pending and not any(queues):
                 clock.sleep(pending[0].arrival - now)
         return sorted(done, key=lambda c: c.rid)
+
+
+class ContinuousScheduler(FleetRouter):
+    """The N=1 fleet: one engine, no routing choice — the single-engine
+    scheduler earlier revisions had, preserved as the parity oracle the
+    fleet tests compare against."""
+
+    def __init__(self, engine: ServeEngine, clock=None):
+        super().__init__([engine], clock)
+        self.engine = engine

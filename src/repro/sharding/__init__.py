@@ -7,6 +7,7 @@ from repro.sharding.partition import (
     batch_pspec,
     activation_pspec,
     decode_state_specs,
+    shard_engine_state,
 )
 
 __all__ = [
@@ -18,4 +19,5 @@ __all__ = [
     "batch_pspec",
     "activation_pspec",
     "decode_state_specs",
+    "shard_engine_state",
 ]

@@ -153,10 +153,12 @@ def _score(spec: P) -> int:
     return n
 
 
-def infer_param_specs(params: Any) -> Any:
+def infer_param_specs(params: Any, mesh_axes: Optional[Dict[str, int]] = None) -> Any:
     """Build a PartitionSpec tree for a param tree (of arrays or
-    ShapeDtypeStructs) against the mesh currently in context."""
-    mesh_axes = _mesh_axes()
+    ShapeDtypeStructs). Resolves against the mesh currently in context
+    unless ``mesh_axes`` is given explicitly — a fleet shards each replica
+    against ITS mesh slice without entering N global mesh contexts."""
+    mesh_axes = _mesh_axes() if mesh_axes is None else dict(mesh_axes)
 
     def infer(path: str, leaf) -> P:
         if not mesh_axes:
@@ -201,15 +203,57 @@ _STATE_RULES: List[Tuple[str, LogicalSpec]] = [
 ]
 
 
-def decode_state_specs(state: Any) -> Any:
+def decode_state_specs(state: Any, mesh_axes: Optional[Dict[str, int]] = None) -> Any:
     """PartitionSpec tree for a decode/prefill state pytree (KV caches are
     sequence-sharded over the model axis; SSM states channel-sharded)."""
-    mesh_axes = _mesh_axes()
+    mesh_axes = _mesh_axes() if mesh_axes is None else dict(mesh_axes)
 
     def infer(path: str, leaf) -> P:
         if not mesh_axes:
             return P()
         for pattern, logical in _STATE_RULES:
+            if re.search(pattern, path):
+                spec = logical[-leaf.ndim :] if len(logical) >= leaf.ndim else logical
+                return resolve_rule(spec, leaf.shape, mesh_axes)
+        return P(*([None] * leaf.ndim))
+
+    return tree_map_with_path(infer, state)
+
+
+# Serving-engine state (repro.serve.engine.DecodeState). Unlike the
+# training/prefill state above, the batch dim here is SLOTS — requests land
+# on arbitrary slots at arbitrary times, so the slot dim stays replicated
+# and parallelism comes from the heads/channel dims (tensor-parallel decode:
+# every model shard serves every slot, holding only its heads' pages).
+_ENGINE_STATE_RULES: List[Tuple[str, LogicalSpec]] = [
+    # paged KV pools (G, pool_pages, page, KH, hd): heads over the model
+    # axis — each shard holds EVERY page's slice of ITS kv-heads, so page
+    # ids (and the host free list) stay global and the handoff scatter is
+    # shard-local. Never shard the page dim: ids are data, not layout.
+    (r"/(k|v)_pages$", (None, None, None, "heads", None)),
+    # dense engine KV (G, slots, cache_len, KH, hd): same heads split
+    (r"/(k|v)$", (None, None, None, "heads", None)),
+    # recurrent carries, per-slot dense: channel-sharded like training state
+    (r"/conv$", (None, None, None, "tp")),
+    (r"/h$", (None, None, "tp", None)),
+    (r"/C$", (None, None, "heads", None, None)),
+    (r"/(n|c)$", (None, None, "heads", None)),
+    (r"/m$", (None, None, "heads")),
+]
+
+
+def shard_engine_state(state: Any, mesh_axes: Optional[Dict[str, int]] = None) -> Any:
+    """PartitionSpec tree for a serving-engine ``DecodeState``: KV page
+    pools / dense caches sharded along the heads axis, recurrent carries
+    channel-sharded, and every slot-bookkeeping leaf (positions, budgets,
+    output rows, page tables, rng) replicated — the host mutates those by
+    slot id and the numbers must read the same from every shard."""
+    mesh_axes = _mesh_axes() if mesh_axes is None else dict(mesh_axes)
+
+    def infer(path: str, leaf) -> P:
+        if not mesh_axes or leaf.ndim == 0:
+            return P()
+        for pattern, logical in _ENGINE_STATE_RULES:
             if re.search(pattern, path):
                 spec = logical[-leaf.ndim :] if len(logical) >= leaf.ndim else logical
                 return resolve_rule(spec, leaf.shape, mesh_axes)

@@ -1,0 +1,484 @@
+"""Serving-fleet tests: the prefill/decode worker split, the KV handoff,
+and the multi-replica router.
+
+ * disagg config validation (paged-only handoff; pure-SSM archs cannot
+   disaggregate because their state degrades to the dense layout);
+ * staging-pool accounting across a prefill->adopt handoff (backpressure
+   pages are donated back exactly when the decode worker adopts);
+ * fleet == single-engine greedy token parity on identical request streams
+   — N>=2 replicas including a disaggregated pair, bitwise token equality
+   against the single colocated ServeEngine (which itself runs the same
+   prefill->handoff->adopt path, so parity is structural);
+ * randomized router invariants: no request lost or duplicated across
+   replicas, per-replica pool audits balance on every transition, and an
+   eviction on one replica cannot touch another replica's pages;
+ * requeue-on-defer: a queue head blocked on its routed replica moves to an
+   idle replica that can admit it immediately;
+ * queue wait vs service time split on deferred admissions;
+ * shard_engine_state specs (explicit mesh_axes — no mesh context needed);
+ * 8-virtual-device lane (skipped below 8 devices; CI forces them with
+   XLA_FLAGS=--xla_force_host_platform_device_count=8): fleet-mesh
+   topology, sharded-engine parity, and the routed sharded disagg fleet.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models import init_lm
+from repro.serve import (
+    ContinuousScheduler,
+    DecodeWorker,
+    EngineConfig,
+    FleetRouter,
+    ManualClock,
+    PrefillWorker,
+    Request,
+    ServeEngine,
+)
+from repro.sharding import shard_engine_state
+
+needs_8_devices = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+    "(set before jax import; the fleet-smoke CI lane does)",
+)
+
+
+def _mk(**kw):
+    base = dict(
+        name="t", family="dense", num_layers=2, d_model=32, num_heads=4,
+        num_kv_heads=2, head_dim=8, d_ff=64, vocab_size=64, scan_layers=False,
+        remat=False, dtype="float32", param_dtype="float32",
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _stream(cfg, n, seed=3):
+    rng = np.random.RandomState(seed)
+    return [
+        Request(
+            rid=i,
+            tokens=rng.randint(0, cfg.vocab_size, size=int(rng.randint(3, 14))).astype(np.int32),
+            max_new_tokens=int(rng.randint(2, 9)),
+            arrival=float(rng.uniform(0.0, 3.0)),
+        )
+        for i in range(n)
+    ]
+
+
+_ECFG = dict(
+    max_slots=2, max_seq=48, max_new=8, decode_chunk=3, prefill_bucket=8,
+    page_size=8,
+)
+
+
+# ---------------------------------------------------------------------------
+# config validation
+
+
+def test_disagg_requires_paged_layout():
+    with pytest.raises(ValueError, match="paged"):
+        EngineConfig(kv_layout="dense", disagg=True)
+    # paged+disagg constructs fine
+    assert EngineConfig(disagg=True).disagg
+
+
+def test_disagg_rejects_pure_ssm():
+    """A pure-SSM arch has no KV pages; its engine state silently degrades
+    to the dense layout, so a disaggregated pair must be rejected at the
+    ENGINE (the config alone cannot know the arch)."""
+    cfg = _mk(family="ssm", ssm_kind="mamba", d_ff=0, num_kv_heads=4)
+    params = init_lm(cfg, jax.random.key(0))
+    with pytest.raises(ValueError, match="no attention"):
+        ServeEngine(cfg, params, EngineConfig(disagg=True, **_ECFG))
+
+
+def test_router_needs_engines():
+    with pytest.raises(ValueError, match="at least one"):
+        FleetRouter([])
+
+
+# ---------------------------------------------------------------------------
+# the handoff itself
+
+
+def test_handoff_staging_accounting():
+    """A sealed prefill burst reserves staging pages on the SOURCE pool
+    (backpressure on in-flight handoffs) and donates them back exactly when
+    the decode worker adopts — ids never cross pools."""
+    cfg = _mk()
+    params = init_lm(cfg, jax.random.key(0))
+    ecfg = EngineConfig(**_ECFG)
+    pw = PrefillWorker(cfg, params, ecfg)
+    dw = DecodeWorker(cfg, params, ecfg, stats=pw.stats)
+    prompts = [np.arange(5, dtype=np.int32), np.arange(7, dtype=np.int32)]
+    h = pw.prefill_group([(p, 4) for p in prompts])
+    assert h.n == 2 and h.n_alloc == 1  # 8-token bucket = 1 page of 8
+    assert pw.staging.pages_in_use == 2  # reserved while in flight
+    assert dw.pool.pages_in_use == 0  # nothing landed yet
+    slots = dw.adopt(h)
+    assert pw.staging.pages_in_use == 0  # donated on adoption
+    assert dw.pool.pages_in_use == 2
+    assert sorted(len(dw.pool.owned(s)) for s in slots) == [1, 1]
+    # the decode half actually decodes what the prefill half sealed
+    dw.decode_chunk()
+    active, n_out = dw.sync()
+    assert all(n_out[s] >= 1 for s in slots)
+
+
+def test_adopt_atomic_on_full_pool():
+    """A burst whose sealed pages outsize the adopting pool raises BEFORE
+    any slot or page moves — the handoff stays intact for a retry."""
+    cfg = _mk()
+    params = init_lm(cfg, jax.random.key(0))
+    ecfg = EngineConfig(
+        max_slots=2, max_seq=32, max_new=4, decode_chunk=4, prefill_bucket=16,
+        page_size=8, pool_pages=4,
+    )
+    pw = PrefillWorker(cfg, params, ecfg)
+    dw = DecodeWorker(cfg, params, ecfg, stats=pw.stats)
+    big = np.arange(20, dtype=np.int32)  # buckets to 32 tokens = 4 pages
+    h1 = pw.prefill_group([(big, 4)])
+    dw.adopt(h1)  # fills the pool
+    pw2 = PrefillWorker(cfg, params, ecfg)
+    h2 = pw2.prefill_group([(big, 4)])
+    with pytest.raises(RuntimeError, match="cannot adopt"):
+        dw.adopt(h2)
+    assert len(dw.free_slots) == 1  # no slot consumed by the failed adopt
+    assert pw2.staging.pages_in_use == 4  # handoff still staged, retryable
+    # drain the first request; the SAME handoff now lands
+    for _ in range(4):
+        dw.decode_chunk()
+        active, n_out = dw.sync()
+        if not active.any():
+            break
+    (slot,) = [s for s in range(ecfg.max_slots) if s not in dw.free_slots]
+    dw.fetch(slot, int(n_out[slot]))
+    dw.adopt(h2)
+    assert pw2.staging.pages_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# fleet == single engine parity
+
+
+def _fleet(cfg, params, n, disagg_first=False, **over):
+    kw = dict(_ECFG)
+    kw.update(over)
+    engines = []
+    for i in range(n):
+        ecfg = EngineConfig(disagg=disagg_first and i == 0, **kw)
+        engines.append(ServeEngine(cfg, params, ecfg))
+    return engines
+
+
+@pytest.mark.parametrize("n,disagg", [(2, False), (2, True), (3, True)],
+                         ids=["n2", "n2-disagg", "n3-disagg"])
+def test_fleet_matches_single_engine_tokens(n, disagg):
+    """The routed fleet (N replicas, optionally one an explicitly
+    disaggregated pair) produces bitwise-identical greedy tokens to ONE
+    colocated ServeEngine on the same staggered ragged request stream."""
+    cfg = _mk()
+    params = init_lm(cfg, jax.random.key(0))
+    reqs = _stream(cfg, 9)
+    single = ServeEngine(cfg, params, EngineConfig(**_ECFG))
+    ref = {c.rid: c.tokens for c in
+           ContinuousScheduler(single, clock=ManualClock(tick=0.2)).run(reqs)}
+    router = FleetRouter(_fleet(cfg, params, n, disagg_first=disagg),
+                         clock=ManualClock(tick=0.2))
+    comps = router.run(reqs)
+    assert sorted(c.rid for c in comps) == sorted(ref)
+    for c in comps:
+        np.testing.assert_array_equal(c.tokens, ref[c.rid])
+    # the fleet actually spread load (least-loaded routing, 9 reqs, N pools)
+    assert len({c.replica for c in comps}) > 1
+    if disagg:
+        assert router.engines[0].stats["handoffs"] > 0
+
+
+def test_fleet_dense_layout_matches_single():
+    """The router's load unit degrades to slot counts in the dense layout —
+    parity and conservation must hold there too."""
+    cfg = _mk()
+    params = init_lm(cfg, jax.random.key(0))
+    reqs = _stream(cfg, 7, seed=9)
+    single = ServeEngine(cfg, params, EngineConfig(kv_layout="dense", **_ECFG))
+    ref = {c.rid: c.tokens for c in
+           ContinuousScheduler(single, clock=ManualClock(tick=0.2)).run(reqs)}
+    comps = FleetRouter(
+        _fleet(cfg, params, 2, kv_layout="dense"), clock=ManualClock(tick=0.2)
+    ).run(reqs)
+    assert sorted(c.rid for c in comps) == sorted(ref)
+    for c in comps:
+        np.testing.assert_array_equal(c.tokens, ref[c.rid])
+
+
+# ---------------------------------------------------------------------------
+# randomized router invariants
+
+
+class _Audit:
+    """Delegating per-replica wrapper asserting slot and page hygiene on
+    every transition, and that transitions on THIS replica never move
+    another replica's pool (cross-replica isolation)."""
+
+    def __init__(self, inner, peers_fn):
+        self._e = inner
+        self._peers = peers_fn
+        self.in_use = set()
+
+    def __getattr__(self, name):
+        return getattr(self._e, name)
+
+    def _pool_snapshot(self, eng):
+        pool = eng.pool
+        return (
+            pool.free_pages,
+            {s: tuple(pool.owned(s)) for s in range(eng.ecfg.max_slots)},
+        )
+
+    def _check(self):
+        pool = self._e.pool
+        owned = [p for s in range(self._e.ecfg.max_slots) for p in pool.owned(s)]
+        assert len(owned) == len(set(owned)), "page double-booked"
+        assert pool.free_pages + len(owned) == pool.n_pages, "free-list leak"
+        assert all(not pool.owned(s) for s in self._e.free_slots)
+
+    def admit_many(self, requests):
+        peers_before = [self._pool_snapshot(p) for p in self._peers(self)]
+        slots = self._e.admit_many(requests)
+        assert len(set(slots)) == len(slots)
+        for slot in slots:
+            assert slot not in self.in_use, f"slot {slot} double-booked"
+            self.in_use.add(slot)
+        self._check()
+        assert peers_before == [self._pool_snapshot(p) for p in self._peers(self)], (
+            "admission on one replica moved another replica's pool"
+        )
+        return slots
+
+    def decode_chunk(self):
+        self._e.decode_chunk()
+        self._check()
+
+    def fetch(self, slot, n_out):
+        assert slot in self.in_use
+        self.in_use.discard(slot)
+        peers_before = [self._pool_snapshot(p) for p in self._peers(self)]
+        toks = self._e.fetch(slot, n_out)
+        self._check()
+        assert peers_before == [self._pool_snapshot(p) for p in self._peers(self)], (
+            "eviction on one replica touched another replica's pages"
+        )
+        return toks
+
+
+def test_router_randomized_invariants():
+    cfg = _mk()
+    params = init_lm(cfg, jax.random.key(0))
+    engines = _fleet(cfg, params, 3, max_slots=2)
+    audits = [None] * len(engines)
+    peers = lambda a: [x._e for x in audits if x is not a]
+    for i, eng in enumerate(engines):
+        audits[i] = _Audit(eng, peers)
+    reqs = _stream(cfg, 17, seed=11)
+    comps = FleetRouter(audits, clock=ManualClock(tick=0.3)).run(reqs)
+    # no request lost or duplicated across replicas
+    assert sorted(c.rid for c in comps) == sorted(r.rid for r in reqs)
+    by_rid = {c.rid: c for c in comps}
+    for r in reqs:
+        c = by_rid[r.rid]
+        assert len(c.tokens) == r.max_new_tokens
+        assert c.admitted >= r.arrival and c.finished >= c.admitted
+        assert 0 <= c.replica < len(engines)
+    for a, eng in zip(audits, engines):
+        assert not a.in_use
+        assert sorted(eng.free_slots) == list(range(eng.ecfg.max_slots))
+        assert eng.pool.pages_in_use == 0 and eng.pool.free_pages == eng.pool.n_pages
+        assert not bool(np.asarray(eng._state.active).any())
+    assert sum(e.stats["evicted"] for e in engines) == len(reqs)
+    assert sum(e.stats["admitted"] for e in engines) == len(reqs)
+
+
+def test_router_requeues_blocked_head_to_idle_replica():
+    """Arrival-time routing goes stale: rid=2 lands on replica 0 by the
+    load tiebreak, but replica 0 is pinned by a long-budget resident while
+    replica 1 drains quickly — the blocked head must move (requeue-on-defer)
+    and complete on replica 1 instead of waiting out replica 0."""
+    cfg = _mk()
+    params = init_lm(cfg, jax.random.key(0))
+    kw = dict(max_slots=1, max_seq=48, max_new=16, decode_chunk=2,
+              prefill_bucket=8, kv_layout="dense")
+    engines = [ServeEngine(cfg, params, EngineConfig(**kw)) for _ in range(2)]
+    prompt = np.arange(6, dtype=np.int32)
+    reqs = [
+        Request(rid=0, tokens=prompt, max_new_tokens=16),  # -> replica 0, slow
+        Request(rid=1, tokens=prompt, max_new_tokens=2),   # -> replica 1, fast
+        Request(rid=2, tokens=prompt, max_new_tokens=2),   # -> replica 0 queue
+    ]
+    router = FleetRouter(engines, clock=ManualClock(tick=0.1))
+    comps = {c.rid: c for c in router.run(reqs)}
+    assert comps[0].replica == 0 and comps[1].replica == 1
+    assert router.stats["requeued"] == 1
+    assert comps[2].replica == 1  # moved off the blocked replica
+    assert comps[2].finished < comps[0].finished
+
+
+def test_router_fail_fast_when_no_replica_can_ever_admit():
+    cfg = _mk()
+    params = init_lm(cfg, jax.random.key(0))
+    engines = _fleet(cfg, params, 2, max_seq=32, max_new=4, decode_chunk=4,
+                     prefill_bucket=8, pool_pages=2)
+    big = Request(rid=0, tokens=np.arange(26, dtype=np.int32), max_new_tokens=4)
+    with pytest.raises(RuntimeError, match="never be admitted"):
+        FleetRouter(engines, clock=ManualClock()).run([big])
+
+
+# ---------------------------------------------------------------------------
+# queue wait vs service
+
+
+def test_queue_wait_separates_arrival_from_admission():
+    """A deferred request's Completion records admission separately from
+    arrival: queue_wait + service == latency, and the deferred request (the
+    pool fits one lifetime bill at a time) shows a strictly positive wait
+    while the first admit's wait stays ~the clock tick."""
+    cfg = _mk()
+    params = init_lm(cfg, jax.random.key(0))
+    eng = ServeEngine(
+        cfg, params,
+        EngineConfig(max_slots=2, max_seq=32, max_new=16, decode_chunk=4,
+                     prefill_bucket=8, page_size=8, pool_pages=4),
+    )
+    reqs = [Request(rid=i, tokens=np.arange(8, dtype=np.int32), max_new_tokens=16)
+            for i in range(2)]
+    comps = {c.rid: c for c in
+             ContinuousScheduler(eng, clock=ManualClock(tick=0.1)).run(reqs)}
+    for c in comps.values():
+        assert c.queue_wait >= 0 and c.service > 0
+        np.testing.assert_allclose(c.queue_wait + c.service, c.latency)
+    # rid=1 could not admit until rid=0 fully drained: its wait spans rid=0's
+    # service, so it dominates rid=0's (near-zero) wait
+    assert comps[1].queue_wait > comps[0].queue_wait
+    assert comps[1].queue_wait > comps[0].service / 2
+
+
+# ---------------------------------------------------------------------------
+# engine-state sharding specs (no mesh needed: explicit axes)
+
+
+def test_shard_engine_state_specs():
+    cfg = _mk()
+    params = init_lm(cfg, jax.random.key(0))
+    eng = ServeEngine(cfg, params, EngineConfig(**_ECFG))
+    specs = shard_engine_state(eng._state, mesh_axes={"data": 1, "model": 2})
+    # paged pools shard along kv-heads (2 % 2 == 0), nothing else
+    for key in eng._state.kv:
+        assert specs.kv[key]["k_pages"] == P(None, None, None, "model", None)
+        assert specs.kv[key]["v_pages"] == P(None, None, None, "model", None)
+    # slot bookkeeping is replicated — the host mutates it by slot id
+    assert specs.page_table == P(None, None)
+    assert specs.pos == P(None)
+    assert specs.out == P(None, None)
+    # indivisible heads fall back to replication instead of erroring
+    specs3 = shard_engine_state(eng._state, mesh_axes={"data": 1, "model": 3})
+    for key in eng._state.kv:
+        assert specs3.kv[key]["k_pages"] == P(None, None, None, None, None)
+    # no axes -> fully replicated
+    specs0 = shard_engine_state(eng._state, mesh_axes={})
+    assert specs0.pos == P()
+
+
+def test_fleet_mesh_rejects_ragged_split():
+    from repro.launch.mesh import make_fleet_mesh
+
+    with pytest.raises(ValueError, match="divide"):
+        make_fleet_mesh(len(jax.devices()) + 1)
+    with pytest.raises(ValueError, match=">= 1"):
+        make_fleet_mesh(0)
+
+
+# ---------------------------------------------------------------------------
+# 8-virtual-device lane (fleet-smoke CI forces host devices pre-import)
+
+
+@needs_8_devices
+def test_fleet_mesh_topology():
+    from repro.launch.mesh import disagg_submeshes, make_fleet_mesh, replica_meshes
+
+    fleet = make_fleet_mesh(2)
+    assert fleet.axis_names == ("replica", "data", "model")
+    assert dict(fleet.shape) == {"replica": 2, "data": 1, "model": 4}
+    subs = replica_meshes(fleet)
+    assert len(subs) == 2
+    seen = set()
+    for sub in subs:
+        assert sub.axis_names == ("data", "model")
+        assert dict(sub.shape) == {"data": 1, "model": 4}
+        ids = {d.id for d in sub.devices.flat}
+        assert not ids & seen  # replicas are physically disjoint
+        seen |= ids
+        pmesh, dmesh = disagg_submeshes(sub)
+        pids = {d.id for d in pmesh.devices.flat}
+        dids = {d.id for d in dmesh.devices.flat}
+        assert not pids & dids and pids | dids == ids
+    # single-device replica colocates rather than failing
+    one = replica_meshes(make_fleet_mesh(8))[0]
+    pm, dm = disagg_submeshes(one)
+    assert pm is dm is one
+
+
+@needs_8_devices
+def test_sharded_engine_matches_meshless_tokens():
+    """One engine sharded over a ("data", "model") submesh produces the
+    same greedy tokens as the meshless engine — the tensor-parallel split
+    must be numerically invisible at the argmax."""
+    from repro.launch.mesh import make_fleet_mesh, replica_meshes
+
+    cfg = _mk()
+    params = init_lm(cfg, jax.random.key(0))
+    reqs = _stream(cfg, 5, seed=13)
+    ref = {c.rid: c.tokens for c in ContinuousScheduler(
+        ServeEngine(cfg, params, EngineConfig(**_ECFG)), clock=ManualClock(tick=0.2)
+    ).run(reqs)}
+    sub = replica_meshes(make_fleet_mesh(2))[0]
+    eng = ServeEngine(cfg, params, EngineConfig(**_ECFG), mesh=sub)
+    comps = ContinuousScheduler(eng, clock=ManualClock(tick=0.2)).run(reqs)
+    assert sorted(c.rid for c in comps) == sorted(ref)
+    for c in comps:
+        np.testing.assert_array_equal(c.tokens, ref[c.rid])
+
+
+@needs_8_devices
+def test_router_sharded_disagg_fleet_parity():
+    """The acceptance pin: a 2-replica routed fleet on disjoint mesh slices
+    — one replica a disaggregated prefill/decode pair on its OWN submesh
+    halves — yields bitwise-identical greedy tokens to the single colocated
+    meshless ServeEngine on the same request stream."""
+    from repro.launch.mesh import disagg_submeshes, make_fleet_mesh, replica_meshes
+
+    cfg = _mk()
+    params = init_lm(cfg, jax.random.key(0))
+    reqs = _stream(cfg, 8, seed=17)
+    ref = {c.rid: c.tokens for c in ContinuousScheduler(
+        ServeEngine(cfg, params, EngineConfig(**_ECFG)), clock=ManualClock(tick=0.2)
+    ).run(reqs)}
+    subs = replica_meshes(make_fleet_mesh(2))
+    pmesh, dmesh = disagg_submeshes(subs[0])
+    engines = [
+        ServeEngine(cfg, params, EngineConfig(disagg=True, **_ECFG),
+                    mesh=dmesh, prefill_mesh=pmesh),
+        ServeEngine(cfg, params, EngineConfig(**_ECFG), mesh=subs[1]),
+    ]
+    router = FleetRouter(engines, clock=ManualClock(tick=0.2))
+    comps = router.run(reqs)
+    assert sorted(c.rid for c in comps) == sorted(ref)
+    for c in comps:
+        np.testing.assert_array_equal(c.tokens, ref[c.rid])
+    assert len({c.replica for c in comps}) == 2  # both replicas served
+    assert engines[0].stats["handoffs"] > 0  # the disagg pair actually ran

@@ -141,6 +141,27 @@ def test_pool_randomized_invariants():
     assert pool.free_pages == pool.n_pages and pool.pages_in_use == 0
 
 
+def test_pool_handoff_donate_adopt():
+    """The handoff protocol: ``donate`` releases a staging reservation back
+    to the free list; ``adopt`` hands fresh ids to a CLEAN slot (adopting
+    on top of live pages would orphan them — it must raise) and conserves
+    the free+owned partition like any alloc."""
+    cfg = _mk()
+    pool = KVPool(cfg, EngineConfig(max_slots=2, max_seq=64, page_size=16))
+    staged = pool.alloc(0, 2)  # the sending side's in-flight reservation
+    got = pool.adopt(1, 2)  # the receiving side: fresh ids, not the staged ones
+    assert len(got) == 2 and not set(got) & set(staged)
+    with pytest.raises(RuntimeError, match="clean slot"):
+        pool.adopt(1, 1)  # slot 1 is live — adopting again would orphan pages
+    freed = pool.donate(0)
+    assert set(freed) == set(staged)
+    assert pool.free_pages + pool.pages_in_use == pool.n_pages
+    assert pool.pages_in_use == 2  # only the adopted pages remain owned
+    # donated ids are reissuable to the next staged prefill
+    again = pool.alloc(0, 2)
+    assert set(again) <= set(freed) | set(range(pool.n_pages))
+
+
 def test_pool_table_row_padding():
     """Padding entries point at the scratch page — never at page 0, which is
     allocatable (an idle slot's ride-along write through a 0 padding entry

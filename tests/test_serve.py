@@ -461,8 +461,18 @@ def test_serve_args_fail_fast():
     with pytest.raises(SystemExit, match="vlm"):
         validate_args(parser.parse_args([]), get_arch("phi-3-vision-4.2b"))
     validate_args(parser.parse_args(["--engine", "static"]), get_arch("phi-3-vision-4.2b"))
+    # multipod serving is now the fleet-router path for the continuous
+    # engine; only the fused STATIC program stays single-pod
+    validate_args(parser.parse_args(["--mesh", "multipod"]), dec)
     with pytest.raises(SystemExit, match="multipod"):
-        validate_args(parser.parse_args(["--mesh", "multipod"]), dec)
+        validate_args(parser.parse_args(["--mesh", "multipod", "--engine", "static"]), dec)
+    with pytest.raises(SystemExit, match="paged"):
+        # the prefill->decode handoff moves sealed pages: dense has none
+        validate_args(parser.parse_args(["--disagg", "--kv-layout", "dense"]), dec)
+    with pytest.raises(SystemExit, match="replicas"):
+        validate_args(parser.parse_args(["--replicas", "0"]), dec)
+    with pytest.raises(SystemExit, match="continuous"):
+        validate_args(parser.parse_args(["--replicas", "2", "--engine", "static"]), dec)
     with pytest.raises(SystemExit, match="max-slots"):
         validate_args(parser.parse_args(["--max-slots", "0"]), dec)
     with pytest.raises(SystemExit, match="gen"):
