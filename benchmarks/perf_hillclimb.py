@@ -297,8 +297,10 @@ def pair_servepath(out):
     from repro.config import get_arch, reduced_variant
     from repro.models import init_lm
     from repro.serve import (
-        ContinuousScheduler, EngineConfig, Request, ServeEngine, static_generate,
+        ContinuousScheduler, EngineConfig, ServeEngine, ragged_stream,
+        static_generate, with_arrivals,
     )
+    from repro.serve.metrics import percentile as pct
 
     # serve-scale quick variant: deep/wide enough that a decode step costs
     # ~5ms — the regime the engine exists for. At the 2-layer smoke scale
@@ -309,9 +311,7 @@ def pair_servepath(out):
     )
     params = init_lm(cfg, jax.random.key(0))
     R, PROMPT, MAX_GEN, BATCH, REPEATS = 16, 32, 48, 4, 5
-    rng = np.random.RandomState(0)
-    prompts = [rng.randint(0, cfg.vocab_size, size=PROMPT).astype(np.int32) for _ in range(R)]
-    budgets = [int(g) for g in rng.randint(8, MAX_GEN + 1, size=R)]  # ragged
+    prompts, budgets = ragged_stream(cfg.vocab_size, R, PROMPT, MAX_GEN, seed=0)
 
     engine = ServeEngine(
         cfg, params,
@@ -320,8 +320,7 @@ def pair_servepath(out):
     sched = ContinuousScheduler(engine)
 
     def mk_requests(dt):
-        return [Request(rid=i, tokens=prompts[i], max_new_tokens=budgets[i], arrival=i * dt)
-                for i in range(R)]
+        return with_arrivals(prompts, budgets, dt)
 
     def run_static(dt):
         """Batches of BATCH in arrival order; each batch dispatches once its
@@ -372,7 +371,6 @@ def pair_servepath(out):
         ct_runs.append(run_continuous(dt))
     st_tps, st_lat = sorted(st_runs, key=lambda r: r[0])[REPEATS // 2]
     ct_tps, ct_lat = sorted(ct_runs, key=lambda r: r[0])[REPEATS // 2]
-    pct = lambda xs, q: float(np.percentile(np.asarray(xs), q))
     rec = {
         "status": "ok",
         "requests": R, "prompt_len": PROMPT,
@@ -406,12 +404,14 @@ def pair_decodepath(out):
     per-slot-rectangle + small-SDPA baseline. Median of interleaved repeats,
     staggered arrivals calibrated exactly like servepath."""
     import jax
-    import numpy as np
 
     from repro.config import get_arch, reduced_variant
     from repro.kernels.dispatch import resolve_backend
     from repro.models import init_lm
-    from repro.serve import ContinuousScheduler, EngineConfig, Request, ServeEngine
+    from repro.serve import (
+        ContinuousScheduler, EngineConfig, ServeEngine, ragged_stream, with_arrivals,
+    )
+    from repro.serve.metrics import percentile as pct
 
     cfg = reduced_variant(get_arch("smollm-135m")).replace(
         dtype="float32", param_dtype="float32", num_layers=4, d_model=256,
@@ -419,9 +419,7 @@ def pair_decodepath(out):
     params = init_lm(cfg, jax.random.key(0))
     R, PROMPT, MAX_GEN, SLOTS, REPEATS = 16, 32, 48, 4, 5
     PAGE = 16
-    rng = np.random.RandomState(0)
-    prompts = [rng.randint(0, cfg.vocab_size, size=PROMPT).astype(np.int32) for _ in range(R)]
-    budgets = [int(g) for g in rng.randint(8, MAX_GEN + 1, size=R)]  # ragged
+    prompts, budgets = ragged_stream(cfg.vocab_size, R, PROMPT, MAX_GEN, seed=0)
 
     def mk_engine(layout):
         return ServeEngine(
@@ -437,10 +435,7 @@ def pair_decodepath(out):
 
     def run_arm(name, dt):
         t0 = time.time()
-        comps = scheds[name].run(
-            [Request(rid=i, tokens=prompts[i], max_new_tokens=budgets[i], arrival=i * dt)
-             for i in range(R)]
-        )
+        comps = scheds[name].run(with_arrivals(prompts, budgets, dt))
         wall = time.time() - t0
         return sum(len(c.tokens) for c in comps) / max(wall, 1e-9), [c.latency for c in comps]
 
@@ -457,7 +452,6 @@ def pair_decodepath(out):
     for _ in range(REPEATS):
         for name in ("dense", "paged"):
             runs[name].append(run_arm(name, dt))
-    pct = lambda xs, q: float(np.percentile(np.asarray(xs), q))
     med = {k: sorted(v, key=lambda r: r[0])[REPEATS // 2] for k, v in runs.items()}
     pool = engines["paged"].pool
     rec = {
@@ -500,22 +494,21 @@ def pair_fleetpath(out):
     percentiles (admitted - arrival) that the Completion split now makes
     visible — the router-attributable share of latency."""
     import jax
-    import numpy as np
 
     from repro.config import get_arch, reduced_variant
     from repro.models import init_lm
     from repro.serve import (
-        ContinuousScheduler, EngineConfig, FleetRouter, Request, ServeEngine,
+        ContinuousScheduler, EngineConfig, FleetRouter, ServeEngine,
+        ragged_stream, with_arrivals,
     )
+    from repro.serve.metrics import percentile as pct
 
     cfg = reduced_variant(get_arch("smollm-135m")).replace(
         dtype="float32", param_dtype="float32", num_layers=4, d_model=256,
     )
     params = init_lm(cfg, jax.random.key(0))
     R, PROMPT, MAX_GEN, SLOTS, REPEATS = 16, 32, 48, 4, 5
-    rng = np.random.RandomState(0)
-    prompts = [rng.randint(0, cfg.vocab_size, size=PROMPT).astype(np.int32) for _ in range(R)]
-    budgets = [int(g) for g in rng.randint(8, MAX_GEN + 1, size=R)]  # ragged
+    prompts, budgets = ragged_stream(cfg.vocab_size, R, PROMPT, MAX_GEN, seed=0)
 
     def mk_ecfg(slots, disagg=False):
         return EngineConfig(
@@ -535,10 +528,7 @@ def pair_fleetpath(out):
 
     def run_arm(name, dt):
         t0 = time.time()
-        comps = arms[name].run(
-            [Request(rid=i, tokens=prompts[i], max_new_tokens=budgets[i], arrival=i * dt)
-             for i in range(R)]
-        )
+        comps = arms[name].run(with_arrivals(prompts, budgets, dt))
         wall = time.time() - t0
         return (
             sum(len(c.tokens) for c in comps) / max(wall, 1e-9),
@@ -560,7 +550,6 @@ def pair_fleetpath(out):
     for _ in range(REPEATS):
         for name in ("mono", "fleet"):
             runs[name].append(run_arm(name, dt))
-    pct = lambda xs, q: float(np.percentile(np.asarray(xs), q))
     med = {k: sorted(v, key=lambda r: r[0])[REPEATS // 2] for k, v in runs.items()}
     rec = {
         "status": "ok",
@@ -592,6 +581,130 @@ def pair_fleetpath(out):
         rec["handoffs"],
     )
     out["fleetpath:router_disagg_vs_mono"] = rec
+
+
+def pair_specpath(out):
+    """Shared-prefix + speculative-decoding A/B (the prefix-cache PR's
+    headline number): the SAME hot-prefix request stream — >=50% of prompts
+    open with a common 24-token head — against (A) the plain paged engine
+    and (B) the same engine with the radix prefix cache and the
+    ensemble-drafter speculative decoder enabled. The headline is PREFILL
+    WORK: hot admissions splice the shared head's pages out of the cache
+    and prefill only the uncovered tail, so pages_allocated and
+    prefill_tokens drop roughly with the shared fraction while greedy
+    tokens stay bitwise identical (pinned by tests/test_serve.py).
+
+    The drafter is the target itself (same config + params): a random-init
+    repro has no trained drafter/target pair, so the pair exercises the
+    MATCHED-drafter limit — acceptance ~1.0, every verify certifying k+1
+    tokens — which checks the full draft/verify/emit path at its ceiling;
+    any registry drafter plugs into the same (dcfg, dparams) slot. tok/s,
+    p50/p95, prefix hit rate and draft acceptance rate are all recorded."""
+    import jax
+
+    from repro.config import get_arch, reduced_variant
+    from repro.models import init_lm
+    from repro.serve import (
+        ContinuousScheduler, EngineConfig, ServeEngine, hot_prefix_stream,
+        with_arrivals,
+    )
+    from repro.serve.metrics import percentile as pct
+
+    cfg = reduced_variant(get_arch("smollm-135m")).replace(
+        dtype="float32", param_dtype="float32", num_layers=4, d_model=256,
+    )
+    params = init_lm(cfg, jax.random.key(0))
+    R, PROMPT, MAX_GEN, SLOTS, REPEATS = 16, 32, 48, 4, 5
+    PAGE, SHARED, HEAD, SPEC_K = 8, 0.6, 24, 4
+    prompts, budgets = hot_prefix_stream(
+        cfg.vocab_size, R, PROMPT, MAX_GEN, seed=0,
+        shared_fraction=SHARED, prefix_len=HEAD,
+    )
+
+    def mk_ecfg(**kw):
+        # prefill_bucket == page size: a spliced admission's uncovered tail
+        # bills its true length instead of padding back up to the default
+        # 32-token bucket (plain prompts are exactly 32 tokens either way).
+        return EngineConfig(
+            max_slots=SLOTS, max_seq=PROMPT + MAX_GEN, max_new=MAX_GEN,
+            decode_chunk=8, kv_layout="paged", page_size=PAGE,
+            prefill_bucket=PAGE, **kw,
+        )
+
+    engines = {
+        "plain": ServeEngine(cfg, params, mk_ecfg()),
+        "boosted": ServeEngine(
+            cfg, params, mk_ecfg(prefix_cache=True, spec_k=SPEC_K),
+            drafter=(cfg, params),
+        ),
+    }
+    scheds = {k: ContinuousScheduler(e) for k, e in engines.items()}
+
+    def run_arm(name, dt):
+        t0 = time.time()
+        comps = scheds[name].run(with_arrivals(prompts, budgets, dt))
+        wall = time.time() - t0
+        return sum(len(c.tokens) for c in comps) / max(wall, 1e-9), [c.latency for c in comps]
+
+    # warm both compile caches (the boosted warmup also traces the splice
+    # and spec programs), calibrate arrivals to the plain arm's service time
+    for name, eng in engines.items():
+        eng.warmup(prompts[0])
+        run_arm(name, 0.0)
+    t0 = time.time()
+    run_arm("plain", 0.0)
+    dt = max((time.time() - t0) / (2 * R), 1e-3)
+
+    runs = {"plain": [], "boosted": []}
+    for _ in range(REPEATS):
+        for name in ("plain", "boosted"):
+            runs[name].append(run_arm(name, dt))
+    med = {k: sorted(v, key=lambda r: r[0])[REPEATS // 2] for k, v in runs.items()}
+    # schedulers reset the engine (and its stats) at the top of every run,
+    # so each stats dict now holds exactly the LAST timed pass of the stream
+    ps, bs = engines["plain"].stats, engines["boosted"].stats
+    admitted = max(bs["admitted"], 1)
+    proposed = max(bs["draft_proposed"], 1)
+    rec = {
+        "status": "ok",
+        "requests": R, "prompt_len": PROMPT, "budgets": budgets,
+        "slots": SLOTS, "page_size": PAGE, "spec_k": SPEC_K,
+        "shared_fraction": SHARED, "prefix_len": HEAD,
+        "arrival_dt_s": round(dt, 4),
+        "plain_tok_per_s": round(med["plain"][0], 2),
+        "boosted_tok_per_s": round(med["boosted"][0], 2),
+        "speedup": round(med["boosted"][0] / max(med["plain"][0], 1e-9), 3),
+        "plain_p50_s": round(pct(med["plain"][1], 50), 4),
+        "plain_p95_s": round(pct(med["plain"][1], 95), 4),
+        "boosted_p50_s": round(pct(med["boosted"][1], 50), 4),
+        "boosted_p95_s": round(pct(med["boosted"][1], 95), 4),
+        # the headline: prefill work per pass of the identical stream
+        "plain_prefill_tokens": ps["prefill_tokens"],
+        "boosted_prefill_tokens": bs["prefill_tokens"],
+        "plain_pages_allocated": ps["pages_allocated"],
+        "boosted_pages_allocated": bs["pages_allocated"],
+        "plain_prefill_dispatches": ps["prefill_dispatches"],
+        "boosted_prefill_dispatches": bs["prefill_dispatches"],
+        "prefix_hit_rate": round(bs["spliced_admissions"] / admitted, 3),
+        "spliced_admissions": bs["spliced_admissions"],
+        "spliced_pages": bs["spliced_pages"],
+        "cow_copies": bs["cow_copies"],
+        "draft_acceptance_rate": round(bs["draft_accepted"] / proposed, 3),
+        "spec_steps": bs["spec_steps"],
+        "jax_backend": jax.default_backend(),
+    }
+    log.info(
+        "specpath: boosted=%.1f tok/s plain=%.1f tok/s speedup=%.2fx | "
+        "prefill tokens %d->%d pages %d->%d dispatches %d->%d | "
+        "hit rate %.0f%% (%d spliced pages, %d CoW) acceptance %.0f%%",
+        rec["boosted_tok_per_s"], rec["plain_tok_per_s"], rec["speedup"],
+        rec["plain_prefill_tokens"], rec["boosted_prefill_tokens"],
+        rec["plain_pages_allocated"], rec["boosted_pages_allocated"],
+        rec["plain_prefill_dispatches"], rec["boosted_prefill_dispatches"],
+        100 * rec["prefix_hit_rate"], rec["spliced_pages"], rec["cow_copies"],
+        100 * rec["draft_acceptance_rate"],
+    )
+    out["specpath:prefix_spec_vs_plain"] = rec
 
 
 def _ensemblepath_setup(args):
@@ -758,6 +871,11 @@ PAIRS = {
     "fleetpath": PairSpec(
         help="routed fleet (2 replicas, one disaggregated pair) vs monolithic engine",
         run=_nullary(pair_fleetpath),
+    ),
+    "specpath": PairSpec(
+        help="radix prefix cache + speculative decoding vs plain paged engine "
+             "on hot-prefix traffic",
+        run=_nullary(pair_specpath),
     ),
     "ensemblepath": PairSpec(
         help="grouped ClientBank ensemble vs K-way looped client forwards (mixed archs)",

@@ -51,6 +51,8 @@ from repro.serve import (
     KVPool,
     Request,
     ServeEngine,
+    hot_prefix_stream,
+    latency_summary,
     static_generate,
 )
 from repro.kernels import policy_from_flags
@@ -91,6 +93,24 @@ def build_parser() -> argparse.ArgumentParser:
                    help="split each replica into a disaggregated prefill/decode "
                         "worker pair (paged KV layout only; the pair colocates "
                         "on a single-device replica)")
+    # prefix cache + speculative decoding (continuous arm)
+    p.add_argument("--prefix-cache", action="store_true",
+                   help="radix prefix cache over refcounted KV pages: hot "
+                        "admissions splice resident prompt pages and prefill "
+                        "only the uncovered tail (paged layout only)")
+    p.add_argument("--spec-decode", action="store_true",
+                   help="speculative decoding: a small drafter proposes "
+                        "--spec-k tokens per step, the target verifies them "
+                        "in one batched forward (greedy/temperature 0 only)")
+    p.add_argument("--drafter", default="smollm-135m",
+                   help="registry arch drafting for --spec-decode (reduced "
+                        "alongside --reduced; must share the target's vocab "
+                        "and be attention-only with a full cache)")
+    p.add_argument("--spec-k", type=int, default=4,
+                   help="draft tokens per verify step for --spec-decode")
+    p.add_argument("--hot-fraction", type=float, default=0.0,
+                   help="fraction of requests sharing a hot prompt prefix "
+                        "(exercises --prefix-cache; 0 = fully cold traffic)")
     # paged KV pool (continuous arm)
     p.add_argument("--kv-layout", default="paged", choices=("paged", "dense"),
                    help="paged: KVPool + flash-decode; dense: per-slot rectangle + SDPA")
@@ -160,6 +180,48 @@ def validate_args(args, cfg) -> None:
                 "handoff moves sealed KV PAGES between worker pools, and the "
                 "dense per-slot rectangle has no page units to hand off."
             )
+        if args.prefix_cache and args.kv_layout == "dense":
+            raise SystemExit(
+                "--prefix-cache requires --kv-layout paged: prefix sharing IS "
+                "page-table splicing — the dense per-slot rectangle has no "
+                "page units to share."
+            )
+        if not 0.0 <= args.hot_fraction <= 1.0:
+            raise SystemExit(f"--hot-fraction must be in [0, 1], got {args.hot_fraction}")
+        if args.spec_decode:
+            if args.spec_k < 1:
+                raise SystemExit(f"--spec-k must be >= 1, got {args.spec_k}")
+            if args.kv_layout != "paged":
+                raise SystemExit(
+                    "--spec-decode requires --kv-layout paged: the batched "
+                    "verify is an extend over the page-table cache view."
+                )
+            if args.temperature > 0.0:
+                raise SystemExit(
+                    "--spec-decode requires --temperature 0: the accept-"
+                    "longest-greedy-run verify is a greedy parity contract."
+                )
+            dcfg = _drafter_config(args)
+            non_attn = sorted({m for m, _ in group_pattern(dcfg) if m != "attn"})
+            if non_attn:
+                raise SystemExit(
+                    f"--drafter {dcfg.name} has {non_attn} mixers: a recurrent "
+                    "carry cannot roll back past a rejected draft. Draft with "
+                    "an attention-only arch."
+                )
+            if dcfg.sliding_window > 0:
+                raise SystemExit(
+                    f"--drafter {dcfg.name} uses a sliding window "
+                    f"({dcfg.sliding_window}): the ring cache cannot roll back "
+                    "rejected drafts (stale writes alias earlier positions). "
+                    "Draft with a full-attention arch."
+                )
+            if dcfg.vocab_size != cfg.vocab_size:
+                raise SystemExit(
+                    f"--drafter {dcfg.name} vocab ({dcfg.vocab_size}) does not "
+                    f"match {cfg.name} ({cfg.vocab_size}): drafted token ids "
+                    "would be meaningless to the verifier."
+                )
         # dry-construct the exact EngineConfig (and, for the paged layout,
         # the KVPool — which bills the pool floor against the MODEL's cache
         # length) that every fleet replica will build: both are pure-host,
@@ -203,6 +265,16 @@ def run_static(args, cfg, params) -> None:
     log.info("sample continuation (seq 0): %s", out[0, :16].tolist())
 
 
+def _drafter_config(args):
+    """The drafter ModelConfig for --spec-decode: reduced alongside the
+    target (a full-size drafter against a reduced target would be slower
+    than the thing it accelerates)."""
+    dcfg = get_arch(args.drafter)
+    if args.reduced:
+        dcfg = reduced_variant(dcfg).replace(dtype="float32", param_dtype="float32")
+    return dcfg
+
+
 def _continuous_engine_config(args) -> EngineConfig:
     max_seq = args.prompt_len + args.gen
     if args.kv_layout == "paged":
@@ -219,6 +291,8 @@ def _continuous_engine_config(args) -> EngineConfig:
         page_size=args.page_size,
         pool_pages=args.pool_pages,
         disagg=args.disagg,
+        prefix_cache=args.prefix_cache,
+        spec_k=args.spec_k if args.spec_decode else 0,
     )
 
 
@@ -231,6 +305,10 @@ def build_fleet(args, cfg, params) -> list:
     router, degenerate placement."""
     replicas = _effective_replicas(args)
     ecfg = _continuous_engine_config(args)
+    drafter = None
+    if args.spec_decode:
+        dcfg = _drafter_config(args)
+        drafter = (dcfg, init_lm(dcfg, jax.random.key(args.seed + 1)))
     n_dev = len(jax.devices())
     if n_dev > 1 and replicas > 1:
         subs = replica_meshes(make_fleet_mesh(replicas))
@@ -241,21 +319,30 @@ def build_fleet(args, cfg, params) -> list:
         pmesh = dmesh = sub
         if args.disagg and sub is not None:
             pmesh, dmesh = disagg_submeshes(sub)
-        engines.append(ServeEngine(cfg, params, ecfg, mesh=dmesh, prefill_mesh=pmesh))
+        engines.append(
+            ServeEngine(
+                cfg, params, ecfg, mesh=dmesh, prefill_mesh=pmesh, drafter=drafter
+            )
+        )
     return engines
 
 
 def run_continuous(args, cfg, params) -> None:
-    data = make_token_stream(args.seed, cfg.vocab_size, args.requests, args.prompt_len)
     dt = 1.0 / args.request_rate if args.request_rate > 0 else 0.0
-    requests = [
-        Request(
-            rid=i,
-            tokens=data["tokens"][i, : args.prompt_len].astype(np.int32),
-            max_new_tokens=args.gen,
-            arrival=i * dt,
+    if args.hot_fraction > 0:
+        prompts, _ = hot_prefix_stream(
+            cfg.vocab_size, args.requests, args.prompt_len, args.gen,
+            seed=args.seed, shared_fraction=args.hot_fraction,
         )
-        for i in range(args.requests)
+    else:
+        data = make_token_stream(args.seed, cfg.vocab_size, args.requests, args.prompt_len)
+        prompts = [
+            data["tokens"][i, : args.prompt_len].astype(np.int32)
+            for i in range(args.requests)
+        ]
+    requests = [
+        Request(rid=i, tokens=p, max_new_tokens=args.gen, arrival=i * dt)
+        for i, p in enumerate(prompts)
     ]
     engines = build_fleet(args, cfg, params)
     sched = (
@@ -268,20 +355,16 @@ def run_continuous(args, cfg, params) -> None:
     t0 = time.time()
     completions = sched.run(requests)
     wall = time.time() - t0
-    toks = sum(len(c.tokens) for c in completions)
-
-    def pct(xs, q):
-        xs = sorted(xs)
-        return xs[min(len(xs) - 1, int(len(xs) * q))] if xs else 0.0
-
-    lats = [c.latency for c in completions]
-    waits = [c.queue_wait for c in completions]
+    # one summary shape for every path — the N=1 ContinuousScheduler run
+    # reports the same queue-wait split the fleet always has (the deferral
+    # latency a single tight engine causes is just as real as a router's)
+    s = latency_summary(completions, wall)
     log.info(
         "fleet[%d%s]: %d reqs, %d tokens in %.3fs (%.1f tok/s) "
         "p50=%.3fs p95=%.3fs queue-wait p50=%.3fs p95=%.3fs",
         len(engines), "+disagg" if args.disagg else "",
-        len(completions), toks, wall, toks / max(wall, 1e-9),
-        pct(lats, 0.5), pct(lats, 0.95), pct(waits, 0.5), pct(waits, 0.95),
+        len(completions), int(s["tokens"]), wall, s["tok_per_s"],
+        s["p50_s"], s["p95_s"], s["queue_wait_p50_s"], s["queue_wait_p95_s"],
     )
     for i, eng in enumerate(engines):
         served = sum(1 for c in completions if c.replica == i)
@@ -298,9 +381,30 @@ def run_continuous(args, cfg, params) -> None:
                 i, eng.pool.n_pages, eng.pool.page_size, eng.layout,
                 eng.stats["page_appends"],
             )
+        if args.prefix_cache:
+            admitted = max(eng.stats["admitted"], 1)
+            log.info(
+                "replica %d prefix cache: %d/%d admissions spliced "
+                "(hit rate %.0f%%), %d pages reused, %d CoW copies",
+                i, eng.stats["spliced_admissions"], eng.stats["admitted"],
+                100.0 * eng.stats["spliced_admissions"] / admitted,
+                eng.stats["spliced_pages"], eng.stats["cow_copies"],
+            )
+        if args.spec_decode:
+            proposed = max(eng.stats["draft_proposed"], 1)
+            log.info(
+                "replica %d spec decode: %d verify steps, %d/%d drafts "
+                "accepted (%.0f%%)",
+                i, eng.stats["spec_steps"], eng.stats["draft_accepted"],
+                eng.stats["draft_proposed"],
+                100.0 * eng.stats["draft_accepted"] / proposed,
+            )
     if isinstance(sched, FleetRouter) and len(engines) > 1:
-        log.info("router: %d routed, %d requeued-on-defer", sched.stats["routed"],
-                 sched.stats["requeued"])
+        log.info(
+            "router: %d routed, %d requeued-on-defer, %d prefix-affinity hits",
+            sched.stats["routed"], sched.stats["requeued"],
+            sched.stats["affinity_hits"],
+        )
     log.info("sample continuation (rid 0): %s", completions[0].tokens[:16].tolist())
 
 

@@ -12,6 +12,7 @@ from repro.models.transformer import (
     lm_logits,
     lm_prefill,
     lm_decode,
+    lm_extend,
     init_lm_state,
     layer_kinds,
     group_period,
@@ -34,6 +35,7 @@ __all__ = [
     "lm_logits",
     "lm_prefill",
     "lm_decode",
+    "lm_extend",
     "init_lm_state",
     "layer_kinds",
     "group_period",

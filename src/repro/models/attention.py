@@ -10,7 +10,9 @@ algorithm; this module is its lowering-friendly pure-JAX twin.
 Entry points:
   * :func:`attn_train`   — full-sequence causal (or bidirectional) attention;
   * :func:`attn_prefill` — like train but also returns the filled KV cache;
-  * :func:`attn_decode`  — one-token step against an existing cache.
+  * :func:`attn_decode`  — one-token step against an existing cache;
+  * :func:`attn_extend`  — an S-token run against an existing PAGED cache at
+    per-row start positions (spliced-tail prefill / speculative verify).
 
 The cache for sliding-window layers is a ring buffer of ``window`` slots so a
 500k-token context costs O(window) memory for SWA archs.
@@ -485,6 +487,62 @@ def attn_decode(params, x, cfg, cache, pos, page_table=None):
     out = _sdpa_small(q, k, v, bias, cfg)
     out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
     return constrain(out, "batch", None, None), {"k": k, "v": v}
+
+
+def attn_extend(params, x, cfg, cache, pos, page_table):
+    """Multi-token continuation against an existing PAGED cache.
+
+    x: (B, S, d); ``pos``: (B,) int32 per-row start positions — row ``b``'s
+    tokens occupy logical positions ``pos[b] .. pos[b]+S-1``. This is the
+    primitive behind prefix-cache admission (prefill only the uncovered tail
+    after a page-table splice) and speculative verify (score k draft tokens
+    in one forward): both need "prefill semantics, but starting mid-cache",
+    which neither attn_prefill (always position 0) nor attn_decode (S == 1)
+    provides.
+
+    K/V are scattered into the pages FIRST and attended after (each query
+    sees every position ≤ its own through the gathered table view), so pad
+    tail positions — and draft tokens later rejected — hold garbage that was
+    never attended by any surviving query and are simply overwritten by the
+    next write at that position: the same write-before-attend invariant that
+    makes bucketed-prefill pad tails and speculative rollback free.
+
+    Ring (sliding-window) layouts are rejected: a wrapped write could land in
+    a page-table entry another request shares (prefix cache) or that a
+    rejected draft already dirtied at a DIFFERENT logical position — the
+    engine gates SWA archs off this path entirely.
+
+    Writes past the table extent (pad tails of a bucketed extend group) are
+    redirected to the table's LAST page — the engine's scratch page by
+    construction (``DecodeWorker`` sizes the device buffer one page past the
+    pool and stale/unallocated table entries already point there)."""
+    if cfg.sliding_window > 0:
+        raise ValueError(
+            "attn_extend requires a full (non-ring) cache: sliding-window "
+            "layers wrap writes into shared/live pages"
+        )
+    b, s, _ = x.shape
+    posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    idx = posv[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]  # (B, S)
+    q, k_new, v_new = _project_qkv(params, x, cfg, idx)
+    ps = cache["k_pages"].shape[1]
+    extent = page_table.shape[1] * ps
+    in_range = idx < extent
+    pid = jnp.take_along_axis(page_table, jnp.minimum(idx // ps, page_table.shape[1] - 1), axis=1)
+    pid = jnp.where(in_range, pid, cache["k_pages"].shape[0] - 1)
+    off = idx % ps
+    k_pages = cache["k_pages"].at[pid, off].set(k_new.astype(cache["k_pages"].dtype))
+    v_pages = cache["v_pages"].at[pid, off].set(v_new.astype(cache["v_pages"].dtype))
+    # gather the logical cache through the table and attend densely — extend
+    # runs at admission/verify cadence, not per token; a fused gather kernel
+    # (flash_decode's big sibling) is future work.
+    k_full = k_pages[page_table].reshape(b, extent, *k_pages.shape[2:])
+    v_full = v_pages[page_table].reshape(b, extent, *v_pages.shape[2:])
+    valid = jnp.arange(extent, dtype=jnp.int32)[None, None, :] <= idx[:, :, None]
+    bias = jnp.where(valid, 0.0, NEG_INF)  # (B, S, extent)
+    out = _sdpa_small(q, k_full, v_full, bias, cfg)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return constrain(out, "batch", None, None), {"k_pages": k_pages, "v_pages": v_pages}
 
 
 def _attn_decode_paged(params, q, k_new, v_new, cfg, cache, posv, page_table, x):

@@ -117,13 +117,21 @@ def _init_block(key, cfg, mixer: str, ffn: Optional[str], dtype):
 
 
 def _apply_mixer(p, x, cfg, mixer, mode, state, pos, page_table=None):
-    """mode: train | prefill | decode. Returns (y, new_state)."""
+    """mode: train | prefill | decode | extend. Returns (y, new_state)."""
     if mixer == "attn":
         if mode == "train":
             return attn_lib.attn_train(p["attn"], x, cfg), None
         if mode == "prefill":
             return attn_lib.attn_prefill(p["attn"], x, cfg, state)
+        if mode == "extend":
+            return attn_lib.attn_extend(p["attn"], x, cfg, state, pos, page_table)
         return attn_lib.attn_decode(p["attn"], x, cfg, state, pos, page_table=page_table)
+    if mode == "extend":
+        # a recurrent carry has no per-position cache to continue from: the
+        # whole point of extend (start mid-sequence, roll back rejected
+        # positions for free) is attention-cache-shaped. The engine gates
+        # ssm/hybrid archs off the prefix-cache/spec-decode paths.
+        raise ValueError(f"extend mode requires attention mixers, got {mixer!r}")
     if mixer == "mamba":
         if mode == "train":
             return mamba_lib.mamba_forward(p["mamba"], x, cfg), None
@@ -399,6 +407,28 @@ def lm_prefill(params, cfg, batch, state, last_index=None):
         idx = jnp.broadcast_to(jnp.asarray(last_index, jnp.int32).reshape(-1), (x.shape[0],))
         x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
     logits = lm_logits(params, cfg, x_last)
+    return logits, new_state
+
+
+def lm_extend(params, cfg, tokens, state, pos, page_table):
+    """Multi-token continuation against an existing PAGED state: consume
+    ``tokens`` (B, S) starting at per-row positions ``pos`` (B,) and return
+    the logits of EVERY fed position ((B, S, V)) plus the updated state.
+
+    This is the third point on the prefill↔decode line: prefill consumes a
+    whole prompt at position 0, decode consumes one token mid-cache, extend
+    consumes a short run mid-cache — the primitive behind prefix-cache tail
+    prefill (only the tokens the radix splice didn't cover) and speculative
+    verify (score all k draft tokens in one dispatch). All-position logits
+    come back because verify needs each draft's predecessor logits; tail
+    prefill just takes its true-last row."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"]["table"].astype(dtype)[tokens]
+    x = constrain(x, "batch", None, None)
+    x, aux, new_state = _scan_blocks(
+        params, cfg, x, "extend", state=state, pos=pos, page_table=page_table
+    )
+    logits = lm_logits(params, cfg, x)
     return logits, new_state
 
 

@@ -6,19 +6,32 @@
   on-device sampling, O(1) host syncs per chunk, per-slot positions), with
   :class:`ServeEngine` as their colocated composition — one fleet replica.
 * :mod:`repro.serve.kv_pool`   — paged KV memory: fixed-size page pool +
-  free list + per-slot page tables (the default ``kv_layout="paged"``; HBM
-  scales with live tokens, decode attention runs the flash-decode kernel),
-  plus the ``donate``/``adopt`` handoff protocol between worker pools.
+  free list + per-slot page tables + per-page refcounts (the default
+  ``kv_layout="paged"``; HBM scales with live tokens, decode attention runs
+  the flash-decode kernel), plus the ``donate``/``adopt`` handoff protocol
+  between worker pools and the ``attach``/``cow`` sharing transitions.
+* :mod:`repro.serve.prefix_cache` — radix trie over resident page runs:
+  hot admissions splice matched pages into a fresh slot's table and prefill
+  only the uncovered tail; LRU eviction only ever frees orphaned pages.
+* :mod:`repro.serve.spec_decode` — ensemble-drafter speculative decoding:
+  a small registry model drafts k tokens, the target verifies them in one
+  batched extend — greedy token parity with plain decode is the contract.
 * :mod:`repro.serve.scheduler` — :class:`FleetRouter`: request queue +
-  least-loaded admission across N replicas, requeue-on-defer, per-replica
-  eviction/drain, arrival clock; ``ContinuousScheduler`` is the N=1 case.
+  prefix-affinity/least-loaded admission across N replicas,
+  requeue-on-defer, per-replica eviction/drain, arrival clock;
+  ``ContinuousScheduler`` is the N=1 case.
 * :mod:`repro.serve.static`    — the static-batch baseline arm, fused into
   a single dispatch (no per-token host sync; always the dense cache — the
   cross-layout parity oracle).
+* :mod:`repro.serve.traffic` / :mod:`repro.serve.metrics` — shared seeded
+  request streams and latency/queue-wait percentile summaries, used by the
+  launcher, the perf pairs and the scheduler property tests alike.
 
 A/B: ``python -m benchmarks.perf_hillclimb --pair servepath`` (continuous vs
-static), ``--pair decodepath`` (paged-flash vs dense-SDPA decode) and
-``--pair fleetpath`` (routed disaggregated fleet vs monolithic engine).
+static), ``--pair decodepath`` (paged-flash vs dense-SDPA decode),
+``--pair fleetpath`` (routed disaggregated fleet vs monolithic engine) and
+``--pair specpath`` (prefix cache + speculative decoding vs plain engine on
+hot-prefix traffic).
 """
 from repro.serve.engine import (
     DecodeState,
@@ -30,6 +43,8 @@ from repro.serve.engine import (
     sample_tokens,
 )
 from repro.serve.kv_pool import KVPool
+from repro.serve.metrics import latency_summary, percentile
+from repro.serve.prefix_cache import PrefixCache
 from repro.serve.scheduler import (
     Completion,
     ContinuousScheduler,
@@ -38,7 +53,14 @@ from repro.serve.scheduler import (
     MonotonicClock,
     Request,
 )
+from repro.serve.spec_decode import SpecDecoder
 from repro.serve.static import make_static_generator, static_generate
+from repro.serve.traffic import (
+    hot_prefix_stream,
+    ragged_stream,
+    staggered_stream,
+    with_arrivals,
+)
 
 __all__ = [
     "DecodeState",
@@ -47,7 +69,9 @@ __all__ = [
     "KVHandoff",
     "KVPool",
     "PrefillWorker",
+    "PrefixCache",
     "ServeEngine",
+    "SpecDecoder",
     "sample_tokens",
     "Completion",
     "ContinuousScheduler",
@@ -55,6 +79,12 @@ __all__ = [
     "ManualClock",
     "MonotonicClock",
     "Request",
+    "latency_summary",
+    "percentile",
+    "hot_prefix_stream",
+    "ragged_stream",
+    "staggered_stream",
+    "with_arrivals",
     "make_static_generator",
     "static_generate",
 ]

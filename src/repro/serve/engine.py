@@ -65,7 +65,7 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.models import group_pattern, init_lm_state, lm_decode, lm_prefill
+from repro.models import group_pattern, init_lm_state, lm_decode, lm_extend, lm_prefill
 from repro.serve.kv_pool import KVPool
 from repro.sharding import infer_param_specs, shard_engine_state
 
@@ -101,6 +101,8 @@ class EngineConfig:
     page_size: int = 16  # tokens per KV page (power of two)
     pool_pages: int = 0  # pool capacity; 0 => max_slots × full per-slot width
     disagg: bool = False  # prefill and decode as separate fleet workers
+    prefix_cache: bool = False  # radix prefix cache over refcounted pages
+    spec_k: int = 0  # speculative decoding: drafts per verify step (0 = off)
 
     def __post_init__(self):
         for field in ("max_slots", "max_seq", "max_new", "decode_chunk", "prefill_bucket"):
@@ -110,6 +112,15 @@ class EngineConfig:
             raise ValueError(
                 f"EngineConfig.kv_layout must be one of {KV_LAYOUTS}, got {self.kv_layout!r}"
             )
+        if self.spec_k < 0:
+            raise ValueError(f"EngineConfig.spec_k must be >= 0, got {self.spec_k}")
+        if self.spec_k and self.temperature > 0.0:
+            raise ValueError(
+                "speculative decoding (spec_k > 0) requires temperature=0: the "
+                "accept-longest-greedy-run verify is a GREEDY parity contract; "
+                "sampled drafts would need rejection sampling the engine does "
+                "not implement. Drop --spec-decode or set --temperature 0."
+            )
         if self.kv_layout != "paged":
             if self.disagg:
                 raise ValueError(
@@ -117,6 +128,13 @@ class EngineConfig:
                     "handoff moves sealed KV PAGES between worker pools, and the "
                     "dense per-slot rectangle has no page units to hand off. Drop "
                     "--disagg or use --kv-layout paged."
+                )
+            if self.prefix_cache:
+                raise ValueError(
+                    'prefix_cache=True requires kv_layout="paged": prefix sharing '
+                    "IS page-table splicing — the dense per-slot rectangle has no "
+                    "page units to share. Drop --prefix-cache or use --kv-layout "
+                    "paged."
                 )
             return
         if self.page_size < 1 or (self.page_size & (self.page_size - 1)):
@@ -168,6 +186,9 @@ class KVHandoff(NamedTuple):
     n_alloc: int  # sealed pages per row (0 for the dense layout)
     staging_id: int  # staging-pool reservation on the source (-1 when none)
     source: Any  # the PrefillWorker that sealed this burst
+    tokens: Any = None  # (N, bucket) host prompt tokens — the adopting side
+    # feeds them to the speculative drafter's own prefill (and could re-derive
+    # prefix-cache keys); pure metadata, never needed by the target model
 
     @property
     def n(self) -> int:
@@ -200,16 +221,53 @@ def _engine_layout(cfg, ecfg: EngineConfig) -> str:
     return ecfg.kv_layout if has_attn else "dense"
 
 
+def _require_extend_capable(cfg, ecfg: EngineConfig, feature: str) -> None:
+    """Both prefix sharing and speculative verify run :func:`lm_extend` —
+    "prefill semantics starting mid-cache" — which only attention caches
+    support: a recurrent carry cannot start mid-sequence (splice) or roll
+    back rejected positions (verify), and an SWA ring wraps writes into
+    pages another request may share. Fail fast, pre-device."""
+    from repro.models.attention import cache_len
+
+    non_attn = [m for m, _ in group_pattern(cfg) if m != "attn"]
+    if non_attn:
+        raise ValueError(
+            f"{cfg.name}: {feature} requires attention-only mixers, found "
+            f"{sorted(set(non_attn))} — a recurrent carry cannot be spliced "
+            "mid-sequence or rolled back after a rejected draft"
+        )
+    if cache_len(cfg, ecfg.max_seq) != ecfg.max_seq:
+        raise ValueError(
+            f"{cfg.name}: {feature} requires a full (non-ring) KV cache, but "
+            f"sliding_window={cfg.sliding_window} < max_seq={ecfg.max_seq} "
+            "makes decode writes wrap into earlier pages — a wrapped write "
+            "would land in a page another request shares"
+        )
+
+
 def _fresh_stats() -> Dict[str, int]:
     return {
         "admitted": 0,
         "prefill_dispatches": 0,
+        "prefill_tokens": 0,
         "handoffs": 0,
         "decode_chunks": 0,
         "host_syncs": 0,
         "evicted": 0,
         "page_appends": 0,
+        "pages_allocated": 0,
         "table_resets": 0,
+        # prefix cache (serve/prefix_cache.py)
+        "prefix_hits": 0,
+        "spliced_admissions": 0,
+        "spliced_pages": 0,
+        "cow_copies": 0,
+        # speculative decoding (serve/spec_decode.py); the draft_* and
+        # spec_steps values are mirrors of on-device counters, refreshed at
+        # sync() — they ride the existing once-per-chunk host transfer
+        "spec_steps": 0,
+        "draft_proposed": 0,
+        "draft_accepted": 0,
     }
 
 
@@ -237,13 +295,11 @@ class PrefillWorker:
         self.layout = _engine_layout(cfg, ecfg)
         self.staging: Optional[KVPool] = KVPool(cfg, ecfg) if self.layout == "paged" else None
         self.stats = stats if stats is not None else _fresh_stats()
-        self._hid = 0  # staging reservation ids (handoff "slots")
         self._prefill_jit = jax.jit(self._prefill_fn)
         self.reset()
 
     def reset(self) -> None:
         self._rng = jax.random.key(self.ecfg.seed + 1)  # decode chain owns seed
-        self._hid = 0
         if self.staging is not None:
             self.staging.reset()
 
@@ -300,17 +356,19 @@ class PrefillWorker:
         staging_id, n_alloc = -1, 0
         if self.staging is not None:
             # backpressure: the staging pool caps how many sealed-but-not-
-            # adopted pages can be in flight; adopt() donates them back
+            # adopted pages can be in flight; adopt() donates them back. The
+            # reservation id comes from the pool's own staging counter so
+            # reset() can account (and reclaim) in-flight handoffs.
             n_alloc = self.staging.required_pages(lb)
-            staging_id, self._hid = self._hid, self._hid + 1
-            self.staging.alloc(staging_id, n * n_alloc)
+            staging_id, _ = self.staging.stage(n * n_alloc)
         self._rng, sealed, toks0 = self._prefill_jit(
             self.params, self._rng, jnp.asarray(padded), jnp.asarray(lens)
         )
         self.stats["prefill_dispatches"] += 1
+        self.stats["prefill_tokens"] += n * lb
         return KVHandoff(
             sealed=sealed, first_tok=toks0, true_lens=lens, budgets=buds,
-            n_alloc=n_alloc, staging_id=staging_id, source=self,
+            n_alloc=n_alloc, staging_id=staging_id, source=self, tokens=padded,
         )
 
     def release(self, handoff: KVHandoff) -> None:
@@ -322,10 +380,19 @@ class PrefillWorker:
 
 class DecodeWorker:
     """Bandwidth-bound half of the serving pair: owns the slots, the KV pool
-    and the chunked decode program; ingests sealed prefills via ``adopt``."""
+    and the chunked decode program; ingests sealed prefills via ``adopt``.
+
+    Two opt-in accelerations live here because they need the pool and the
+    slot state: the **radix prefix cache** (``ecfg.prefix_cache`` — hot
+    admissions splice resident pages and prefill only the tail, via
+    :meth:`admit_spliced`; spliced admissions must run on THIS worker, not
+    the prefill worker, because the matched pages are resident in THIS pool)
+    and **speculative decoding** (``ecfg.spec_k`` + a ``drafter`` — the
+    chunk program drafts/verifies through :class:`repro.serve.spec_decode.
+    SpecDecoder`)."""
 
     def __init__(self, cfg, params, ecfg: EngineConfig, *, mesh=None,
-                 stats: Optional[Dict[str, int]] = None):
+                 stats: Optional[Dict[str, int]] = None, drafter=None):
         self.cfg = cfg
         self.ecfg = ecfg
         self.mesh = mesh
@@ -339,10 +406,45 @@ class DecodeWorker:
         # and a conservative position estimate (reconciled downward at sync)
         self._meta: Dict[int, Tuple[int, int]] = {}
         self._pos_est: Dict[int, int] = {}
+        # pages a slot borrowed from the prefix cache instead of allocating
+        # (its billed load is discounted by exactly this many pages)
+        self._spliced: Dict[int, int] = {}
+        self.prefix = None
+        if ecfg.prefix_cache:
+            if self.layout != "paged":
+                raise ValueError(
+                    f"{cfg.name}: prefix_cache requires the paged layout, but this "
+                    "arch has no attention KV to page (it degrades to dense)"
+                )
+            _require_extend_capable(cfg, ecfg, "prefix_cache")
+            from repro.serve.prefix_cache import PrefixCache
+
+            self.prefix = PrefixCache(self.pool)
+        self._spec = None
+        if ecfg.spec_k > 0:
+            if drafter is None:
+                raise ValueError(
+                    "spec_k > 0 but no drafter: pass drafter=(cfg, params) — any "
+                    "registry config with attention-only mixers (e.g. a reduced "
+                    "smollm-135m) can draft"
+                )
+            if self.layout != "paged":
+                raise ValueError(
+                    f"{cfg.name}: spec_decode requires the paged layout — the "
+                    "batched verify is an lm_extend over the page-table view"
+                )
+            _require_extend_capable(cfg, ecfg, "spec_decode")
+            from repro.serve.spec_decode import SpecDecoder
+
+            self._spec = SpecDecoder(self, drafter[0], drafter[1], ecfg.spec_k)
+        elif drafter is not None:
+            raise ValueError("drafter given but spec_k == 0: set spec_k to enable it")
         # evicted slots whose table rows still point at returned pages; their
         # ride-along writes must be re-aimed at the scratch page before the
         # next chunk (unless adoption rewrites the row first)
         self._adopt_jit = jax.jit(self._adopt_fn)
+        self._splice_jit = jax.jit(self._splice_fn)
+        self._cow_jit = jax.jit(self._cow_fn)
         self._stale_slots: set = set()
         donate = () if jax.default_backend() == "cpu" else (1,)
         self._chunk_jit = jax.jit(self._chunk_fn, donate_argnums=donate)
@@ -405,6 +507,58 @@ class DecodeWorker:
             page_table=page_table,
         )
 
+    def _attn_page_map(self, kv, fn):
+        """Apply ``fn`` to every attention page-pool leaf of a kv pytree."""
+        kv = dict(kv)
+        for i, (mixer, _) in enumerate(group_pattern(self.cfg)):
+            if mixer != "attn":
+                continue
+            key = f"p{i}"
+            sub = dict(kv[key])
+            for name in ("k_pages", "v_pages"):
+                sub[name] = fn(sub[name])
+            kv[key] = sub
+        return kv
+
+    def _cow_fn(self, ds: DecodeState, src, dst):
+        """Copy-on-write device half: duplicate pages ``src`` (M,) into
+        ``dst`` (M,) on every attention leaf ((G, P, page, KH, hd) — page dim
+        is axis 1). The host half (KVPool.cow) already swapped the table
+        entry; ``src == dst == scratch`` rows are harmless self-copies."""
+        kv = self._attn_page_map(ds.kv, lambda big: big.at[:, dst].set(big[:, src]))
+        return ds._replace(kv=kv)
+
+    def _splice_fn(self, params, ds: DecodeState, tokens, slot, start, last_idx,
+                   budget, true_len, table_row, cow_src, cow_dst):
+        """One hot-prefix admission in ONE dispatch: the copy-on-write page
+        duplicate (scratch→scratch when none is needed), the slot's new
+        page-table row (spliced prefix pages + fresh tail pages), the tail
+        extend (only the tokens the radix match did NOT cover — this is the
+        whole point: a hot admission prefills ``tokens.shape[1]`` positions
+        instead of the full prompt), first-token sampling from the true last
+        prompt position, and the slot bookkeeping rewrite."""
+        e = self.ecfg
+        kv = self._attn_page_map(
+            ds.kv, lambda big: big.at[:, cow_dst].set(big[:, cow_src])
+        )
+        page_table = ds.page_table.at[slot].set(table_row)
+        logits, kv = lm_extend(
+            params, self.cfg, tokens, kv, jnp.reshape(start, (1,)), table_row[None, :]
+        )
+        rng, key = jax.random.split(ds.rng)
+        tok0 = sample_tokens(logits[:, last_idx], key, e.temperature)  # (1,)
+        return DecodeState(
+            kv=kv,
+            last_tok=ds.last_tok.at[slot, 0].set(tok0[0]),
+            pos=ds.pos.at[slot].set(true_len),
+            active=ds.active.at[slot].set(budget > 1),
+            out=ds.out.at[slot].set(0).at[slot, 0].set(tok0[0]),
+            n_out=ds.n_out.at[slot].set(1),
+            budget=ds.budget.at[slot].set(budget),
+            rng=rng,
+            page_table=page_table,
+        )
+
     def _chunk_fn(self, params, ds: DecodeState):
         cfg, e = self.cfg, self.ecfg
         rows = jnp.arange(e.max_slots, dtype=jnp.int32)
@@ -454,7 +608,12 @@ class DecodeWorker:
         self.free_slots = list(range(e.max_slots))
         self._meta = {}
         self._pos_est = {}
+        self._spliced = {}
         self._stale_slots = set()
+        if self.prefix is not None:
+            self.prefix.clear()  # refcounts are wiped by pool.reset() below
+        if self._spec is not None:
+            self._spec.reset()
         if self.pool is not None:
             self.pool.reset()
             # +1: the scratch page — the write target of idle slots' frozen
@@ -506,10 +665,47 @@ class DecodeWorker:
 
     def billed_pages(self) -> int:
         """Resident load: lifetime page bill of every resident request
-        (paged) or the resident count (dense)."""
+        (paged) or the resident count (dense). Spliced pages are DISCOUNTED —
+        a request serving its prompt off shared prefix pages loads the pool
+        (and the router's least-loaded comparison) only by the pages it
+        privately grows into."""
         if self.pool is None:
             return self.ecfg.max_slots - len(self.free_slots)
-        return sum(self._lifetime_pages(tl, b) for tl, b in self._meta.values())
+        return sum(
+            self._lifetime_pages(tl, b) - self._spliced.get(slot, 0)
+            for slot, (tl, b) in self._meta.items()
+        )
+
+    def prefix_probe(self, tokens) -> int:
+        """Resident full prefix pages for a prompt (0 without the cache) —
+        read-only: no LRU touch, so capacity checks and router affinity
+        probes never age the cache."""
+        if self.prefix is None:
+            return 0
+        return self.prefix.probe(np.asarray(tokens, np.int32).reshape(-1))
+
+    def _headroom(self) -> int:
+        """Pages obtainable for growth right now: the free list plus every
+        cache-only page eviction could reclaim on demand."""
+        free = self.pool.free_pages
+        if self.prefix is not None:
+            free += self.prefix.reclaimable()
+        return free
+
+    def _committed_growth(self) -> int:
+        """Pages resident requests may still demand: lifetime bill minus the
+        pages already in their tables (attached prefix pages count — they
+        never need re-allocating)."""
+        return sum(
+            max(self._lifetime_pages(tl, b) - len(self.pool.owned(slot)), 0)
+            for slot, (tl, b) in self._meta.items()
+        )
+
+    def _make_room(self, n_pages: int) -> None:
+        """Ensure ``n_pages`` are on the free list, evicting LRU cache-only
+        pages if needed (their refcount drops to zero — truly orphaned)."""
+        if self.prefix is not None and n_pages > self.pool.free_pages:
+            self.prefix.make_room(n_pages - self.pool.free_pages)
 
     def can_ever_admit(self, prompt_len: int, budget: int) -> bool:
         """Whether an EMPTY instance of this worker could admit the request
@@ -522,15 +718,24 @@ class DecodeWorker:
     def max_admissible(self, requests) -> int:
         """Largest prefix of ``requests`` ((tokens, budget) pairs) admissible
         RIGHT NOW: bounded by free slots and, in the paged layout, by pool
-        capacity net of every RESIDENT request's lifetime bill. Billing
+        capacity net of every RESIDENT request's remaining growth. Billing
         lifetimes (not just prefills — budgets are known at admission) means
         residents can always grow to their full budget: a scheduler that
         admits through this can never hit mid-decode pool exhaustion; a
-        tight pool defers requests instead of crashing the run."""
+        tight pool defers requests instead of crashing the run.
+
+        With the prefix cache, capacity = free pages + reclaimable cache
+        pages, and each candidate still bills its FULL lifetime: a spliced
+        admission consumes ``lifetime - matched`` fresh pages but pins its
+        ``matched`` pages un-reclaimable (and the r==0 boundary case trades
+        one splice for one CoW page), so lifetime is the exact worst-case
+        claim either way — the sharing win shows up in residents' committed
+        growth (attached pages are already in their tables), not in an
+        optimistic candidate discount."""
         n = min(len(requests), len(self.free_slots))
         if self.pool is None:
             return n
-        free = self.pool.n_pages - self.billed_pages()
+        free = self._headroom() - self._committed_growth()
         count = 0
         for tokens, budget in list(requests)[:n]:
             tokens = np.asarray(tokens, np.int32).reshape(-1)
@@ -557,6 +762,7 @@ class DecodeWorker:
                     "dense handoff offered to a paged decode worker: the "
                     "prefill and decode halves of a pair must share kv_layout"
                 )
+            self._make_room(n * handoff.n_alloc)
             if n * handoff.n_alloc > self.pool.free_pages:
                 raise RuntimeError(
                     f"KV pool cannot adopt this burst: its sealed prefills need "
@@ -581,7 +787,9 @@ class DecodeWorker:
                 table_rows[j] = self.pool.table_row(slot)
                 self._meta[slot] = (int(handoff.true_lens[j]), int(handoff.budgets[j]))
                 self._pos_est[slot] = int(handoff.true_lens[j])
+                self._spliced[slot] = 0
                 self._stale_slots.discard(slot)  # row fully rewritten
+        self.stats["pages_allocated"] += n * max(handoff.n_alloc, 0)
         self._state = self._adopt_jit(
             self._state,
             sealed,
@@ -593,9 +801,110 @@ class DecodeWorker:
             jnp.asarray(page_ids),
         )
         handoff.source.release(handoff)
+        if self._spec is not None:
+            self._spec.on_admit(
+                gslots,
+                np.asarray(handoff.tokens),
+                [int(t) for t in np.asarray(handoff.true_lens)],
+            )
         self.stats["admitted"] += n
         self.stats["handoffs"] += 1
         return gslots
+
+    def admit_spliced(self, tokens, budget: int) -> Optional[int]:
+        """Hot-prefix admission: splice the longest resident radix run into a
+        fresh slot's page table (``KVPool.attach``) and prefill ONLY the
+        uncovered tail — the prompt's cached pages are never recomputed.
+        Returns the slot id, or ``None`` when the cache holds no full page of
+        this prompt (the caller falls back to the classic prefill path).
+
+        Must run on THIS worker (never the prefill half of a disaggregated
+        pair): the matched pages are resident in THIS pool's device buffers.
+
+        Token parity with the cold path is the contract: the spliced pages
+        hold bitwise the KV a full prefill of the same prompt would produce
+        (same params, same positions), and the tail extend reproduces prefill
+        semantics for the rest — so greedy outputs match the cold admission
+        bitwise. The one boundary case is a prompt the cache covers ENTIRELY
+        (tail length 0): the last prompt token's logits must be recomputed to
+        sample the first output, and that replay re-writes one position in
+        the final matched page — which other requests may share, and whose
+        reduction order a different batch shape could perturb. The replay
+        therefore ALWAYS goes through copy-on-write, never writes the shared
+        page."""
+        if self.prefix is None:
+            return None
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        true_len = len(tokens)
+        pages = self.prefix.match(tokens)
+        if not pages:
+            return None
+        if not self.free_slots:
+            raise RuntimeError("spliced admission with no free slot")
+        e, ps = self.ecfg, self.pool.page_size
+        m = len(pages)
+        r = true_len - m * ps  # uncovered tail tokens
+        fresh = self.pool.required_pages(true_len) - m + (1 if r == 0 else 0)
+        self._make_room(fresh)
+        if fresh > self.pool.free_pages:
+            raise RuntimeError(
+                f"KV pool cannot admit this spliced request: its tail needs "
+                f"{fresh} fresh pages but only {self.pool.free_pages}/"
+                f"{self.pool.n_pages} are free (page_size={ps}). Drain a "
+                "request, raise --pool-pages, or lower --max-slots."
+            )
+        slot = self.free_slots.pop()
+        self.pool.attach(slot, pages)
+        cow_src = cow_dst = self.pool.scratch_page  # harmless self-copy
+        if r > 0:
+            self.pool.alloc(slot, self.pool.required_pages(true_len))
+            tb = min(-(-r // e.prefill_bucket) * e.prefill_bucket, e.max_seq)
+            start, last_idx = m * ps, r - 1
+            tail = np.zeros((1, tb), np.int32)
+            tail[0, :r] = tokens[m * ps :]
+        else:
+            # fully-covered prompt: CoW the final matched page, then replay
+            # the last prompt token into the private copy to recover its
+            # logits (the cache stores KV, not logits)
+            cow_src, cow_dst = self.pool.cow(slot, m - 1)
+            if cow_src != cow_dst:
+                self.stats["cow_copies"] += 1
+            tb, start, last_idx = 1, true_len - 1, 0
+            tail = tokens[None, -1:].copy()
+        table_row = self.pool.table_row(slot)  # AFTER cow: private ids only
+        # scalars ride as traced device values so the compiled program is
+        # keyed on the tail bucket alone, not on slot/length combinations
+        self._state = self._splice_jit(
+            self.params,
+            self._state,
+            jnp.asarray(tail),
+            jnp.asarray(slot, jnp.int32),
+            jnp.asarray(start, jnp.int32),
+            jnp.asarray(last_idx, jnp.int32),
+            jnp.asarray(budget, jnp.int32),
+            jnp.asarray(true_len, jnp.int32),
+            jnp.asarray(table_row),
+            jnp.asarray(cow_src, jnp.int32),
+            jnp.asarray(cow_dst, jnp.int32),
+        )
+        self._meta[slot] = (true_len, budget)
+        self._pos_est[slot] = true_len
+        self._spliced[slot] = m
+        self._stale_slots.discard(slot)  # row fully rewritten by the splice
+        if self._spec is not None:
+            # the drafter shares no pages — it prefills the FULL prompt into
+            # its own dense cache (cheap: the drafter is small by design)
+            lb = bucket_len(self.cfg, e, true_len)
+            padded = np.zeros((1, lb), np.int32)
+            padded[0, :true_len] = tokens
+            self._spec.on_admit([slot], padded, [true_len])
+        self.stats["admitted"] += 1
+        self.stats["prefix_hits"] += 1
+        self.stats["spliced_admissions"] += 1
+        self.stats["spliced_pages"] += m
+        self.stats["prefill_tokens"] += tb
+        self.stats["pages_allocated"] += fresh
+        return slot
 
     def _ensure_chunk_pages(self) -> None:
         """Grow resident slots' page tables to cover the positions the next
@@ -604,6 +913,10 @@ class DecodeWorker:
         at worst one chunk early, never late — late would silently write
         through a padding table entry)."""
         e = self.ecfg
+        # a speculative chunk's verify extend can write up to steps*(k+1)
+        # positions (plus rejected-draft garbage the NEXT verify overwrites —
+        # writes past the planned coverage redirect to the scratch page)
+        horizon = self._spec.horizon if self._spec is not None else e.decode_chunk
         # phase 1 — PLAN, no mutation: the chunk's total page bill, so
         # exhaustion raises with the engine untouched (stale set intact,
         # pool unallocated — a caller that catches can drain and retry;
@@ -611,14 +924,24 @@ class DecodeWorker:
         # row, re-opening the cross-slot clobber, or leave a slot owning
         # pages its device table never maps)
         growth: List[Tuple[int, int, int]] = []  # (slot, have, need)
+        cows: List[Tuple[int, int]] = []  # (slot, page idx) to copy-on-write
         total_new = 0
         for slot, (true_len, budget) in self._meta.items():
             est = self._pos_est[slot]
-            need = self.pool.required_pages(min(est + e.decode_chunk, true_len + budget))
-            have = len(self.pool.owned(slot))
-            if need > have:
-                growth.append((slot, have, need))
-                total_new += need - have
+            end = min(est + horizon, true_len + budget)
+            need = self.pool.required_pages(end)
+            owned = self.pool.owned(slot)
+            if need > len(owned):
+                growth.append((slot, len(owned), need))
+                total_new += need - len(owned)
+            # a write crossing into a page another slot (or the prefix cache)
+            # still references must copy first — sharing is read-only
+            ps = self.pool.page_size
+            for idx in range(est // ps, min(-(-end // ps), len(owned))):
+                if self.pool.refcount(owned[idx]) > 1:
+                    cows.append((slot, idx))
+                    total_new += 1
+        self._make_room(total_new)
         if total_new > self.pool.free_pages:
             raise RuntimeError(
                 f"KV pool exhausted mid-decode: growing {len(growth)} slot(s) for "
@@ -648,9 +971,23 @@ class DecodeWorker:
                 upd_cols.append(k)
                 upd_vals.append(pages[k])
             self.stats["page_appends"] += need - have
+            self.stats["pages_allocated"] += need - have
+        cow_src: List[int] = []
+        cow_dst: List[int] = []
+        for slot, idx in cows:
+            src, dst = self.pool.cow(slot, idx)
+            if src == dst:
+                continue  # became private since the plan (same-batch dedup)
+            cow_src.append(src)
+            cow_dst.append(dst)
+            upd_rows.append(slot)
+            upd_cols.append(idx)
+            upd_vals.append(dst)
+            self.stats["cow_copies"] += 1
+            self.stats["pages_allocated"] += 1
         for slot, (true_len, budget) in self._meta.items():
             self._pos_est[slot] = min(
-                self._pos_est[slot] + e.decode_chunk, true_len + budget - 1
+                self._pos_est[slot] + horizon, true_len + budget - 1
             )
         if upd_rows:
             self._state = self._state._replace(
@@ -658,20 +995,33 @@ class DecodeWorker:
                     jnp.asarray(upd_rows, jnp.int32), jnp.asarray(upd_cols, jnp.int32)
                 ].set(jnp.asarray(upd_vals, jnp.int32))
             )
+        if cow_src:
+            self._state = self._cow_jit(
+                self._state, jnp.asarray(cow_src, jnp.int32), jnp.asarray(cow_dst, jnp.int32)
+            )
         self._stale_slots.clear()
 
     def decode_chunk(self) -> None:
-        """Up to ``decode_chunk`` batched decode steps in ONE dispatch."""
+        """Up to ``decode_chunk`` batched decode steps in ONE dispatch (or,
+        with speculative decoding on, the draft/verify chunk program)."""
         if self.pool is not None:
             self._ensure_chunk_pages()
-        self._state = self._chunk_jit(self.params, self._state)
+        if self._spec is not None:
+            self._spec.chunk()
+        else:
+            self._state = self._chunk_jit(self.params, self._state)
         self.stats["decode_chunks"] += 1
 
     def sync(self):
         """The once-per-chunk host sync: (active, n_out) as numpy, fetched
         in a single device-to-host transfer. Also reconciles the paged
-        layout's conservative per-slot position estimates to the truth."""
-        active, n_out = jax.device_get((self._state.active, self._state.n_out))
+        layout's conservative per-slot position estimates to the truth, and
+        (spec mode) refreshes the draft counters' host mirrors — the
+        counters ride the SAME transfer, costing no extra sync."""
+        if self._spec is not None:
+            active, n_out = self._spec.sync()
+        else:
+            active, n_out = jax.device_get((self._state.active, self._state.n_out))
         self.stats["host_syncs"] += 1
         if self.pool is not None:
             for slot, (true_len, _) in self._meta.items():
@@ -680,13 +1030,15 @@ class DecodeWorker:
 
     def fetch(self, slot: int, n_out: int) -> np.ndarray:
         """Copy a finished slot's generated tokens to host and free the slot
-        (returning its pages to the pool in the paged layout)."""
+        (returning its truly-orphaned pages to the pool in the paged layout —
+        pages the prefix cache pins stay resident for future splices)."""
         toks = np.asarray(self._state.out[slot])[:n_out]
         self.free_slots.append(slot)
         if self.pool is not None:
             self.pool.free_slot(slot)
             self._meta.pop(slot, None)
             self._pos_est.pop(slot, None)
+            self._spliced.pop(slot, None)
             self._stale_slots.add(slot)
         self.stats["evicted"] += 1
         return toks
@@ -706,7 +1058,8 @@ class ServeEngine:
     Either way admission runs the SAME two programs, so the colocated engine
     is the disaggregated pair's parity oracle by construction."""
 
-    def __init__(self, cfg, params, ecfg: EngineConfig, *, mesh=None, prefill_mesh=None):
+    def __init__(self, cfg, params, ecfg: EngineConfig, *, mesh=None, prefill_mesh=None,
+                 drafter=None):
         if cfg.is_encoder_only:
             raise ValueError(f"{cfg.name} is encoder-only: nothing to decode")
         if cfg.frontend == "vision":
@@ -730,13 +1083,20 @@ class ServeEngine:
             cfg, params, ecfg, mesh=prefill_mesh if prefill_mesh is not None else mesh,
             stats=self.stats,
         )
-        self.decode = DecodeWorker(cfg, params, ecfg, mesh=mesh, stats=self.stats)
+        self.decode = DecodeWorker(
+            cfg, params, ecfg, mesh=mesh, stats=self.stats, drafter=drafter
+        )
 
     # -- delegation (the device state lives on the workers) -----------------
 
     @property
     def pool(self) -> Optional[KVPool]:
         return self.decode.pool
+
+    @property
+    def prefix(self):
+        """The decode worker's radix prefix cache (None when disabled)."""
+        return self.decode.prefix
 
     @property
     def free_slots(self) -> List[int]:
@@ -777,6 +1137,11 @@ class ServeEngine:
     def max_admissible(self, requests) -> int:
         return self.decode.max_admissible(requests)
 
+    def prefix_hit_pages(self, tokens) -> int:
+        """Resident full prefix pages for a prompt (0 without the cache) —
+        the router's prefix-affinity signal. Read-only: never ages the LRU."""
+        return self.decode.prefix_probe(tokens)
+
     def admit(self, tokens: np.ndarray, max_new_tokens: int) -> int:
         """Prefill one prompt (1-D int32) into a free slot; returns its id."""
         return self.admit_many([(tokens, max_new_tokens)])[0]
@@ -807,16 +1172,36 @@ class ServeEngine:
             raise RuntimeError(
                 f"{len(prepped)} admissions but only {len(self.free_slots)} free slots"
             )
+        prefix = self.decode.prefix
+        hot: List[int] = []
+        if prefix is not None:
+            # probe (read-only) BEFORE any admission: intra-burst duplicates
+            # do not share with each other — sharing materializes across
+            # scheduler ticks, once the first copy's pages are indexed below
+            hot = [
+                i for i, (tokens, _) in enumerate(prepped)
+                if self.decode.prefix_probe(tokens) > 0
+            ]
         if self.pool is not None:
             # admission is ATOMIC w.r.t. pool exhaustion: check the whole
             # burst's page bill before prefilling, popping a slot or adopting
             # a page, so a caller that catches the error has a clean engine
             # (no half-admitted rows, no leaked slots/pages) and can retry
-            # with a smaller burst
-            need = sum(
-                self.pool.required_pages(self.bucket_len(len(tokens)))
-                for tokens, _ in prepped
-            )
+            # with a smaller burst. Hot requests bill only their uncovered
+            # tail (+1 for the fully-covered replay's CoW page) — evicting a
+            # matched page to make room frees exactly the page its splice
+            # would have saved, so the bill stays sufficient either way.
+            ps = self.pool.page_size
+            need = 0
+            hot_idx = set(hot)
+            for i, (tokens, _) in enumerate(prepped):
+                if i in hot_idx:
+                    m = self.decode.prefix_probe(tokens)
+                    r = len(tokens) - m * ps
+                    need += self.pool.required_pages(len(tokens)) - m + (1 if r == 0 else 0)
+                else:
+                    need += self.pool.required_pages(self.bucket_len(len(tokens)))
+            self.decode._make_room(need)
             if need > self.pool.free_pages:
                 raise RuntimeError(
                     f"KV pool cannot admit this burst: its bucketed prefills need "
@@ -824,10 +1209,22 @@ class ServeEngine:
                     f"are free (page_size={self.pool.page_size}). Admit fewer "
                     "requests, raise --pool-pages, or lower --max-slots."
                 )
-        by_bucket: Dict[int, List[int]] = {}
-        for i, (tokens, _) in enumerate(prepped):
-            by_bucket.setdefault(self.bucket_len(len(tokens)), []).append(i)
         slots = [0] * len(prepped)
+        cold: List[int] = []
+        hot_set = set(hot)
+        for i in range(len(prepped)):
+            if i not in hot_set:
+                cold.append(i)
+                continue
+            tokens, budget = prepped[i]
+            slot = self.decode.admit_spliced(tokens, budget)
+            if slot is None:  # match evicted since the probe: classic path
+                cold.append(i)
+            else:
+                slots[i] = slot
+        by_bucket: Dict[int, List[int]] = {}
+        for i in cold:
+            by_bucket.setdefault(self.bucket_len(len(prepped[i][0])), []).append(i)
         for lb, idxs in by_bucket.items():
             while idxs:
                 n = 1 << (len(idxs).bit_length() - 1)  # largest pow2 <= len
@@ -836,6 +1233,12 @@ class ServeEngine:
                 gslots = self.decode.adopt(handoff)
                 for j, i in enumerate(group):
                     slots[i] = gslots[j]
+        if prefix is not None:
+            # index every admitted prompt's full pages — spliced prompts map
+            # their chunks to the very pages they attached, so only fresh
+            # tails add nodes; the NEXT burst with these prefixes splices
+            for i, (tokens, _) in enumerate(prepped):
+                prefix.insert(tokens, self.pool.owned(slots[i]))
         return slots
 
     def warmup(self, prompt: np.ndarray, budget: int = 2) -> None:
@@ -854,6 +1257,25 @@ class ServeEngine:
             self.decode_chunk()
             self.sync()
             n *= 2
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if (
+            self.decode.prefix is not None
+            and len(prompt) >= self.ecfg.page_size
+            and self.ecfg.max_slots >= 2
+            and len(prompt) + 1 + budget <= self.ecfg.max_seq
+        ):
+            # compile both splice programs: admit cold (seeds the cache), then
+            # re-admit the same prompt (fully-covered replay, tail bucket 1)
+            # and a one-token-longer prompt (tail extend, one prefill bucket)
+            self.reset()
+            self.admit(prompt, budget)
+            if self.max_admissible([(prompt, budget)]) >= 1:
+                self.admit(prompt, budget)
+            longer = np.concatenate([prompt, prompt[-1:]])
+            if self.max_admissible([(longer, budget)]) >= 1:
+                self.admit(longer, budget)
+            self.decode_chunk()
+            self.sync()
         self.reset()
 
     def decode_chunk(self) -> None:

@@ -18,9 +18,21 @@ at rest. The pool replaces that rectangle with fixed-size **pages**:
     boundaries (at chunk granularity — the device program never touches the
     free list), and eviction returns a slot's pages.
 
+Pages are **refcounted** so the radix prefix cache (``serve/prefix_cache.py``)
+can share one physical page between several slots (and keep it resident after
+every owner drains): ``alloc`` hands out fresh pages at refcount 1,
+``attach`` splices already-allocated pages into another slot's table
+(incref), ``incref``/``decref`` let the prefix cache pin pages with no slot
+owner at all, and ``free_slot`` only returns truly-orphaned pages (refcount
+hitting 0) to the free list. A decode write that would land in a shared page
+goes through ``cow`` — a fresh private copy — never through the shared page.
+
 Invariants (pinned by ``tests/test_kv_pool.py``'s randomized property test):
-free + owned always partitions ``range(n_pages)``; a page is owned by at
-most one slot; ``alloc`` past capacity raises instead of silently reusing.
+free + allocated always partitions ``range(n_pages)``; a page appears at most
+once in any one slot's table; a page's refcount equals the number of slot
+tables it appears in plus its prefix-cache pins; no page is freed while its
+refcount is positive; ``alloc`` past capacity raises instead of silently
+reusing.
 
 Unallocated/stale page-table entries point at the **scratch page** — one
 sacrificial page past the pool that is never handed out. It exists because
@@ -72,13 +84,24 @@ class KVPool:
         self.scratch_page = self.n_pages
         self._free: List[int] = []
         self._owned: Dict[int, List[int]] = {}
+        self._ref: Dict[int, int] = {}
+        self._staged: set = set()
+        self._next_sid = 0
         self.reset()
 
     # -- bookkeeping ---------------------------------------------------------
 
     def reset(self) -> None:
+        """Return the pool to its pristine state. Clears ownership, the free
+        list, per-page refcounts AND the donate/adopt staging bookkeeping —
+        a handoff staged before reset must not leak a reservation (or a stale
+        refcount on a reissued page id) into the next run."""
         self._free = list(range(self.n_pages - 1, -1, -1))  # pop() hands out 0 first
         self._owned = {}
+        self._ref = {}
+        self._staged = set()
+        # sid stays monotonic: a KVHandoff sealed before reset must never
+        # collide with a reservation staged after it.
 
     @property
     def free_pages(self) -> int:
@@ -86,10 +109,20 @@ class KVPool:
 
     @property
     def pages_in_use(self) -> int:
-        return sum(len(p) for p in self._owned.values())
+        """Distinct allocated pages (a page shared by N tables counts once)."""
+        return len(self._ref)
+
+    @property
+    def staged_ids(self) -> List[int]:
+        """Staging reservations currently holding pages (handoff in flight)."""
+        return sorted(self._staged)
 
     def owned(self, slot: int) -> List[int]:
         return list(self._owned.get(slot, ()))
+
+    def refcount(self, page: int) -> int:
+        """0 for free pages; otherwise slot-table memberships + cache pins."""
+        return self._ref.get(page, 0)
 
     def required_pages(self, length: int) -> int:
         """Pages covering ``length`` logical positions (ring-clamped)."""
@@ -111,14 +144,82 @@ class KVPool:
                 "budgets, or lower --max-slots."
             )
         for _ in range(max(need, 0)):
-            owned.append(self._free.pop())
+            page = self._free.pop()
+            self._ref[page] = 1
+            owned.append(page)
         return list(owned)
 
     def free_slot(self, slot: int) -> List[int]:
-        """Return all of ``slot``'s pages to the free list (eviction/drain)."""
-        pages = self._owned.pop(slot, [])
-        self._free.extend(pages)
-        return pages
+        """Drop ``slot``'s table (eviction/drain), decrementing each page's
+        refcount; returns the pages that actually went back to the free list
+        (a page still pinned by the prefix cache or another slot's table
+        stays allocated)."""
+        freed: List[int] = []
+        for page in self._owned.pop(slot, []):
+            if self._decref(page):
+                freed.append(page)
+        return freed
+
+    # -- sharing (radix prefix cache) ----------------------------------------
+
+    def _decref(self, page: int) -> bool:
+        self._ref[page] -= 1
+        if self._ref[page] == 0:
+            del self._ref[page]
+            self._free.append(page)
+            return True
+        return False
+
+    def attach(self, slot: int, pages: List[int]) -> None:
+        """Splice already-allocated ``pages`` into ``slot``'s table (in
+        logical order, before any privately-alloc'd tail pages): the hot half
+        of a prefix-cache admission. Increments each page's refcount — no
+        allocation happens and the free list is untouched."""
+        owned = self._owned.setdefault(slot, [])
+        for page in pages:
+            if page not in self._ref:
+                raise RuntimeError(
+                    f"attach: page {page} is not allocated — the prefix cache "
+                    "handed out a stale id (evicted without decref?)"
+                )
+            self._ref[page] += 1
+            owned.append(page)
+
+    def incref(self, page: int) -> None:
+        """Pin an allocated page with no slot table (prefix-cache insertion)."""
+        if page not in self._ref:
+            raise RuntimeError(f"incref: page {page} is not allocated")
+        self._ref[page] += 1
+
+    def decref(self, page: int) -> bool:
+        """Drop a prefix-cache pin; True when the page went back to the free
+        list (no slot table and no other pin held it)."""
+        if page not in self._ref:
+            raise RuntimeError(f"decref: page {page} is not allocated")
+        return self._decref(page)
+
+    def cow(self, slot: int, idx: int):
+        """Copy-on-write ``slot``'s ``idx``-th table entry: swap the shared
+        page for a freshly-allocated private one and return ``(old, new)``.
+        The caller owns the device copy old→new before any write lands. A
+        page the slot already owns exclusively is returned as-is (no copy
+        needed): ``old == new``."""
+        owned = self._owned.get(slot)
+        if not owned or idx >= len(owned):
+            raise RuntimeError(f"cow: slot {slot} has no page at index {idx}")
+        old = owned[idx]
+        if self._ref[old] == 1:
+            return old, old
+        if not self._free:
+            raise RuntimeError(
+                f"KV pool exhausted: slot {slot} needs a copy-on-write page "
+                f"but 0/{self.n_pages} are free. Raise --pool-pages."
+            )
+        new = self._free.pop()
+        self._ref[new] = 1
+        owned[idx] = new
+        self._decref(old)
+        return old, new
 
     # -- handoff protocol ----------------------------------------------------
     #
@@ -129,6 +230,17 @@ class KVPool:
     # in ITS buffer for the incoming pages). The page *contents* travel with
     # the handoff structure (repro.serve.engine.KVHandoff) — ids are local to
     # a pool and never cross it.
+
+    def stage(self, n_pages: int):
+        """Reserve ``n_pages`` under a fresh staging id (the in-flight half of
+        a prefill→decode handoff); returns ``(sid, pages)``. The reservation
+        is released by ``donate(sid)`` once the receiver has adopted the
+        sealed contents — or by ``reset()``, which must not leak it."""
+        sid = self._next_sid
+        self._next_sid += 1
+        pages = self.alloc(sid, n_pages)
+        self._staged.add(sid)
+        return sid, pages
 
     def adopt(self, slot: int, n_pages: int) -> List[int]:
         """Receiving half of a handoff: allocate ``n_pages`` fresh ids for a
@@ -146,6 +258,7 @@ class KVPool:
         free list and return their ids. The caller must have materialized (or
         issued the device copy of) the sealed page contents first — after
         donation the ids may be reissued to the next staged prefill."""
+        self._staged.discard(slot)
         return self.free_slot(slot)
 
     def table_row(self, slot: int) -> np.ndarray:

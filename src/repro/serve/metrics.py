@@ -1,0 +1,41 @@
+"""Shared latency/throughput summaries for serving runs.
+
+The launcher (``repro.launch.serve``) and every serve perf pair
+(``benchmarks.perf_hillclimb``) report the same shape of numbers — tok/s,
+end-to-end latency percentiles and the queue-wait split the
+:class:`repro.serve.scheduler.Completion` timestamps make visible. One
+implementation keeps the definitions identical everywhere (np.percentile
+with linear interpolation, queue wait = ``admitted - arrival``), so a
+launcher log line and a CI artifact are directly comparable.
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import numpy as np
+
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    """``np.percentile`` (q in [0, 100]) with an empty-safe 0.0."""
+    xs = np.asarray(list(xs), np.float64)
+    if xs.size == 0:
+        return 0.0
+    return float(np.percentile(xs, q))
+
+
+def latency_summary(completions, wall_s: float) -> Dict[str, float]:
+    """Percentile summary of one serving run: tok/s over ``wall_s`` plus
+    p50/p95 of end-to-end latency and of its router-attributable queue-wait
+    share. Keys are stable — perf artifacts and launcher logs both read
+    them."""
+    lats = [c.latency for c in completions]
+    waits = [c.queue_wait for c in completions]
+    toks = sum(len(c.tokens) for c in completions)
+    return {
+        "tok_per_s": toks / max(wall_s, 1e-9),
+        "tokens": float(toks),
+        "p50_s": percentile(lats, 50),
+        "p95_s": percentile(lats, 95),
+        "queue_wait_p50_s": percentile(waits, 50),
+        "queue_wait_p95_s": percentile(waits, 95),
+    }

@@ -126,7 +126,7 @@ class FleetRouter:
             raise ValueError("FleetRouter needs at least one engine replica")
         self.engines: List[ServeEngine] = list(engines)
         self.clock = clock
-        self.stats: Dict[str, int] = {"routed": 0, "requeued": 0}
+        self.stats: Dict[str, int] = {"routed": 0, "requeued": 0, "affinity_hits": 0}
 
     # -- routing policy -----------------------------------------------------
 
@@ -149,7 +149,12 @@ class FleetRouter:
 
     def _route(self, req: Request, queues: List[deque]) -> int:
         """Least-loaded replica among those that could EVER admit the
-        request (an empty pool fits its lifetime bill)."""
+        request (an empty pool fits its lifetime bill). With prefix caching
+        on, **prefix affinity** leads the key: replicas' radix caches are
+        private, so a request lands where the most of its prompt is already
+        resident (a splice there skips that much prefill AND allocation) —
+        billed-page load only breaks affinity ties, which keeps cold traffic
+        least-loaded-routed exactly as before."""
         feasible = [
             i
             for i, eng in enumerate(self.engines)
@@ -165,7 +170,11 @@ class FleetRouter:
                 "--pool-pages or shrink the prompt/budget."
             )
         self.stats["routed"] += 1
-        return min(feasible, key=lambda i: self._load(i, queues))
+        hits = {i: self.engines[i].prefix_hit_pages(req.tokens) for i in feasible}
+        best = min(feasible, key=lambda i: (-hits[i],) + self._load(i, queues))
+        if hits[best] > 0:
+            self.stats["affinity_hits"] += 1
+        return best
 
     # -- the serving loop ---------------------------------------------------
 
@@ -173,7 +182,7 @@ class FleetRouter:
         clock = self.clock or MonotonicClock()
         for eng in self.engines:
             eng.reset()
-        self.stats = {"routed": 0, "requeued": 0}
+        self.stats = {"routed": 0, "requeued": 0, "affinity_hits": 0}
         pending = deque(sorted(requests, key=lambda r: r.arrival))
         queues: List[deque] = [deque() for _ in self.engines]
         # per replica: slot -> (request, admitted_time)

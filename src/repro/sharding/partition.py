@@ -247,7 +247,13 @@ def shard_engine_state(state: Any, mesh_axes: Optional[Dict[str, int]] = None) -
     pools / dense caches sharded along the heads axis, recurrent carries
     channel-sharded, and every slot-bookkeeping leaf (positions, budgets,
     output rows, page tables, rng) replicated — the host mutates those by
-    slot id and the numbers must read the same from every shard."""
+    slot id and the numbers must read the same from every shard.
+
+    The rules match on path SUFFIXES, so they apply to any pytree that
+    nests a cache under an extra prefix — the speculative drafter's dense
+    state (wrapped as ``{"draft": ...}`` by ``SpecDecoder.reset``) picks up
+    the same ``/k``, ``/v`` heads split as the target's dense engine
+    state without a drafter-specific rule."""
     mesh_axes = _mesh_axes() if mesh_axes is None else dict(mesh_axes)
 
     def infer(path: str, leaf) -> P:

@@ -38,6 +38,7 @@ from repro.serve import (
     PrefillWorker,
     Request,
     ServeEngine,
+    staggered_stream,
 )
 from repro.sharding import shard_engine_state
 
@@ -59,16 +60,9 @@ def _mk(**kw):
 
 
 def _stream(cfg, n, seed=3):
-    rng = np.random.RandomState(seed)
-    return [
-        Request(
-            rid=i,
-            tokens=rng.randint(0, cfg.vocab_size, size=int(rng.randint(3, 14))).astype(np.int32),
-            max_new_tokens=int(rng.randint(2, 9)),
-            arrival=float(rng.uniform(0.0, 3.0)),
-        )
-        for i in range(n)
-    ]
+    # the shared staggered-stream helper's defaults ARE this file's
+    # historical draw order — the tokens these tests pin depend on it
+    return staggered_stream(cfg.vocab_size, n, seed=seed)
 
 
 _ECFG = dict(
@@ -216,6 +210,35 @@ def test_fleet_dense_layout_matches_single():
     assert sorted(c.rid for c in comps) == sorted(ref)
     for c in comps:
         np.testing.assert_array_equal(c.tokens, ref[c.rid])
+
+
+def test_router_prefix_affinity_routes_hot_requests():
+    """With per-replica prefix caches, the router sends a request wherever
+    its prefix is RESIDENT: the first serve of a hot prompt lands by load,
+    every re-serve lands on the replica already holding its pages (affinity
+    leads the routing key; load only breaks ties), and the warm replica
+    splices instead of re-prefilling."""
+    cfg = _mk()
+    params = init_lm(cfg, jax.random.key(0))
+    rng = np.random.RandomState(21)
+    hot = rng.randint(0, cfg.vocab_size, size=16).astype(np.int32)
+    cold = [rng.randint(0, cfg.vocab_size, size=16).astype(np.int32) for _ in range(2)]
+    # hot arrives first and keeps re-arriving; cold traffic interleaves so
+    # plain least-loaded routing WOULD bounce the hot prompt between replicas
+    prompts = [hot, cold[0], hot, cold[1], hot, hot]
+    reqs = [
+        Request(rid=i, tokens=p, max_new_tokens=3, arrival=1.5 * i)
+        for i, p in enumerate(prompts)
+    ]
+    engines = _fleet(cfg, params, 2, prefix_cache=True)
+    router = FleetRouter(engines, clock=ManualClock(tick=0.2))
+    comps = {c.rid: c for c in router.run(reqs)}
+    assert len(comps) == len(reqs)
+    warm = comps[0].replica  # wherever the first hot serve landed
+    assert all(comps[r].replica == warm for r in (2, 4, 5)), "hot prompt bounced"
+    assert router.stats["affinity_hits"] >= 3
+    assert engines[warm].stats["spliced_admissions"] >= 3
+    assert engines[1 - warm].stats["spliced_admissions"] == 0
 
 
 # ---------------------------------------------------------------------------

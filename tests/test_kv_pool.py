@@ -141,6 +141,129 @@ def test_pool_randomized_invariants():
     assert pool.free_pages == pool.n_pages and pool.pages_in_use == 0
 
 
+def test_pool_randomized_refcount_invariants():
+    """Extends the allocator property test to SHARED pages: random
+    cold-admit / splice-attach / pin / unpin / CoW / evict sequences,
+    checking after every step that free + allocated partitions
+    ``range(n_pages)``, every page's refcount equals its slot-table
+    memberships plus its prefix-cache pins, no page returns to the free
+    list while its refcount is positive, and a copy-on-write page never
+    aliases a page another table or pin still holds."""
+    cfg = _mk()
+    ecfg = EngineConfig(max_slots=6, max_seq=64, prefill_bucket=16, page_size=16)
+    pool = KVPool(cfg, ecfg)
+    rng = np.random.RandomState(7)
+    tables = {}  # slot -> [pages]: shadow of the pool's ownership
+    pins = {}  # page -> pin count: shadow of the prefix-cache pins
+
+    def refs():
+        r = dict(pins)
+        for pages in tables.values():
+            for p in pages:
+                r[p] = r.get(p, 0) + 1
+        return {p: c for p, c in r.items() if c > 0}
+
+    def check():
+        model = refs()
+        assert pool.pages_in_use == len(model), "allocated-set drift"
+        assert pool.free_pages == pool.n_pages - len(model), "partition broken"
+        for p in range(pool.n_pages):
+            # a page with live references must never be free (refcount 0)
+            assert pool.refcount(p) == model.get(p, 0)
+        for slot, pages in tables.items():
+            assert pool.owned(slot) == pages
+
+    for _ in range(400):
+        op = rng.randint(6)
+        clean = [s for s in range(ecfg.max_slots) if s not in tables]
+        if op == 0 and clean:  # cold admit: fresh pages at refcount 1
+            want = int(rng.randint(1, pool.pages_per_slot + 1))
+            if want <= pool.free_pages:
+                tables[clean[0]] = list(pool.alloc(clean[0], want))
+        elif op == 1 and clean and tables:  # splice: shared head + fresh tail
+            donor = rng.choice(sorted(tables))
+            slot, k = clean[0], int(rng.randint(1, len(tables[donor]) + 1))
+            shared = tables[donor][:k]
+            pool.attach(slot, shared)
+            tables[slot] = list(shared)
+            grow = int(rng.randint(0, pool.pages_per_slot - k + 1))
+            if 0 < grow <= pool.free_pages:
+                tables[slot] = list(pool.alloc(slot, k + grow))
+        elif op == 2 and pool.pages_in_use:  # prefix-cache pin
+            page = int(rng.choice(sorted(refs())))
+            pool.incref(page)
+            pins[page] = pins.get(page, 0) + 1
+        elif op == 3 and pins:  # drop a pin
+            page = int(rng.choice(sorted(pins)))
+            went_free = pool.decref(page)
+            pins[page] -= 1
+            if pins[page] == 0:
+                del pins[page]
+            assert went_free == (refs().get(page, 0) == 0)
+        elif op == 4 and tables:  # copy-on-write a table entry
+            slot = rng.choice(sorted(tables))
+            idx = int(rng.randint(len(tables[slot])))
+            old = tables[slot][idx]
+            was_shared = pool.refcount(old) > 1
+            if was_shared and pool.free_pages == 0:
+                with pytest.raises(RuntimeError, match="exhausted"):
+                    pool.cow(slot, idx)
+            else:
+                o, n = pool.cow(slot, idx)
+                assert o == old
+                if was_shared:
+                    # the private copy aliases NOTHING still referenced
+                    assert n != old and refs().get(n, 0) == 0
+                    assert pool.refcount(n) == 1
+                    tables[slot][idx] = n
+                else:
+                    assert n == old  # exclusively owned: no copy needed
+        elif op == 5 and tables:  # evict: only orphans reach the free list
+            slot = rng.choice(sorted(tables))
+            pages = tables.pop(slot)
+            freed = set(pool.free_slot(slot))
+            model = refs()
+            assert freed == {p for p in pages if model.get(p, 0) == 0}
+        check()
+
+    for slot in sorted(tables):
+        pool.free_slot(slot)
+    tables.clear()
+    for page in sorted(pins):
+        for _ in range(pins[page]):
+            pool.decref(page)
+    assert pool.free_pages == pool.n_pages and pool.pages_in_use == 0
+    with pytest.raises(RuntimeError, match="not allocated"):
+        pool.attach(0, [0])  # a stale (freed) id must never splice
+
+
+def test_pool_donate_then_reset_no_leak():
+    """``reset()`` clears the donate/adopt staging bookkeeping AND the
+    per-page refcounts: a handoff staged (or even donated) before reset must
+    not leak a reservation or a stale refcount onto a reissued page id —
+    every page is reissuable exactly once afterwards. The staging-id counter
+    is the one thing that survives: handoffs sealed before reset must never
+    collide with reservations staged after it."""
+    cfg = _mk()
+    pool = KVPool(cfg, EngineConfig(max_slots=2, max_seq=64, page_size=16))
+    sid, staged = pool.stage(2)  # an in-flight handoff reservation
+    pages = pool.alloc(5, 2)  # a live slot (id clear of the sid namespace)
+    pool.incref(pages[0])  # and a prefix-cache pin on one of its pages
+    donated = pool.donate(sid)
+    assert set(donated) == set(staged) and pool.staged_ids == []
+    sid2, _ = pool.stage(1)  # a second handoff left IN FLIGHT across reset
+    assert sid2 > sid  # sids never recycle
+    pool.reset()
+    assert pool.staged_ids == [] and pool.pages_in_use == 0
+    assert pool.free_pages == pool.n_pages
+    assert pool.refcount(pages[0]) == 0 and pool.refcount(staged[0]) == 0
+    got = pool.alloc(5, pool.n_pages)  # every id hands out exactly once
+    assert sorted(got) == list(range(pool.n_pages))
+    pool.reset()
+    sid3, _ = pool.stage(1)  # monotonic across resets too
+    assert sid3 > sid2
+
+
 def test_pool_handoff_donate_adopt():
     """The handoff protocol: ``donate`` releases a staging reservation back
     to the free list; ``adopt`` hands fresh ids to a CLEAN slot (adopting

@@ -34,6 +34,8 @@ from repro.serve import (
     ManualClock,
     Request,
     ServeEngine,
+    hot_prefix_stream,
+    staggered_stream,
     static_generate,
 )
 
@@ -154,16 +156,9 @@ def test_engine_paged_matches_dense_ragged_budgets():
     page appends in play (a tight pool forces the append path)."""
     cfg = _mk()
     params = init_lm(cfg, jax.random.key(0))
-    rng = np.random.RandomState(4)
-    reqs = [
-        Request(
-            rid=i,
-            tokens=rng.randint(0, cfg.vocab_size, size=int(rng.randint(4, 14))).astype(np.int32),
-            max_new_tokens=int(rng.randint(2, 9)),
-            arrival=float(rng.uniform(0.0, 3.0)),
-        )
-        for i in range(7)
-    ]
+    reqs = staggered_stream(
+        cfg.vocab_size, 7, seed=4, prompt_range=(4, 14), budget_range=(2, 9),
+    )
     outs = {}
     for layout, pool_pages in (("dense", 0), ("paged", 8)):
         eng = ServeEngine(
@@ -374,16 +369,10 @@ def test_scheduler_randomized_invariants(layout):
             kv_layout=layout, page_size=8,
         ),
     )
-    rng = np.random.RandomState(7)
-    requests = [
-        Request(
-            rid=i,
-            tokens=rng.randint(0, cfg.vocab_size, size=rng.randint(3, 20)).astype(np.int32),
-            max_new_tokens=int(rng.randint(1, 11)),
-            arrival=float(rng.uniform(0.0, 5.0)),
-        )
-        for i in range(11)
-    ]
+    requests = staggered_stream(
+        cfg.vocab_size, 11, seed=7, prompt_range=(3, 20), budget_range=(1, 11),
+        arrival_span=5.0,
+    )
     # ticking clock: time passes per scheduler iteration, so arrivals land
     # MID-decode and freed slots are refilled while others keep decoding
 
@@ -445,6 +434,204 @@ def test_scheduler_randomized_invariants(layout):
 
 
 # ---------------------------------------------------------------------------
+# radix prefix cache: splice == cold parity
+
+
+_PCFG = dict(
+    max_slots=2, max_seq=48, max_new=8, decode_chunk=3, prefill_bucket=8,
+    page_size=8,
+)
+
+
+def _run_pair(cfg, params, reqs, ecfg_a, ecfg_b, drafter_b=None, tick=0.2):
+    """The same stream through two engines; returns (comps_a, comps_b,
+    engine_a, engine_b) with completions keyed by rid."""
+    outs, engs = [], []
+    for ecfg, drafter in ((ecfg_a, None), (ecfg_b, drafter_b)):
+        eng = ServeEngine(cfg, params, ecfg, drafter=drafter)
+        comps = ContinuousScheduler(eng, clock=ManualClock(tick=tick)).run(reqs)
+        outs.append({c.rid: c.tokens for c in comps})
+        engs.append(eng)
+    assert outs[0].keys() == outs[1].keys()
+    return outs[0], outs[1], engs[0], engs[1]
+
+
+def test_prefix_splice_matches_cold_tokens():
+    """A hot-prefix admission via page splice produces bitwise-identical
+    greedy tokens to a cold full prefill — the tentpole parity pin. The
+    stream re-serves one prompt twice and a one-page-longer extension of it,
+    so the r>0 tail path runs with both 2- and 2.5-page matches, and the
+    spliced engine demonstrably prefills fewer tokens for the same output."""
+    cfg = _mk()
+    params = init_lm(cfg, jax.random.key(0))
+    rng = np.random.RandomState(11)
+    p0 = rng.randint(0, cfg.vocab_size, size=20).astype(np.int32)  # 2 full pages + 4
+    p_ext = np.concatenate([p0, rng.randint(0, cfg.vocab_size, size=8).astype(np.int32)])
+    p_cold = rng.randint(0, cfg.vocab_size, size=13).astype(np.int32)
+    prompts = [p0, p0, p_ext, p_cold, p0]
+    # arrivals serialize the admissions: an insertion must land before the
+    # re-serve of the same prefix probes for it
+    reqs = [
+        Request(rid=i, tokens=p, max_new_tokens=4 + (i % 3), arrival=2.0 * i)
+        for i, p in enumerate(prompts)
+    ]
+    cold, hot, ce, he = _run_pair(
+        cfg, params, reqs,
+        EngineConfig(**_PCFG), EngineConfig(prefix_cache=True, **_PCFG),
+    )
+    for rid in cold:
+        np.testing.assert_array_equal(cold[rid], hot[rid])
+    assert he.stats["spliced_admissions"] >= 3  # rids 1, 2, 4
+    assert he.stats["spliced_pages"] >= 6
+    # the whole point: spliced admissions skip the covered head's prefill
+    assert he.stats["prefill_tokens"] < ce.stats["prefill_tokens"]
+    assert he.stats["pages_allocated"] < ce.stats["pages_allocated"]
+
+
+def test_prefix_fully_covered_prompt_replays_via_cow():
+    """A prompt the cache covers COMPLETELY (r == 0) still needs one
+    replayed token for its first logits — and that token's KV write lands in
+    a SHARED page, so admission must copy-on-write it. Greedy tokens stay
+    bitwise identical to the cold serve."""
+    cfg = _mk()
+    params = init_lm(cfg, jax.random.key(0))
+    rng = np.random.RandomState(12)
+    p = rng.randint(0, cfg.vocab_size, size=16).astype(np.int32)  # exactly 2 pages
+    reqs = [
+        Request(rid=i, tokens=p, max_new_tokens=5, arrival=2.0 * i) for i in range(3)
+    ]
+    cold, hot, ce, he = _run_pair(
+        cfg, params, reqs,
+        EngineConfig(**_PCFG), EngineConfig(prefix_cache=True, **_PCFG),
+    )
+    for rid in cold:
+        np.testing.assert_array_equal(cold[rid], hot[rid])
+    assert he.stats["spliced_admissions"] == 2  # rids 1 and 2
+    assert he.stats["cow_copies"] >= 2  # the replayed last-page write, each time
+    assert he.stats["prefill_tokens"] == ce.stats["prefill_tokens"] - 2 * 15
+    # pinned pages stay resident after every owner drained
+    assert he.prefix.cached_pages > 0 and he.pool.pages_in_use > 0
+
+
+def test_prefix_cache_eviction_and_slot_reuse_parity():
+    """Hot-prefix traffic through a POOL-TIGHT engine: admissions must evict
+    cached (refcount-1) pages to make room, slots recycle across requests,
+    and decode growth CoWs shared pages mid-stream — greedy tokens still
+    match the cache-less engine bitwise, and the pool drains clean."""
+    cfg = _mk()
+    params = init_lm(cfg, jax.random.key(0))
+    prompts, budgets = hot_prefix_stream(
+        cfg.vocab_size, 10, 16, 8, seed=2, budget_min=3, shared_fraction=0.6,
+    )
+    reqs = [
+        Request(rid=i, tokens=p, max_new_tokens=b, arrival=0.7 * i)
+        for i, (p, b) in enumerate(zip(prompts, budgets))
+    ]
+    base = dict(_PCFG, pool_pages=8)  # 2 slots x (2-page prompt + growth): tight
+    cold, hot, ce, he = _run_pair(
+        cfg, params, reqs,
+        EngineConfig(**base), EngineConfig(prefix_cache=True, **base),
+    )
+    for rid in cold:
+        np.testing.assert_array_equal(cold[rid], hot[rid])
+    assert he.stats["spliced_admissions"] > 0
+    assert sorted(he.free_slots) == [0, 1]  # slots recycled, none leaked
+    # every non-pinned page accounted for: residual use is all cache pins
+    assert he.pool.pages_in_use == he.prefix.cached_pages
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding: spec == non-spec parity
+
+
+@pytest.mark.parametrize("matched", [True, False], ids=["matched", "mismatched"])
+def test_spec_decode_matches_plain_tokens(matched):
+    """The speculative engine produces bitwise-identical greedy tokens to
+    the non-speculative engine — whatever the drafter proposes. A MATCHED
+    drafter (the target itself) must certify most drafts (the acceptance
+    ceiling); a mismatched random drafter degrades acceptance toward zero
+    but NEVER token output."""
+    cfg = _mk()
+    params = init_lm(cfg, jax.random.key(0))
+    if matched:
+        drafter = (cfg, params)
+    else:
+        dcfg = _mk(num_layers=1, d_model=16, num_heads=2, num_kv_heads=1, d_ff=32)
+        drafter = (dcfg, init_lm(dcfg, jax.random.key(9)))
+    reqs = staggered_stream(
+        cfg.vocab_size, 7, seed=4, prompt_range=(4, 14), budget_range=(2, 9),
+    )
+    plain, spec, pe, se = _run_pair(
+        cfg, params, reqs,
+        EngineConfig(**_PCFG), EngineConfig(spec_k=3, **_PCFG),
+        drafter_b=drafter,
+    )
+    for rid in plain:
+        np.testing.assert_array_equal(plain[rid], spec[rid])
+    assert se.stats["spec_steps"] > 0 and se.stats["draft_proposed"] > 0
+    acc = se.stats["draft_accepted"] / se.stats["draft_proposed"]
+    if matched:
+        assert acc > 0.5, f"matched drafter should certify most drafts, got {acc:.2f}"
+        # certifying k+1 tokens per verify means FEWER dispatches; a
+        # rejected-everything drafter instead degrades to ~1 token/verify
+        assert se.stats["decode_chunks"] <= pe.stats["decode_chunks"]
+
+
+def test_spec_with_prefix_cache_combined_parity():
+    """Both accelerations at once on hot-prefix traffic: spliced admissions
+    feed the drafter full prompts, decode CoWs shared pages under the
+    speculative chunk's wider write horizon — and tokens still match the
+    plain engine bitwise."""
+    cfg = _mk()
+    params = init_lm(cfg, jax.random.key(0))
+    prompts, budgets = hot_prefix_stream(
+        cfg.vocab_size, 8, 16, 6, seed=5, budget_min=2, shared_fraction=0.5,
+    )
+    reqs = [
+        Request(rid=i, tokens=p, max_new_tokens=b, arrival=1.0 * i)
+        for i, (p, b) in enumerate(zip(prompts, budgets))
+    ]
+    plain, boosted, pe, be = _run_pair(
+        cfg, params, reqs,
+        EngineConfig(**_PCFG),
+        EngineConfig(prefix_cache=True, spec_k=3, **_PCFG),
+        drafter_b=(cfg, params),
+    )
+    for rid in plain:
+        np.testing.assert_array_equal(plain[rid], boosted[rid])
+    assert be.stats["spliced_admissions"] > 0 and be.stats["spec_steps"] > 0
+
+
+def test_prefix_spec_config_fail_fast():
+    """Every inconsistent prefix-cache / spec-decode knob dies at
+    construction with a clear message — config-level where the config
+    suffices, engine-level where the arch or drafter is needed."""
+    with pytest.raises(ValueError, match="paged"):
+        EngineConfig(kv_layout="dense", prefix_cache=True)
+    with pytest.raises(ValueError, match="temperature"):
+        EngineConfig(spec_k=2, temperature=0.7)
+    with pytest.raises(ValueError, match=">= 0"):
+        EngineConfig(spec_k=-1)
+    cfg = _mk()
+    params = init_lm(cfg, jax.random.key(0))
+    spec_cfg = EngineConfig(spec_k=2, **_PCFG)
+    with pytest.raises(ValueError, match="no drafter"):
+        ServeEngine(cfg, params, spec_cfg)
+    with pytest.raises(ValueError, match="spec_k == 0"):
+        ServeEngine(cfg, params, EngineConfig(**_PCFG), drafter=(cfg, params))
+    # drafter gates: rollback needs an attention-only FULL cache + one vocab
+    swa = _mk(sliding_window=8)
+    with pytest.raises(ValueError, match="ring"):
+        ServeEngine(cfg, params, spec_cfg, drafter=(swa, params))
+    ssm = _mk(family="ssm", ssm_kind="mamba", d_ff=0, num_kv_heads=4)
+    with pytest.raises(ValueError, match="attention-only"):
+        ServeEngine(cfg, params, spec_cfg, drafter=(ssm, params))
+    other_vocab = _mk(vocab_size=32)
+    with pytest.raises(ValueError, match="vocab"):
+        ServeEngine(cfg, params, spec_cfg, drafter=(other_vocab, params))
+
+
+# ---------------------------------------------------------------------------
 # launch.serve argument audit
 
 
@@ -488,6 +675,27 @@ def test_serve_args_fail_fast():
         # passes the per-slot floor (4 >= 4) but not the bucket_min bill —
         # the dry EngineConfig construction catches it pre-device
         validate_args(parser.parse_args(["--pool-pages", "4", "--max-slots", "4"]), dec)
+    # prefix-cache / spec-decode audits
+    with pytest.raises(SystemExit, match="prefix-cache"):
+        validate_args(parser.parse_args(["--prefix-cache", "--kv-layout", "dense"]), dec)
+    with pytest.raises(SystemExit, match="hot-fraction"):
+        validate_args(parser.parse_args(["--hot-fraction", "1.5"]), dec)
+    with pytest.raises(SystemExit, match="spec-k"):
+        validate_args(parser.parse_args(["--spec-decode", "--spec-k", "0"]), dec)
+    with pytest.raises(SystemExit, match="temperature"):
+        validate_args(parser.parse_args(["--spec-decode", "--temperature", "0.7"]), dec)
+    with pytest.raises(SystemExit, match="paged"):
+        validate_args(parser.parse_args(["--spec-decode", "--kv-layout", "dense"]), dec)
+    with pytest.raises(SystemExit, match="attention-only"):
+        # recurrent mixers cannot roll back past a rejected draft
+        validate_args(parser.parse_args(["--spec-decode", "--drafter", "xlstm-125m"]), dec)
+    with pytest.raises(SystemExit, match="sliding window"):
+        # an SWA ring aliases stale rejected-draft writes after rollback
+        validate_args(parser.parse_args(["--spec-decode", "--drafter", "mixtral-8x7b"]), dec)
+    with pytest.raises(SystemExit, match="vocab"):
+        validate_args(parser.parse_args(["--spec-decode", "--drafter", "granite-3-2b"]), dec)
+    # both features on their defaults pass the dry construction
+    validate_args(parser.parse_args(["--prefix-cache", "--spec-decode"]), dec)
     # dense layout ignores page knobs; static engine ignores them entirely
     validate_args(parser.parse_args(["--kv-layout", "dense", "--page-size", "12"]), dec)
     validate_args(parser.parse_args(["--engine", "static", "--page-size", "12"]), dec)
