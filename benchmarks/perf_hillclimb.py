@@ -572,13 +572,32 @@ def pair_fleetpath(out):
         "requeued": arms["fleet"].stats["requeued"],
         "jax_backend": jax.default_backend(),
     }
+    # telemetry-on guard arm: the SAME fleet stream with the process-global
+    # span tracer + registry enabled (what --trace-out/--metrics-out switch
+    # on). Spans bracket once-per-dispatch host actions only, so the enabled
+    # path must stay within run-to-run noise of the plain fleet arm —
+    # telemetry_overhead drifting above ~1.05 flags a hot-path regression.
+    from repro import obs
+
+    obs.configure(metrics=True, trace=True)
+    try:
+        tel = [run_arm("fleet", dt) for _ in range(REPEATS)]
+    finally:
+        trace_events = len(obs.tracer())
+        obs.configure(metrics=False, trace=False)
+    tel_tok = sorted(t[0] for t in tel)[REPEATS // 2]
+    rec["fleet_telemetry_tok_per_s"] = round(tel_tok, 2)
+    rec["telemetry_overhead"] = round(med["fleet"][0] / max(tel_tok, 1e-9), 3)
+    rec["telemetry_trace_events"] = trace_events
     log.info(
         "fleetpath: fleet=%.1f tok/s mono=%.1f tok/s speedup=%.2fx "
-        "p95 %.3fs vs %.3fs queue-wait p95 %.3fs vs %.3fs (%d handoffs)",
+        "p95 %.3fs vs %.3fs queue-wait p95 %.3fs vs %.3fs (%d handoffs) "
+        "telemetry-on=%.1f tok/s (overhead %.2fx, %d spans)",
         rec["fleet_tok_per_s"], rec["mono_tok_per_s"], rec["speedup"],
         rec["fleet_p95_s"], rec["mono_p95_s"],
         rec["fleet_queue_wait_p95_s"], rec["mono_queue_wait_p95_s"],
-        rec["handoffs"],
+        rec["handoffs"], rec["fleet_telemetry_tok_per_s"],
+        rec["telemetry_overhead"], rec["telemetry_trace_events"],
     )
     out["fleetpath:router_disagg_vs_mono"] = rec
 

@@ -29,6 +29,7 @@ Two epoch drivers share this module's loss machinery:
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -36,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.config.train import OFLConfig, TrainConfig
 from repro.core.buffer import ReplayBuffer, buffer_as_lists, buffer_init
 from repro.core.client_bank import make_ensemble
@@ -204,14 +206,28 @@ def run_coboosting(
         srv_steps = jnp.zeros((), jnp.int32)
         for epoch in range(cfg.epochs):
             slot_order, n_valid = distill_schedule(epoch, cfg.buffer_batches)
-            (
-                state.server_params, srv_opt_state, state.gen_params, gen_opt_state,
-                state.weights, buf, key, srv_steps, gloss, dmean,
-            ) = epoch_step(
-                state.server_params, srv_opt_state, state.gen_params, gen_opt_state,
-                state.weights, buf, key, srv_steps, slot_order, n_valid, client_params,
-            )
+            # the span/timer bracket the DISPATCH of the fused program — no
+            # sync is forced, so in steady state dispatch time backpressures
+            # to epoch time once the device pipeline fills. Per-phase device
+            # time comes from jax.named_scope inside the program (visible
+            # under --profile-dir), not from host stamps.
+            t0 = time.perf_counter()
+            with obs.span("ofl.epoch", epoch=epoch, driver="fused"):
+                (
+                    state.server_params, srv_opt_state, state.gen_params, gen_opt_state,
+                    state.weights, buf, key, srv_steps, gloss, dmean,
+                ) = epoch_step(
+                    state.server_params, srv_opt_state, state.gen_params, gen_opt_state,
+                    state.weights, buf, key, srv_steps, slot_order, n_valid, client_params,
+                )
             state.dispatch_count += 1
+            obs.observe("ofl.epoch.step_s", time.perf_counter() - t0, driver="fused")
+            obs.inc("ofl.epoch.count")
+            obs.inc("ofl.epoch.dispatches")
+            obs.inc("ofl.gen.steps", cfg.gen_iters)
+            if cfg.use_ee:
+                obs.inc("ofl.ee.steps")
+            obs.inc("ofl.kd.steps", int(n_valid))
             if eval_fn is not None and ((epoch + 1) % eval_every == 0 or epoch == cfg.epochs - 1):
                 metrics = eval_fn(state.server_params, state.weights)
                 metrics.update(epoch=epoch, gen_loss=float(gloss), distill_loss=float(dmean))
@@ -237,12 +253,18 @@ def run_coboosting(
     state = OFLState(server_params, gen_params, w, [], [], [])
     srv_step_idx = 0
     for epoch in range(cfg.epochs):
+        t_ep = time.perf_counter()
         key, k1, k2, k3 = jax.random.split(key, 4)
         # 1. generator phase (lines 5–9)
         z, y = _sample_zy(k1, cfg.batch_size, cfg.latent_dim, num_classes)
-        state.gen_params, gen_opt_state, gloss = gen_phase(
-            state.gen_params, gen_opt_state, z, y, client_params, state.weights, state.server_params
-        )
+        t0 = time.perf_counter()
+        with obs.span("ofl.gen.boost", epoch=epoch, iters=cfg.gen_iters):
+            state.gen_params, gen_opt_state, gloss = gen_phase(
+                state.gen_params, gen_opt_state, z, y, client_params, state.weights, state.server_params
+            )
+        obs.observe("ofl.gen.step_s", time.perf_counter() - t0)
+        obs.inc("ofl.gen.steps", cfg.gen_iters)
+        obs.inc("ofl.epoch.dispatches")
         x_new = gen_apply(state.gen_params, z, y)
         state.buffer_x.append(x_new)
         state.buffer_y.append(y)
@@ -252,23 +274,35 @@ def run_coboosting(
 
         # 2–3. EE on the (diversified) fresh hard batch (lines 11–14)
         if cfg.use_ee:
-            state.weights = ee_step(state.weights, x_new, y, k2, client_params)
+            t0 = time.perf_counter()
+            with obs.span("ofl.ee.weight_search", epoch=epoch):
+                state.weights = ee_step(state.weights, x_new, y, k2, client_params)
+            obs.observe("ofl.ee.step_s", time.perf_counter() - t0)
+            obs.inc("ofl.ee.steps")
+            obs.inc("ofl.epoch.dispatches")
 
         # 4. server distillation over the replay buffer (lines 16–18)
         dlosses = []
-        for bi in np.random.RandomState(epoch).permutation(len(state.buffer_x)):
-            k3, kb = jax.random.split(k3)
-            state.server_params, srv_opt_state, dl = distill_step(
-                state.server_params,
-                srv_opt_state,
-                state.buffer_x[bi],
-                kb,
-                client_params,
-                state.weights,
-                jnp.asarray(srv_step_idx, jnp.int32),
-            )
-            srv_step_idx += 1
-            dlosses.append(dl)  # device scalar — no per-batch host sync
+        with obs.span("ofl.kd", epoch=epoch, batches=len(state.buffer_x)):
+            for bi in np.random.RandomState(epoch).permutation(len(state.buffer_x)):
+                k3, kb = jax.random.split(k3)
+                t0 = time.perf_counter()
+                state.server_params, srv_opt_state, dl = distill_step(
+                    state.server_params,
+                    srv_opt_state,
+                    state.buffer_x[bi],
+                    kb,
+                    client_params,
+                    state.weights,
+                    jnp.asarray(srv_step_idx, jnp.int32),
+                )
+                obs.observe("ofl.kd.step_s", time.perf_counter() - t0)
+                obs.inc("ofl.kd.steps")
+                obs.inc("ofl.epoch.dispatches")
+                srv_step_idx += 1
+                dlosses.append(dl)  # device scalar — no per-batch host sync
+        obs.observe("ofl.epoch.step_s", time.perf_counter() - t_ep, driver="legacy")
+        obs.inc("ofl.epoch.count")
 
         if eval_fn is not None and ((epoch + 1) % eval_every == 0 or epoch == cfg.epochs - 1):
             dmean = float(np.mean(jax.device_get(dlosses)))

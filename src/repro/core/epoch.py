@@ -238,34 +238,40 @@ def make_coboost_epoch(
         keys = jax.random.split(key, nsplit)
         key, k1, k3 = keys[0], keys[1], keys[-1]
 
+        # jax.named_scope annotates the XLA ops of each Algorithm-1 phase —
+        # zero host cost, but an --profile-dir device trace shows the phases
+        # as named regions lining up with the host-side ofl.epoch span.
         # 1. generator phase (Algorithm 1 lines 5-9)
-        z, y = _sample_zy(k1, cfg.batch_size, cfg.latent_dim, num_classes)
+        with jax.named_scope("ofl.gen.boost"):
+            z, y = _sample_zy(k1, cfg.batch_size, cfg.latent_dim, num_classes)
 
-        def gbody(i, carry):
-            gp, st = carry
-            _, grads = jax.value_and_grad(gen_loss_fn)(gp, z, y, client_params, w, server_params)
-            updates, st = gen_opt.update(grads, st, gp, i)
-            return apply_updates(gp, updates), st
+            def gbody(i, carry):
+                gp, st = carry
+                _, grads = jax.value_and_grad(gen_loss_fn)(gp, z, y, client_params, w, server_params)
+                updates, st = gen_opt.update(grads, st, gp, i)
+                return apply_updates(gp, updates), st
 
-        gen_params, gen_opt_state = jax.lax.fori_loop(
-            0, cfg.gen_iters, gbody, (gen_params, gen_opt_state)
-        )
-        gloss = gen_loss_fn(gen_params, z, y, client_params, w, server_params)
-        x_new = gen_apply(gen_params, z, y)
-        buf = buffer_append(buf, x_new, y)
+            gen_params, gen_opt_state = jax.lax.fori_loop(
+                0, cfg.gen_iters, gbody, (gen_params, gen_opt_state)
+            )
+            gloss = gen_loss_fn(gen_params, z, y, client_params, w, server_params)
+            x_new = gen_apply(gen_params, z, y)
+            buf = buffer_append(buf, x_new, y)
 
         # 2-3. EE on the (diversified) fresh hard batch (lines 11-14). The
         # Eq. 11/12 CE-over-ensemble + w-cotangent runs inside the fused
         # ghm_ce(weighted=False) kernel on the Pallas backends.
         if use_ee:
-            k2 = keys[2]
-            xe = diversify(logits_all_fn, client_params, w, x_new, k2, cfg.epsilon) if cfg.use_dhs else x_new
-            w = update_weights(w, logits_all_fn(client_params, xe), y, mu, backend=backend)
+            with jax.named_scope("ofl.ee.weight_search"):
+                k2 = keys[2]
+                xe = diversify(logits_all_fn, client_params, w, x_new, k2, cfg.epsilon) if cfg.use_dhs else x_new
+                w = update_weights(w, logits_all_fn(client_params, xe), y, mu, backend=backend)
 
         # 4. server distillation over the replay ring (lines 16-18)
-        server_params, srv_opt_state, srv_steps, dmean = sweep(
-            server_params, srv_opt_state, buf, k3, w, client_params, slot_order, n_valid, srv_step0
-        )
+        with jax.named_scope("ofl.kd"):
+            server_params, srv_opt_state, srv_steps, dmean = sweep(
+                server_params, srv_opt_state, buf, k3, w, client_params, slot_order, n_valid, srv_step0
+            )
         return (
             server_params, srv_opt_state, gen_params, gen_opt_state, w, buf,
             key, srv_steps, gloss, dmean,

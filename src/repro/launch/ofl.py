@@ -17,6 +17,7 @@ from functools import partial
 import jax
 import numpy as np
 
+from repro import obs
 from repro.config.train import OFLConfig
 from repro.core import (
     default_image_setup,
@@ -142,7 +143,24 @@ def main() -> None:
                         "(build_market_grouped) instead of the per-client loop")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--out", default=None)
+    # telemetry (repro.obs) — off by default, zero-cost when off
+    p.add_argument("--metrics-out", default=None, metavar="PATH.jsonl",
+                   help="dump the ofl.* metrics registry (epoch/phase "
+                        "counters + step-time histograms) as JSONL plus a "
+                        ".prom Prometheus-text sibling at exit")
+    p.add_argument("--trace-out", default=None, metavar="PATH.json",
+                   help="record host-side phase spans and dump Chrome "
+                        "trace-event JSON (Perfetto-loadable) at exit")
+    p.add_argument("--profile-dir", default=None,
+                   help="also run a JAX profiler trace into this directory "
+                        "(the fused epoch's jax.named_scope phases show up "
+                        "in the device timeline)")
     args = p.parse_args()
+    obs.configure(
+        metrics=bool(args.metrics_out),
+        trace=bool(args.trace_out),
+        profile_dir=args.profile_dir,
+    )
 
     shape = (args.image, args.image, 3)
     cfg = OFLConfig(
@@ -186,6 +204,14 @@ def main() -> None:
     if args.out:
         with open(args.out, "w") as f:
             json.dump({"method": args.method, **result}, f, indent=1)
+    if args.profile_dir:
+        obs.stop_jax_profile(obs.tracer())
+    if args.metrics_out:
+        obs.registry().dump(args.metrics_out)
+        log.info("metrics snapshot -> %s (+ .prom)", args.metrics_out)
+    if args.trace_out:
+        obs.tracer().dump(args.trace_out)
+        log.info("trace -> %s (%d events)", args.trace_out, len(obs.tracer()))
 
 
 if __name__ == "__main__":

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.config import get_arch, reduced_variant
 from repro.data import make_token_stream
 from repro.launch.mesh import (
@@ -122,7 +123,36 @@ def build_parser() -> argparse.ArgumentParser:
                    choices=("auto", "pallas", "pallas-interpret", "ref"),
                    help="DEPRECATED: use --backend (this alias sets only the "
                         "paged decode op)")
+    # telemetry (repro.obs) — off by default, zero-cost when off
+    p.add_argument("--metrics-out", default=None, metavar="PATH.jsonl",
+                   help="dump the metrics registry as JSONL (plus a .prom "
+                        "Prometheus-text sibling) at exit; also routes every "
+                        "replica's stats into one shared registry with "
+                        "replica labels")
+    p.add_argument("--trace-out", default=None, metavar="PATH.json",
+                   help="record host-side spans (route/admit/prefill/handoff/"
+                        "decode-chunk/...) and dump Chrome trace-event JSON "
+                        "(Perfetto-loadable) at exit")
+    p.add_argument("--profile-dir", default=None,
+                   help="also run a JAX profiler trace into this directory, "
+                        "bridging every span to a TraceAnnotation so host "
+                        "and device timelines line up")
     return p
+
+
+def _finalize_telemetry(args, engines=()) -> None:
+    """Publish end-of-run KV/prefix gauges and dump the artifacts the flags
+    asked for (the validator in :mod:`repro.obs.validate` gates them in CI)."""
+    for eng in engines:
+        eng.publish_gauges()
+    if args.profile_dir:
+        obs.stop_jax_profile(obs.tracer())
+    if args.metrics_out:
+        obs.registry().dump(args.metrics_out)
+        log.info("metrics snapshot -> %s (+ .prom)", args.metrics_out)
+    if args.trace_out:
+        obs.tracer().dump(args.trace_out)
+        log.info("trace -> %s (%d events)", args.trace_out, len(obs.tracer()))
 
 
 def _effective_replicas(args) -> int:
@@ -263,6 +293,7 @@ def run_static(args, cfg, params) -> None:
     toks = args.batch * args.gen
     log.info("static: %d tokens in %.3fs (%.1f tok/s, 1 dispatch)", toks, dt, toks / max(dt, 1e-9))
     log.info("sample continuation (seq 0): %s", out[0, :16].tolist())
+    _finalize_telemetry(args)
 
 
 def _drafter_config(args):
@@ -314,14 +345,19 @@ def build_fleet(args, cfg, params) -> list:
         subs = replica_meshes(make_fleet_mesh(replicas))
     else:
         subs = [None] * replicas
+    # with --metrics-out every replica's stats land in the process-global
+    # registry under its replica label (one snapshot for the whole fleet);
+    # without it each engine keeps its private always-on registry
+    registry = obs.registry() if args.metrics_out else None
     engines = []
-    for sub in subs:
+    for i, sub in enumerate(subs):
         pmesh = dmesh = sub
         if args.disagg and sub is not None:
             pmesh, dmesh = disagg_submeshes(sub)
         engines.append(
             ServeEngine(
-                cfg, params, ecfg, mesh=dmesh, prefill_mesh=pmesh, drafter=drafter
+                cfg, params, ecfg, mesh=dmesh, prefill_mesh=pmesh, drafter=drafter,
+                registry=registry, replica=i,
             )
         )
     return engines
@@ -406,6 +442,7 @@ def run_continuous(args, cfg, params) -> None:
             sched.stats["affinity_hits"],
         )
     log.info("sample continuation (rid 0): %s", completions[0].tokens[:16].tolist())
+    _finalize_telemetry(args, engines)
 
 
 def main() -> None:
@@ -416,6 +453,11 @@ def main() -> None:
         # model's actual cache length (a reduced variant clamps the window)
         cfg = reduced_variant(cfg).replace(dtype="float32", param_dtype="float32")
     validate_args(args, cfg)  # before any device/mesh work
+    obs.configure(
+        metrics=bool(args.metrics_out),
+        trace=bool(args.trace_out),
+        profile_dir=args.profile_dir,
+    )
     cfg = cfg.replace(backend=policy_from_flags(
         backend=args.backend,
         attn_backend=args.attn_backend,

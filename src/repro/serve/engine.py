@@ -52,12 +52,19 @@ another slot (a stale row was a real cross-slot clobber, pinned by
 ``test_engine_paged_idle_slots_cannot_clobber``).
 
 ``stats`` counts dispatches and host syncs; tests pin host syncs = O(1) per
-decode chunk, independent of chunk length and token count.
+decode chunk, independent of chunk length and token count. The stats are no
+longer a free dict: they are a :class:`repro.obs.StatsView` over a metrics
+registry (``serve.*`` namespace, declared once in :mod:`repro.obs.names`,
+labelled with the replica id) — a bare engine gets a private registry, a
+fleet launcher passes one shared registry so replicas aggregate. Host-side
+spans (``obs.span``) bracket every hot-path action (prefill → handoff →
+adopt → decode chunk → sync); they never force a device sync, so the
+O(1)-syncs-per-chunk contract is telemetry-independent.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+from typing import Any, Dict, List, MutableMapping, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -65,7 +72,9 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
 from repro.models import group_pattern, init_lm_state, lm_decode, lm_extend, lm_prefill
+from repro.obs import KV_GAUGES, SERVE_ENGINE_METRICS, MetricsRegistry, StatsView
 from repro.serve.kv_pool import KVPool
 from repro.sharding import infer_param_specs, shard_engine_state
 
@@ -245,30 +254,15 @@ def _require_extend_capable(cfg, ecfg: EngineConfig, feature: str) -> None:
         )
 
 
-def _fresh_stats() -> Dict[str, int]:
-    return {
-        "admitted": 0,
-        "prefill_dispatches": 0,
-        "prefill_tokens": 0,
-        "handoffs": 0,
-        "decode_chunks": 0,
-        "host_syncs": 0,
-        "evicted": 0,
-        "page_appends": 0,
-        "pages_allocated": 0,
-        "table_resets": 0,
-        # prefix cache (serve/prefix_cache.py)
-        "prefix_hits": 0,
-        "spliced_admissions": 0,
-        "spliced_pages": 0,
-        "cow_copies": 0,
-        # speculative decoding (serve/spec_decode.py); the draft_* and
-        # spec_steps values are mirrors of on-device counters, refreshed at
-        # sync() — they ride the existing once-per-chunk host transfer
-        "spec_steps": 0,
-        "draft_proposed": 0,
-        "draft_accepted": 0,
-    }
+def _fresh_stats(registry: Optional[MetricsRegistry] = None, replica: int = 0) -> StatsView:
+    """One engine's stats: a dict-shaped view over the ``serve.*`` metric
+    namespace (every key declared once in ``repro.obs.names`` — the old
+    hand-maintained literal dict could drift against the router's). The
+    draft_*/spec_steps values are mirrors of on-device counters, refreshed
+    at sync() — they ride the existing once-per-chunk host transfer."""
+    if registry is None:
+        registry = MetricsRegistry()  # private, always-on: stats must count
+    return registry.view(SERVE_ENGINE_METRICS, replica=replica)
 
 
 def _shard_params(params, mesh):
@@ -287,14 +281,15 @@ class PrefillWorker:
     and (paged layout) a staging pool bounding in-flight handoff pages."""
 
     def __init__(self, cfg, params, ecfg: EngineConfig, *, mesh=None,
-                 stats: Optional[Dict[str, int]] = None):
+                 stats: Optional[MutableMapping] = None, replica: int = 0):
         self.cfg = cfg
         self.ecfg = ecfg
         self.mesh = mesh
+        self.replica = replica
         self.params = _shard_params(params, mesh) if mesh is not None else params
         self.layout = _engine_layout(cfg, ecfg)
         self.staging: Optional[KVPool] = KVPool(cfg, ecfg) if self.layout == "paged" else None
-        self.stats = stats if stats is not None else _fresh_stats()
+        self.stats = stats if stats is not None else _fresh_stats(replica=replica)
         self._prefill_jit = jax.jit(self._prefill_fn)
         self.reset()
 
@@ -361,9 +356,10 @@ class PrefillWorker:
             # reset() can account (and reclaim) in-flight handoffs.
             n_alloc = self.staging.required_pages(lb)
             staging_id, _ = self.staging.stage(n * n_alloc)
-        self._rng, sealed, toks0 = self._prefill_jit(
-            self.params, self._rng, jnp.asarray(padded), jnp.asarray(lens)
-        )
+        with obs.span("serve.prefill", replica=self.replica, n=n, bucket=lb):
+            self._rng, sealed, toks0 = self._prefill_jit(
+                self.params, self._rng, jnp.asarray(padded), jnp.asarray(lens)
+            )
         self.stats["prefill_dispatches"] += 1
         self.stats["prefill_tokens"] += n * lb
         return KVHandoff(
@@ -392,14 +388,15 @@ class DecodeWorker:
     SpecDecoder`)."""
 
     def __init__(self, cfg, params, ecfg: EngineConfig, *, mesh=None,
-                 stats: Optional[Dict[str, int]] = None, drafter=None):
+                 stats: Optional[MutableMapping] = None, drafter=None, replica: int = 0):
         self.cfg = cfg
         self.ecfg = ecfg
         self.mesh = mesh
+        self.replica = replica
         self.params = _shard_params(params, mesh) if mesh is not None else params
         self.layout = _engine_layout(cfg, ecfg)
         self.pool: Optional[KVPool] = KVPool(cfg, ecfg) if self.layout == "paged" else None
-        self.stats = stats if stats is not None else _fresh_stats()
+        self.stats = stats if stats is not None else _fresh_stats(replica=replica)
         self.free_slots: List[int] = list(range(ecfg.max_slots))
         self._state: Optional[DecodeState] = None
         # host-side per-slot metadata for page planning: (true_len, budget)
@@ -775,8 +772,9 @@ class DecodeWorker:
             # cross-worker transport: the sealed buffers were produced on the
             # prefill worker's mesh slice — replicate them onto ours (the
             # ICI/DCN hop of a real disaggregated fleet)
-            rep = NamedSharding(self.mesh, P())
-            sealed, toks0 = jax.device_put((sealed, toks0), rep)
+            with obs.span("serve.handoff", replica=self.replica, n=n):
+                rep = NamedSharding(self.mesh, P())
+                sealed, toks0 = jax.device_put((sealed, toks0), rep)
         gslots = [self.free_slots.pop() for _ in range(n)]
         width = self.pool.pages_per_slot if self.pool is not None else 1
         table_rows = np.zeros((n, width), np.int32)
@@ -790,16 +788,17 @@ class DecodeWorker:
                 self._spliced[slot] = 0
                 self._stale_slots.discard(slot)  # row fully rewritten
         self.stats["pages_allocated"] += n * max(handoff.n_alloc, 0)
-        self._state = self._adopt_jit(
-            self._state,
-            sealed,
-            toks0,
-            jnp.asarray(gslots, jnp.int32),
-            jnp.asarray(handoff.true_lens),
-            jnp.asarray(handoff.budgets),
-            jnp.asarray(table_rows),
-            jnp.asarray(page_ids),
-        )
+        with obs.span("serve.adopt", replica=self.replica, n=n):
+            self._state = self._adopt_jit(
+                self._state,
+                sealed,
+                toks0,
+                jnp.asarray(gslots, jnp.int32),
+                jnp.asarray(handoff.true_lens),
+                jnp.asarray(handoff.budgets),
+                jnp.asarray(table_rows),
+                jnp.asarray(page_ids),
+            )
         handoff.source.release(handoff)
         if self._spec is not None:
             self._spec.on_admit(
@@ -874,19 +873,20 @@ class DecodeWorker:
         table_row = self.pool.table_row(slot)  # AFTER cow: private ids only
         # scalars ride as traced device values so the compiled program is
         # keyed on the tail bucket alone, not on slot/length combinations
-        self._state = self._splice_jit(
-            self.params,
-            self._state,
-            jnp.asarray(tail),
-            jnp.asarray(slot, jnp.int32),
-            jnp.asarray(start, jnp.int32),
-            jnp.asarray(last_idx, jnp.int32),
-            jnp.asarray(budget, jnp.int32),
-            jnp.asarray(true_len, jnp.int32),
-            jnp.asarray(table_row),
-            jnp.asarray(cow_src, jnp.int32),
-            jnp.asarray(cow_dst, jnp.int32),
-        )
+        with obs.span("serve.splice", replica=self.replica, matched=m, tail=tb):
+            self._state = self._splice_jit(
+                self.params,
+                self._state,
+                jnp.asarray(tail),
+                jnp.asarray(slot, jnp.int32),
+                jnp.asarray(start, jnp.int32),
+                jnp.asarray(last_idx, jnp.int32),
+                jnp.asarray(budget, jnp.int32),
+                jnp.asarray(true_len, jnp.int32),
+                jnp.asarray(table_row),
+                jnp.asarray(cow_src, jnp.int32),
+                jnp.asarray(cow_dst, jnp.int32),
+            )
         self._meta[slot] = (true_len, budget)
         self._pos_est[slot] = true_len
         self._spliced[slot] = m
@@ -1003,13 +1003,16 @@ class DecodeWorker:
 
     def decode_chunk(self) -> None:
         """Up to ``decode_chunk`` batched decode steps in ONE dispatch (or,
-        with speculative decoding on, the draft/verify chunk program)."""
-        if self.pool is not None:
-            self._ensure_chunk_pages()
-        if self._spec is not None:
-            self._spec.chunk()
-        else:
-            self._state = self._chunk_jit(self.params, self._state)
+        with speculative decoding on, the draft/verify chunk program). The
+        span brackets dispatch submission only — no sync is forced, so the
+        O(1)-host-syncs-per-chunk contract holds with tracing on."""
+        with obs.span("serve.decode_chunk", replica=self.replica):
+            if self.pool is not None:
+                self._ensure_chunk_pages()
+            if self._spec is not None:
+                self._spec.chunk()
+            else:
+                self._state = self._chunk_jit(self.params, self._state)
         self.stats["decode_chunks"] += 1
 
     def sync(self):
@@ -1018,15 +1021,32 @@ class DecodeWorker:
         layout's conservative per-slot position estimates to the truth, and
         (spec mode) refreshes the draft counters' host mirrors — the
         counters ride the SAME transfer, costing no extra sync."""
-        if self._spec is not None:
-            active, n_out = self._spec.sync()
-        else:
-            active, n_out = jax.device_get((self._state.active, self._state.n_out))
+        with obs.span("serve.sync", replica=self.replica):
+            if self._spec is not None:
+                active, n_out = self._spec.sync()
+            else:
+                active, n_out = jax.device_get((self._state.active, self._state.n_out))
         self.stats["host_syncs"] += 1
         if self.pool is not None:
             for slot, (true_len, _) in self._meta.items():
                 self._pos_est[slot] = true_len + int(n_out[slot]) - 1
         return active, n_out
+
+    def publish_gauges(self) -> None:
+        """Push the pool/prefix occupancy gauges into the stats registry —
+        called at snapshot/dump time (occupancy is a point-in-time value;
+        sampling it per chunk would be noise, not signal)."""
+        if not isinstance(self.stats, StatsView):
+            return
+        reg, labels = self.stats.registry, self.stats.labels
+        if self.pool is not None:
+            reg.set_gauge(KV_GAUGES["free_pages"], self.pool.free_pages, **labels)
+            reg.set_gauge(KV_GAUGES["pages_in_use"], self.pool.pages_in_use, **labels)
+            reg.set_gauge(KV_GAUGES["capacity_pages"], self.pool.n_pages, **labels)
+        if self.prefix is not None:
+            reg.set_gauge(
+                KV_GAUGES["reclaimable_pages"], self.prefix.reclaimable(), **labels
+            )
 
     def fetch(self, slot: int, n_out: int) -> np.ndarray:
         """Copy a finished slot's generated tokens to host and free the slot
@@ -1059,7 +1079,8 @@ class ServeEngine:
     is the disaggregated pair's parity oracle by construction."""
 
     def __init__(self, cfg, params, ecfg: EngineConfig, *, mesh=None, prefill_mesh=None,
-                 drafter=None):
+                 drafter=None, registry: Optional[MetricsRegistry] = None,
+                 replica: int = 0):
         if cfg.is_encoder_only:
             raise ValueError(f"{cfg.name} is encoder-only: nothing to decode")
         if cfg.frontend == "vision":
@@ -1078,13 +1099,15 @@ class ServeEngine:
                 "to the dense layout, which has no page units to hand off — a "
                 "disaggregated prefill/decode pair is paged-only. Drop --disagg."
             )
-        self.stats: Dict[str, int] = _fresh_stats()
+        self.replica = replica
+        self.stats: StatsView = _fresh_stats(registry, replica)
         self.prefill = PrefillWorker(
             cfg, params, ecfg, mesh=prefill_mesh if prefill_mesh is not None else mesh,
-            stats=self.stats,
+            stats=self.stats, replica=replica,
         )
         self.decode = DecodeWorker(
-            cfg, params, ecfg, mesh=mesh, stats=self.stats, drafter=drafter
+            cfg, params, ecfg, mesh=mesh, stats=self.stats, drafter=drafter,
+            replica=replica,
         )
 
     # -- delegation (the device state lives on the workers) -----------------
@@ -1286,3 +1309,7 @@ class ServeEngine:
 
     def fetch(self, slot: int, n_out: int) -> np.ndarray:
         return self.decode.fetch(slot, n_out)
+
+    def publish_gauges(self) -> None:
+        """Push pool/prefix occupancy gauges into the stats registry."""
+        self.decode.publish_gauges()

@@ -30,6 +30,9 @@ def latency_summary(completions, wall_s: float) -> Dict[str, float]:
     them."""
     lats = [c.latency for c in completions]
     waits = [c.queue_wait for c in completions]
+    # hand-built completions (and old artifacts) may predate first_token
+    ttfts = [c.ttft for c in completions
+             if getattr(c, "first_token", None) is not None]
     toks = sum(len(c.tokens) for c in completions)
     return {
         "tok_per_s": toks / max(wall_s, 1e-9),
@@ -38,4 +41,6 @@ def latency_summary(completions, wall_s: float) -> Dict[str, float]:
         "p95_s": percentile(lats, 95),
         "queue_wait_p50_s": percentile(waits, 50),
         "queue_wait_p95_s": percentile(waits, 95),
+        "ttft_p50_s": percentile(ttfts, 50),
+        "ttft_p95_s": percentile(ttfts, 95),
     }

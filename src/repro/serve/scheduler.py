@@ -31,20 +31,35 @@ disaggregated prefill/decode pair, possibly on its own mesh slice):
 — is the N=1 router. Per decoded token the host does O(1/decode_chunk)
 syncs per replica; the legacy static path did one ``np.asarray`` per token.
 
-Completions record ``arrival``, ``admitted`` and ``finished`` separately: a
-deferred request's queue wait (``admitted - arrival``) is real latency the
-router caused, and folding it into decode service time (as a single
-``latency`` once did) hides exactly the signal a router exists to optimize.
+Completions record ``arrival``, ``admitted``, ``first_token`` and
+``finished`` separately: a deferred request's queue wait
+(``admitted - arrival``) is real latency the router caused, and folding it
+into decode service time (as a single ``latency`` once did) hides exactly
+the signal a router exists to optimize. ``first_token`` (stamped when the
+admitting prefill's dispatch returns — the first token exists from that
+prefill) splits TTFT out the same way: prefix splices and speculative wins
+move TTFT and tokens-after-first differently, and a single latency number
+averages them away.
+
+Router stats are a :class:`repro.obs.StatsView` over the ``serve.router.*``
+namespace (declared once in ``repro.obs.names`` next to the engine's keys —
+the two literal dicts this file and the engine used to reset by hand could
+silently drift). Completions additionally observe the
+``serve.request.{latency,queue_wait,ttft}_s`` histograms, labelled by
+replica, so a ``--metrics-out`` snapshot carries the percentile summary
+without post-processing.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
+from repro.obs import ROUTER_METRICS, MetricsRegistry, StatsView
 from repro.serve.engine import ServeEngine
 
 
@@ -62,9 +77,10 @@ class Completion:
     prompt_len: int
     tokens: np.ndarray  # (n,) int32 generated tokens (incl. first)
     arrival: float
-    admitted: float  # when the prefill dispatch actually ran (not arrival!)
+    admitted: float  # when the admitting prefill dispatch began (not arrival!)
     finished: float
     replica: int = 0  # which fleet replica served it
+    first_token: Optional[float] = None  # when the first token existed (TTFT)
 
     @property
     def latency(self) -> float:
@@ -81,6 +97,15 @@ class Completion:
     def service(self) -> float:
         """Time spent resident on a replica: admission -> finished."""
         return self.finished - self.admitted
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time to first token: arrival -> the admitting prefill's return
+        (every admission path samples the first token inside that dispatch).
+        None on hand-built completions that never recorded the stamp."""
+        if self.first_token is None:
+            return None
+        return self.first_token - self.arrival
 
 
 class MonotonicClock:
@@ -121,12 +146,20 @@ class FleetRouter:
     """Least-loaded admission + eviction loop over N engine replicas;
     returns one Completion per request (tagged with its replica)."""
 
-    def __init__(self, engines: Sequence[ServeEngine], clock=None):
+    def __init__(self, engines: Sequence[ServeEngine], clock=None,
+                 registry: Optional[MetricsRegistry] = None):
         if not engines:
             raise ValueError("FleetRouter needs at least one engine replica")
         self.engines: List[ServeEngine] = list(engines)
         self.clock = clock
-        self.stats: Dict[str, int] = {"routed": 0, "requeued": 0, "affinity_hits": 0}
+        if registry is None:
+            # prefer the replicas' registry so router + engine series land in
+            # one snapshot; engines built bare each carry a private registry,
+            # in which case the router gets its own
+            st = getattr(self.engines[0], "stats", None)
+            registry = st.registry if isinstance(st, StatsView) else MetricsRegistry()
+        self.registry = registry
+        self.stats: StatsView = registry.view(ROUTER_METRICS)
 
     # -- routing policy -----------------------------------------------------
 
@@ -161,7 +194,6 @@ class FleetRouter:
             if eng.can_ever_admit(len(req.tokens), req.max_new_tokens)
         ]
         if not feasible:
-            eng = self.engines[0]
             raise RuntimeError(
                 f"request rid={req.rid} (prompt {len(req.tokens)} tokens, "
                 f"budget {req.max_new_tokens}) can never be admitted: its "
@@ -174,6 +206,7 @@ class FleetRouter:
         best = min(feasible, key=lambda i: (-hits[i],) + self._load(i, queues))
         if hits[best] > 0:
             self.stats["affinity_hits"] += 1
+        obs.instant("serve.route", rid=req.rid, replica=best, prefix_hits=hits[best])
         return best
 
     # -- the serving loop ---------------------------------------------------
@@ -182,20 +215,27 @@ class FleetRouter:
         clock = self.clock or MonotonicClock()
         for eng in self.engines:
             eng.reset()
-        self.stats = {"routed": 0, "requeued": 0, "affinity_hits": 0}
+        for k in self.stats:
+            self.stats[k] = 0
         pending = deque(sorted(requests, key=lambda r: r.arrival))
         queues: List[deque] = [deque() for _ in self.engines]
-        # per replica: slot -> (request, admitted_time)
-        resident: List[Dict[int, tuple]] = [{} for _ in self.engines]
+        # per replica: slot -> (request, admitted_time, first_token_time)
+        resident: List[dict] = [{} for _ in self.engines]
         done: List[Completion] = []
 
         def _admit(i: int, burst: List[Request]) -> None:
-            slots = self.engines[i].admit_many(
-                [(r.tokens, r.max_new_tokens) for r in burst]
-            )
+            # admitted is stamped BEFORE the prefill dispatch and first_token
+            # AFTER it: the dispatch samples every admitted sequence's first
+            # token, so the gap between the two stamps is prefill service —
+            # part of TTFT but not of queue wait.
             t_admit = clock.now()
+            with obs.span("serve.admit", replica=i, n=len(burst)):
+                slots = self.engines[i].admit_many(
+                    [(r.tokens, r.max_new_tokens) for r in burst]
+                )
+            t_first = clock.now()
             for slot, req in zip(slots, burst):
-                resident[i][slot] = (req, t_admit)
+                resident[i][slot] = (req, t_admit, t_first)
 
         while pending or any(queues) or any(resident):
             now = clock.now()
@@ -246,19 +286,28 @@ class FleetRouter:
                     active, n_out = eng.sync()
                     t_done = clock.now()
                     for slot in [s for s in resident[i] if not active[s]]:
-                        req, t_admit = resident[i].pop(slot)
+                        req, t_admit, t_first = resident[i].pop(slot)
                         toks = eng.fetch(slot, int(n_out[slot]))
-                        done.append(
-                            Completion(
-                                rid=req.rid,
-                                prompt_len=len(req.tokens),
-                                tokens=toks,
-                                arrival=req.arrival,
-                                admitted=t_admit,
-                                finished=t_done,
-                                replica=i,
-                            )
+                        comp = Completion(
+                            rid=req.rid,
+                            prompt_len=len(req.tokens),
+                            tokens=toks,
+                            arrival=req.arrival,
+                            admitted=t_admit,
+                            finished=t_done,
+                            replica=i,
+                            first_token=t_first,
                         )
+                        self.registry.observe(
+                            "serve.request.latency_s", comp.latency, replica=i
+                        )
+                        self.registry.observe(
+                            "serve.request.queue_wait_s", comp.queue_wait, replica=i
+                        )
+                        self.registry.observe(
+                            "serve.request.ttft_s", comp.ttft, replica=i
+                        )
+                        done.append(comp)
             elif pending and not any(queues):
                 clock.sleep(pending[0].arrival - now)
         return sorted(done, key=lambda c: c.rid)

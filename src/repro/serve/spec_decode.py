@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import group_pattern, init_lm_state, lm_decode, lm_extend, lm_prefill
 
 
@@ -233,11 +234,12 @@ class SpecDecoder:
     def chunk(self) -> None:
         """One fused draft/verify chunk; replaces the worker's plain chunk."""
         w = self.worker
-        (w._state, self._draft, self._proposed, self._accepted,
-         self._nsteps) = self._chunk_jit(
-            w.params, self.dparams, w._state, self._draft,
-            self._proposed, self._accepted, self._nsteps,
-        )
+        with obs.span("serve.spec.verify", replica=w.replica):
+            (w._state, self._draft, self._proposed, self._accepted,
+             self._nsteps) = self._chunk_jit(
+                w.params, self.dparams, w._state, self._draft,
+                self._proposed, self._accepted, self._nsteps,
+            )
 
     def sync(self):
         """The worker's host sync, with the draft counters riding the SAME

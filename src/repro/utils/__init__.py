@@ -16,7 +16,7 @@ from repro.utils.trees import (
     unflatten_dict,
 )
 from repro.utils.prng import PRNGStream, split_like
-from repro.utils.logging import get_logger
+from repro.utils.logging import get_logger, set_level
 
 __all__ = [
     "tree_map_with_path",
@@ -36,4 +36,5 @@ __all__ = [
     "PRNGStream",
     "split_like",
     "get_logger",
+    "set_level",
 ]
