@@ -240,8 +240,11 @@ def pair_kernelpath(out):
     """Kernel-vs-ref loss path A/B under the fused epoch engine: Co-Boosting
     with the Eq. 4/Eq. 6 losses routed through the differentiable Pallas
     kernels (compiled on TPU, interpreter elsewhere) vs the pure-jnp ref
-    composition, same PRNG stream. Reports epochs/sec for both arms plus the
-    final-server-params parity gap. Off-TPU the interpreter arm is expected
+    composition, same PRNG stream. Reports epochs/sec for both arms, a
+    loss-op microbench with a forward-only arm AND a full train-step
+    (forward+backward+update) arm — the passes the fused Pallas VJPs now
+    own — plus the final-server-params and one-step grad parity gaps.
+    Off-TPU the interpreter arm is expected
     to be much slower — the number that matters there is the parity gap; the
     speed story is the TPU run."""
     import jax
@@ -277,6 +280,83 @@ def pair_kernelpath(out):
         "kernelpath: kernel(%s)=%.2f ep/s ref=%.2f ep/s speedup=%.2fx parity=%.2e",
         arm, rec["kernel_epochs_per_sec"], rec["ref_epochs_per_sec"],
         rec["kernel_vs_ref_speedup"], rec["server_params_max_diff"],
+    )
+
+    # --- loss-op microbench: forward-only vs full train step (fwd+bwd) ---
+    # Now that the Pallas backwards are fused kernels behind the same
+    # custom_vjp, the A/B must separate the two passes: the forward-only arm
+    # times just the dispatched loss eval, the train-step arm times a whole
+    # value_and_grad + SGD update through BOTH losses (the distillation hot
+    # path the fused VJPs serve). Same long-minus-short timing so dispatch
+    # and compile cancel.
+    from functools import partial
+
+    from repro.kernels import ensemble_kl, ghm_ce
+
+    K, B, V, D = 3, 32, 256, 64
+    ks = jax.random.split(jax.random.key(7), 5)
+    cl = jax.random.normal(ks[0], (K, B, V)) * 2.0
+    x = jax.random.normal(ks[1], (B, D))
+    w = jax.nn.softmax(jax.random.normal(ks[2], (K,)))
+    labels = jax.random.randint(ks[3], (B,), 0, V)
+    head = {
+        "w": jax.random.normal(ks[4], (D, V)) / jnp.sqrt(D),
+        "b": jnp.zeros((V,)),
+    }
+
+    def loss(params, backend):
+        st = x @ params["w"] + params["b"]
+        return jnp.mean(ensemble_kl(cl, st, w, temperature=4.0, backend=backend)) + jnp.mean(
+            ghm_ce(cl, labels, w, backend=backend)
+        )
+
+    def train_step(params, backend):
+        val, g = jax.value_and_grad(partial(loss, backend=backend))(params)
+        return jax.tree_util.tree_map(lambda p, d: p - 0.1 * d, params, g), val
+
+    def steps_per_sec(fn, short=3, long=13):
+        def run(n):
+            t0 = time.time()
+            for _ in range(n):
+                r = fn()
+            jax.block_until_ready(r)
+            return time.time() - t0
+
+        run(1)  # compile
+        dt_long, dt_short = run(long), run(short)
+        return (long - short) / max(dt_long - dt_short, 1e-9)
+
+    for mode, fn in (
+        ("fwd", lambda backend: jax.jit(partial(loss, backend=backend))),
+        ("train_step", lambda backend: jax.jit(partial(train_step, backend=backend))),
+    ):
+        for name, backend in (("ref", "ref"), ("kernel", arm)):
+            f = fn(backend)
+            thunk = (lambda f=f: f(head)) if mode == "fwd" else (lambda f=f: f(head)[0])
+            rec[f"{mode}_{name}_steps_per_sec"] = round(steps_per_sec(thunk), 2)
+        rec[f"{mode}_kernel_vs_ref_speedup"] = round(
+            rec[f"{mode}_kernel_steps_per_sec"] / max(rec[f"{mode}_ref_steps_per_sec"], 1e-9), 3
+        )
+    # one-step grad parity on the exact microbench program
+    g_ref = jax.grad(partial(loss, backend="ref"))(head)
+    g_ker = jax.grad(partial(loss, backend=arm))(head)
+    rec["train_step_grads_max_diff"] = float(
+        max(
+            jnp.max(jnp.abs(u - v))
+            for u, v in zip(
+                jax.tree_util.tree_leaves(g_ref), jax.tree_util.tree_leaves(g_ker)
+            )
+        )
+    )
+    rec["microbench_kbvd"] = [K, B, V, D]
+    log.info(
+        "kernelpath microbench (K=%d B=%d V=%d): fwd kernel=%.1f ref=%.1f it/s "
+        "(%.2fx) | train-step kernel=%.1f ref=%.1f it/s (%.2fx) grad-parity=%.2e",
+        K, B, V,
+        rec["fwd_kernel_steps_per_sec"], rec["fwd_ref_steps_per_sec"],
+        rec["fwd_kernel_vs_ref_speedup"],
+        rec["train_step_kernel_steps_per_sec"], rec["train_step_ref_steps_per_sec"],
+        rec["train_step_kernel_vs_ref_speedup"], rec["train_step_grads_max_diff"],
     )
     out["kernelpath:kernel_vs_ref"] = rec
 

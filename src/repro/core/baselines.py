@@ -15,8 +15,9 @@ only differences are the synthesis objective and the fixed uniform weights,
 which is exactly the contrast the paper draws (no co-boosting of data and
 ensemble). Under ``driver="fused"`` every distillation sweep here (DENSE,
 F-DAFL, F-ADI, FedDF) runs the Eq. 4 loss through the ``cfg.backend_for("loss")``
-kernel path of :func:`repro.core.epoch.make_kd_loss`; the legacy loops stay
-pure jnp as the parity baseline.
+kernel path of :func:`repro.core.epoch.make_kd_loss` — forward AND backward
+(the kernels carry fused Pallas VJPs; ``backend="ref"`` is the pure-jnp
+oracle). ``driver="legacy"`` is a deprecated alias scheduled for removal.
 """
 from __future__ import annotations
 
@@ -31,7 +32,13 @@ import numpy as np
 from repro.config.train import OFLConfig
 from repro.core.buffer import buffer_as_lists, buffer_init
 from repro.core.client_bank import make_ensemble
-from repro.core.coboosting import OFLState, _sample_zy, init_synth_buffer, make_distill_step
+from repro.core.coboosting import (
+    OFLState,
+    _sample_zy,
+    _warn_legacy_driver,
+    init_synth_buffer,
+    make_distill_step,
+)
 from repro.core.epoch import distill_schedule, make_adi_epoch, make_coboost_epoch, make_feddf_epoch
 from repro.core.ensemble import ensemble_logits, uniform_weights
 from repro.core.losses import ce_loss, ce_per_sample, entropy, kl_loss
@@ -145,6 +152,7 @@ def run_generator_baseline(
         return state
     if driver != "legacy":
         raise ValueError(f"unknown driver {driver!r}")
+    _warn_legacy_driver()
 
     gen_opt = adam(constant_schedule(cfg.gen_lr))
 
@@ -259,6 +267,7 @@ def run_adi_baseline(
         return state
     if driver != "legacy":
         raise ValueError(f"unknown driver {driver!r}")
+    _warn_legacy_driver()
 
     @jax.jit
     def synth_phase(x, y, cp):
@@ -346,6 +355,7 @@ def run_feddf(
         return state
     if driver != "legacy":
         raise ValueError(f"unknown driver {driver!r}")
+    _warn_legacy_driver()
 
     distill_step, srv_opt = make_distill_step(
         logits_all_fn, server_apply, dataclasses.replace(cfg, use_dhs=False)

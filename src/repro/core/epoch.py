@@ -1,9 +1,9 @@
 """Fused one-epoch OFL programs: O(1) dispatches per global epoch.
 
 The legacy drivers (``run_coboosting`` and the shared loops in
-:mod:`repro.core.baselines`) dispatch one jitted ``distill_step`` per replay
-batch and ``float()`` the scalar loss each iteration — O(buffer) dispatches
-plus O(buffer) host syncs per epoch. Here the whole epoch (generator phase →
+:mod:`repro.core.baselines` — both deprecated aliases now) dispatch one
+jitted ``distill_step`` per replay batch and ``float()`` the scalar loss
+each iteration — O(buffer) dispatches plus O(buffer) host syncs per epoch. Here the whole epoch (generator phase →
 buffer append → EE step → distillation sweep) is ONE jitted program per
 method: the synthetic buffer is the device-resident ring of
 :mod:`repro.core.buffer` and the distillation sweep is a ``lax.scan`` over
@@ -27,9 +27,14 @@ backends (donation is a no-op on CPU, so we skip it there to avoid warnings).
 
 The Eq. 4 / Eq. 6 losses inside these programs route through the
 differentiable fused Pallas kernels (:mod:`repro.kernels`) according to
-``cfg.backend_for("loss")`` — "auto" runs the compiled kernels on TPU and the
-pure-jnp composition elsewhere (see :mod:`repro.kernels.dispatch`), so the
-CPU parity contract with the legacy loops below is preserved bit-for-bit.
+``cfg.backend_for("loss")`` — the backend covers BOTH passes: every
+``jax.grad`` these epoch programs take through ``ensemble_kl`` / ``ghm_ce``
+runs the fused Pallas backward kernels under "pallas"/"pallas-interpret",
+and plain autodiff of the jnp oracle under "ref". "auto" runs the compiled
+kernels on TPU and the pure-jnp composition elsewhere (see
+:mod:`repro.kernels.dispatch`), so the CPU parity contract with the legacy
+loops below is preserved bit-for-bit; the end-to-end grad contract is
+ref-vs-interpret parity per method (tests/grad_harness.py).
 """
 from __future__ import annotations
 

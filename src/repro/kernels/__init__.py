@@ -10,8 +10,10 @@ Each subpackage: ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
 (jit'd differentiable wrapper), ``ref.py`` (pure-jnp oracle).
 :mod:`repro.kernels.dispatch` maps the ``backend`` knob ("auto" | "pallas" |
 "pallas-interpret" | "ref") to a concrete implementation per JAX backend;
-``ensemble_kl`` and ``ghm_ce`` carry ``jax.custom_vjp`` rules on the Pallas
-paths so they are loss-grade (used in the fused epoch engine's hot path).
+``ensemble_kl``, ``ghm_ce`` and ``flash_attention`` carry ``jax.custom_vjp``
+rules on the Pallas paths whose BACKWARDS are fused Pallas kernels too —
+the backend choice covers both passes, and "ref" under plain autodiff is the
+grad-parity oracle (tests/grad_harness.py).
 """
 from repro.kernels.dispatch import (
     BACKEND_OPS,

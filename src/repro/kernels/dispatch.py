@@ -1,6 +1,14 @@
 """Kernel backend dispatch: which implementation of a Pallas-backed op
 actually runs on this process' default JAX backend.
 
+A backend choice covers BOTH passes of a differentiable op: the "pallas" /
+"pallas-interpret" paths run the fused Pallas forward AND the fused Pallas
+backward (their ``custom_vjp`` backward follows the forward's interpret
+flag), while "ref" differentiates the pure-jnp oracle under plain autodiff
+— the parity baseline the grad harness (tests/grad_harness.py) checks the
+kernel VJPs against. ``flash_decode`` is the exception: inference-only, its
+backward raises.
+
 The unified entry point is :func:`resolve`, keyed by *op*:
 
 * ``"loss"``   — the Eq. 4/6/11-12 fused losses (``ensemble_kl`` / ``ghm_ce``)

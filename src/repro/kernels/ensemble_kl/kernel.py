@@ -83,6 +83,137 @@ def _kernel(w_ref, client_ref, student_ref, out_ref, lset_ref, lses_ref, mt_ref,
         lses_ref[...] = lse_s.astype(lses_ref.dtype)
 
 
+def _bwd_kernel(
+    w_ref,
+    client_ref,
+    student_ref,
+    g_ref,
+    out_ref,
+    lset_ref,
+    lses_ref,
+    gcl_ref,
+    gst_ref,
+    gw_ref,
+    *,
+    temperature: float,
+    vocab: int,
+    block_v: int,
+):
+    """One (batch, vocab) tile of the Eq. 4 VJP (see ops.py for the math).
+
+    Everything is recomputed tile-resident from the forward's online-softmax
+    residuals: the weighted combine t = A_w/T is rebuilt from the streamed
+    client tile (A_w itself never exists in HBM, same as the forward), p and
+    q come from the saved logsumexps, and the three cotangents are emitted in
+    the same sweep — g_cl and g_st tile-by-tile, g_w accumulated in a
+    revisited (K, 1) output block that stays VMEM-resident across the whole
+    grid (its index map is constant)."""
+    bi = pl.program_id(0)
+    vi = pl.program_id(1)
+
+    @pl.when((bi == 0) & (vi == 0))
+    def _init():
+        gw_ref[...] = jnp.zeros_like(gw_ref)
+
+    w = w_ref[...]  # (K, 1) f32
+    cl = client_ref[...].astype(jnp.float32)  # (K, bb, bv)
+    t = jnp.sum(w[:, :, None] * cl, axis=0) / temperature  # (bb, bv)
+    s = student_ref[...].astype(jnp.float32) / temperature
+
+    col = vi * block_v + jax.lax.broadcasted_iota(jnp.int32, t.shape, 1)
+    valid = col < vocab
+    t = jnp.where(valid, t, NEG)
+    s = jnp.where(valid, s, NEG)
+
+    lse_t = lset_ref[...]  # (bb, 1)
+    lse_s = lses_ref[...]
+    g = g_ref[...]
+    kl_u = out_ref[...] / (temperature * temperature)  # unscaled KL from the primal
+
+    p = jnp.exp(t - lse_t)  # exact 0 on the padded vocab tail
+    q = jnp.exp(s - lse_s)
+    gT = g * temperature  # (bb, 1)
+    g_ens = gT * (p * ((t - lse_t) - (s - lse_s) - kl_u))
+    g_ens = jnp.where(valid, g_ens, 0.0)
+
+    gcl_ref[...] = (w[:, :, None] * g_ens[None]).astype(gcl_ref.dtype)
+    gst_ref[...] = (gT * (q - p)).astype(gst_ref.dtype)
+    gw_ref[...] += jnp.sum(cl * g_ens[None], axis=(1, 2))[:, None]
+
+
+def ensemble_kl_bwd_pallas(
+    client_logits: jax.Array,
+    student_logits: jax.Array,
+    w: jax.Array,
+    g: jax.Array,
+    out: jax.Array,
+    lse_t: jax.Array,
+    lse_s: jax.Array,
+    temperature: float = 1.0,
+    *,
+    block_b: int = 8,
+    block_v: int = 512,
+    interpret: bool = False,
+):
+    """Fused backward for :func:`ensemble_kl_pallas`.
+
+    ``g`` is the per-sample cotangent (B,); ``out``/``lse_t``/``lse_s`` are
+    the forward's primal output and online-softmax residuals. Returns
+    ``(g_client, g_student, g_w)`` with the input dtypes — one streamed pass
+    over the same (batch, vocab) grid as the forward, never materializing
+    A_w (or any K×(B,V) f32 temporary beyond the cotangent itself)."""
+    k, b, v = client_logits.shape
+    block_b, block_v, pb, pv = tile_padding(b, v, block_b, block_v)
+    if pb or pv:
+        client_logits = jnp.pad(client_logits, ((0, 0), (0, pb), (0, pv)))
+        student_logits = jnp.pad(student_logits, ((0, pb), (0, pv)))
+    if pb:
+        # padded rows carry a zero cotangent: every padded-row grad is zero
+        g = jnp.pad(g, ((0, pb),))
+        out = jnp.pad(out, ((0, pb),))
+        lse_t = jnp.pad(lse_t, ((0, pb),))
+        lse_s = jnp.pad(lse_s, ((0, pb),))
+    bp, vp = b + pb, v + pv
+    nb, nv = bp // block_b, vp // block_v
+
+    row = lambda x: x.astype(jnp.float32).reshape(bp, 1)
+    g_cl, g_st, g_w = pl.pallas_call(
+        functools.partial(
+            _bwd_kernel, temperature=float(temperature), vocab=v, block_v=block_v
+        ),
+        grid=(nb, nv),
+        in_specs=[
+            pl.BlockSpec((k, 1), lambda bi, vi: (0, 0)),
+            pl.BlockSpec((k, block_b, block_v), lambda bi, vi: (0, bi, vi)),
+            pl.BlockSpec((block_b, block_v), lambda bi, vi: (bi, vi)),
+            pl.BlockSpec((block_b, 1), lambda bi, vi: (bi, 0)),
+            pl.BlockSpec((block_b, 1), lambda bi, vi: (bi, 0)),
+            pl.BlockSpec((block_b, 1), lambda bi, vi: (bi, 0)),
+            pl.BlockSpec((block_b, 1), lambda bi, vi: (bi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, block_b, block_v), lambda bi, vi: (0, bi, vi)),
+            pl.BlockSpec((block_b, block_v), lambda bi, vi: (bi, vi)),
+            pl.BlockSpec((k, 1), lambda bi, vi: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, bp, vp), client_logits.dtype),
+            jax.ShapeDtypeStruct((bp, vp), student_logits.dtype),
+            jax.ShapeDtypeStruct((k, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        w.astype(jnp.float32).reshape(k, 1),
+        client_logits,
+        student_logits,
+        row(g),
+        row(out),
+        row(lse_t),
+        row(lse_s),
+    )
+    return g_cl[:, :b, :v], g_st[:b, :v], g_w[:, 0].astype(w.dtype)
+
+
 def ensemble_kl_pallas(
     client_logits: jax.Array,
     student_logits: jax.Array,

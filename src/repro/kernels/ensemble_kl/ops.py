@@ -1,14 +1,18 @@
 """Differentiable public wrapper for the fused ensemble-KL kernel.
 
 ``backend`` (see :mod:`repro.kernels.dispatch`) selects the compiled Pallas
-TPU kernel, the Pallas interpreter (debug/parity), or the pure-jnp reference.
-The Pallas paths carry a ``jax.custom_vjp``: the forward kernel's online
-softmax statistics (teacher/student logsumexp over the T-scaled logits) are
-returned as residuals, and the backward pass is a recompute-based jnp VJP
-that produces cotangents for ``client_logits``, ``student_logits`` and ``w``
-— the student grad drives server distillation (Eq. 4) and the w grad feeds
-the EE sign step (Eq. 12). Only the backward materializes A_w; the forward
-hot path stays a single streamed pass.
+TPU kernel, the Pallas interpreter (debug/parity), or the pure-jnp reference
+— and the choice covers BOTH passes: the Pallas paths carry a
+``jax.custom_vjp`` whose forward returns the kernel's online softmax
+statistics (teacher/student logsumexp over the T-scaled logits) as residuals
+and whose backward is the fused Pallas kernel
+:func:`repro.kernels.ensemble_kl.kernel.ensemble_kl_bwd_pallas`, producing
+cotangents for ``client_logits``, ``student_logits`` and ``w`` in one
+streamed (batch, vocab) sweep — the student grad drives server distillation
+(Eq. 4) and the w grad feeds the EE sign step (Eq. 12). Neither pass ever
+materializes A_w (or any K×(B,V) temporary) in HBM. ``backend="ref"``
+bypasses the custom_vjp entirely: plain autodiff of the jnp oracle is the
+parity baseline for the kernel backward.
 
 With cotangent ``g`` per sample and ``t = A_w/T``, ``s = student/T``,
 ``p = softmax(t)``, ``q = softmax(s)``:
@@ -25,7 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.dispatch import resolve_backend
-from repro.kernels.ensemble_kl.kernel import ensemble_kl_pallas
+from repro.kernels.ensemble_kl.kernel import ensemble_kl_bwd_pallas, ensemble_kl_pallas
 from repro.kernels.ensemble_kl.ref import ensemble_kl_ref
 
 
@@ -47,24 +51,9 @@ def _ensemble_kl_fwd(client_logits, student_logits, w, temperature, interpret, b
 
 def _ensemble_kl_bwd(temperature, interpret, block_b, block_v, res, g):
     client_logits, student_logits, w, out, lse_t, lse_s = res
-    temp = float(temperature)
-    cl = client_logits.astype(jnp.float32)
-    st = student_logits.astype(jnp.float32)
-    w32 = w.astype(jnp.float32)
-    t = jnp.einsum("k,kbv->bv", w32, cl) / temp
-    s = st / temp
-    p = jnp.exp(t - lse_t[:, None])
-    q = jnp.exp(s - lse_s[:, None])
-    kl_u = out / (temp * temp)  # unscaled KL, recovered from the primal out
-    # d(out)/d(A_w) and d(out)/d(student): T² · dKL/d(t|s) · (1/T) = T · (…)
-    g_ens = (g * temp)[:, None] * (p * ((t - lse_t[:, None]) - (s - lse_s[:, None]) - kl_u[:, None]))
-    g_st = (g * temp)[:, None] * (q - p)
-    g_cl = w32[:, None, None] * g_ens[None]
-    g_w = jnp.einsum("bv,kbv->k", g_ens, cl)
-    return (
-        g_cl.astype(client_logits.dtype),
-        g_st.astype(student_logits.dtype),
-        g_w.astype(w.dtype),
+    return ensemble_kl_bwd_pallas(
+        client_logits, student_logits, w, g, out, lse_t, lse_s,
+        float(temperature), block_b=block_b, block_v=block_v, interpret=interpret,
     )
 
 

@@ -1,9 +1,16 @@
-"""Jitted public wrapper for the flash-attention kernel.
+"""Differentiable public wrapper for the flash-attention kernel.
 
 ``backend`` follows :mod:`repro.kernels.dispatch` like the loss kernels:
 "auto" is the compiled kernel on TPU and the jnp ref elsewhere — the
 interpreter must be requested explicitly ("pallas-interpret"); asking for
 "pallas" off-TPU is an error, never a silent interpret fallback.
+
+The choice covers BOTH passes: the Pallas paths carry a ``jax.custom_vjp``
+whose forward keeps the kernel's per-row logsumexp as the residual and whose
+backward is :func:`repro.kernels.flash_attention.kernel.flash_attention_bwd_pallas`
+— dq/dk/dv rebuilt tile-by-tile from the saved lse, never re-materializing a
+score block in HBM. ``backend="ref"`` differentiates the jnp reference under
+plain autodiff — the parity oracle.
 """
 from __future__ import annotations
 
@@ -12,8 +19,39 @@ from functools import partial
 import jax
 
 from repro.kernels.dispatch import resolve_backend
-from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.kernel import (
+    flash_attention_bwd_pallas,
+    flash_attention_pallas,
+)
 from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash_attn_kernel(q, k, v, causal, window, softcap, interpret, block_q, block_kv):
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_kv=block_kv, interpret=interpret,
+    )
+
+
+def _flash_attn_fwd(q, k, v, causal, window, softcap, interpret, block_q, block_kv):
+    out, lse = flash_attention_pallas(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_kv=block_kv, interpret=interpret, return_lse=True,
+    )
+    return out, (q, k, v, out, lse)
+
+
+def _flash_attn_bwd(causal, window, softcap, interpret, block_q, block_kv, res, dout):
+    q, k, v, out, lse = res
+    return flash_attention_bwd_pallas(
+        q, k, v, out, lse, dout,
+        causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_kv=block_kv, interpret=interpret,
+    )
+
+
+_flash_attn_kernel.defvjp(_flash_attn_fwd, _flash_attn_bwd)
 
 
 @partial(
@@ -35,14 +73,7 @@ def flash_attention(
     resolved = resolve_backend(backend)
     if resolved == "ref":
         return flash_attention_ref(q, k, v, causal=causal, window=window, softcap=softcap)
-    return flash_attention_pallas(
-        q,
-        k,
-        v,
-        causal=causal,
-        window=window,
-        softcap=softcap,
-        block_q=block_q,
-        block_kv=block_kv,
-        interpret=resolved == "pallas-interpret",
+    return _flash_attn_kernel(
+        q, k, v, causal, window, softcap,
+        resolved == "pallas-interpret", block_q, block_kv,
     )

@@ -83,6 +83,131 @@ def _kernel(
         lyo_ref[...] = ly.astype(lyo_ref.dtype)
 
 
+def _bwd_kernel(
+    w_ref,
+    client_ref,
+    label_ref,
+    g_ref,
+    lse_ref,
+    ly_ref,
+    gcl_ref,
+    gw_ref,
+    *,
+    vocab: int,
+    block_v: int,
+    weighted: bool,
+    stop_difficulty_grad: bool,
+):
+    """One (batch, vocab) tile of the Eq. 5–6 VJP (see ops.py for the math).
+
+    d(out)/dt factors as coeff · (p − e): ``p`` is rebuilt per tile from the
+    saved logsumexp, the one-hot ``e`` from the label block, and the per-row
+    ``coeff`` (which mode-switches on ``weighted``/``stop_difficulty_grad``)
+    costs only the (bb, 1) residuals. g_cl streams out tile-by-tile; g_w
+    accumulates in a VMEM-resident (K, 1) block across the whole grid."""
+    bi = pl.program_id(0)
+    vi = pl.program_id(1)
+
+    @pl.when((bi == 0) & (vi == 0))
+    def _init():
+        gw_ref[...] = jnp.zeros_like(gw_ref)
+
+    w = w_ref[...]  # (K, 1) f32
+    cl = client_ref[...].astype(jnp.float32)  # (K, bb, bv)
+    t = jnp.sum(w[:, :, None] * cl, axis=0)  # (bb, bv)
+
+    col = vi * block_v + jax.lax.broadcasted_iota(jnp.int32, t.shape, 1)
+    valid = col < vocab
+    t = jnp.where(valid, t, NEG)
+
+    lse = lse_ref[...]  # (bb, 1)
+    ly = ly_ref[...]
+    g = g_ref[...]
+    p = jnp.exp(t - lse)  # exact 0 on the padded vocab tail
+    onehot = (col == label_ref[...]).astype(jnp.float32)  # (bb, bv)
+
+    if not weighted:
+        coeff = jnp.ones_like(lse)
+    else:
+        py = jnp.exp(ly - lse)
+        coeff = 1.0 - py
+        if not stop_difficulty_grad:
+            coeff = coeff + py * (lse - ly)
+
+    g_t = (g * coeff) * (p - onehot)
+    g_t = jnp.where(valid, g_t, 0.0)
+    gcl_ref[...] = (w[:, :, None] * g_t[None]).astype(gcl_ref.dtype)
+    gw_ref[...] += jnp.sum(cl * g_t[None], axis=(1, 2))[:, None]
+
+
+def ghm_ce_bwd_pallas(
+    client_logits: jax.Array,
+    labels: jax.Array,
+    w: jax.Array,
+    g: jax.Array,
+    lse: jax.Array,
+    ly: jax.Array,
+    *,
+    weighted: bool = True,
+    stop_difficulty_grad: bool = False,
+    block_b: int = 8,
+    block_v: int = 512,
+    interpret: bool = False,
+):
+    """Fused backward for :func:`ghm_ce_pallas`.
+
+    ``g`` is the per-sample cotangent (B,); ``lse``/``ly`` the forward's
+    online residuals (ensemble logsumexp + label logit). Returns
+    ``(g_client, g_w)`` with the input dtypes; labels are integer and carry
+    no cotangent. Same grid and streaming discipline as the forward."""
+    k, b, v = client_logits.shape
+    block_b, block_v, pb, pv = tile_padding(b, v, block_b, block_v)
+    if pb or pv:
+        client_logits = jnp.pad(client_logits, ((0, 0), (0, pb), (0, pv)))
+    if pb:
+        # padded rows carry label 0 and a ZERO cotangent — every grad is zero
+        labels = jnp.pad(labels, ((0, pb),))
+        g = jnp.pad(g, ((0, pb),))
+        lse = jnp.pad(lse, ((0, pb),))
+        ly = jnp.pad(ly, ((0, pb),))
+    bp, vp = b + pb, v + pv
+    nb, nv = bp // block_b, vp // block_v
+
+    row = lambda x: x.astype(jnp.float32).reshape(bp, 1)
+    g_cl, g_w = pl.pallas_call(
+        functools.partial(
+            _bwd_kernel, vocab=v, block_v=block_v,
+            weighted=weighted, stop_difficulty_grad=stop_difficulty_grad,
+        ),
+        grid=(nb, nv),
+        in_specs=[
+            pl.BlockSpec((k, 1), lambda bi, vi: (0, 0)),
+            pl.BlockSpec((k, block_b, block_v), lambda bi, vi: (0, bi, vi)),
+            pl.BlockSpec((block_b, 1), lambda bi, vi: (bi, 0)),
+            pl.BlockSpec((block_b, 1), lambda bi, vi: (bi, 0)),
+            pl.BlockSpec((block_b, 1), lambda bi, vi: (bi, 0)),
+            pl.BlockSpec((block_b, 1), lambda bi, vi: (bi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, block_b, block_v), lambda bi, vi: (0, bi, vi)),
+            pl.BlockSpec((k, 1), lambda bi, vi: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, bp, vp), client_logits.dtype),
+            jax.ShapeDtypeStruct((k, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        w.astype(jnp.float32).reshape(k, 1),
+        client_logits,
+        labels.astype(jnp.int32).reshape(bp, 1),
+        row(g),
+        row(lse),
+        row(ly),
+    )
+    return g_cl[:, :b, :v], g_w[:, 0].astype(w.dtype)
+
+
 def ghm_ce_pallas(
     client_logits: jax.Array,
     labels: jax.Array,

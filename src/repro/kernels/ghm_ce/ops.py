@@ -1,11 +1,14 @@
 """Differentiable public wrapper for the fused GHM-weighted CE kernel.
 
 ``backend`` (see :mod:`repro.kernels.dispatch`) selects the compiled Pallas
-TPU kernel, the Pallas interpreter (debug/parity), or the pure-jnp reference.
-The Pallas paths carry a ``jax.custom_vjp``: the forward kernel's online
-statistics (ensemble logsumexp + label logit) are the residuals and the
-backward is a recompute-based jnp VJP with cotangents for ``client_logits``
-and ``w`` (labels are integer — float0 cotangent).
+TPU kernel, the Pallas interpreter (debug/parity), or the pure-jnp reference
+— and the choice covers BOTH passes: the Pallas paths carry a
+``jax.custom_vjp`` whose forward returns the kernel's online statistics
+(ensemble logsumexp + label logit) as residuals and whose backward is the
+fused Pallas kernel :func:`repro.kernels.ghm_ce.kernel.ghm_ce_bwd_pallas`,
+streaming cotangents for ``client_logits`` and ``w`` without materializing
+A_w (labels are integer — float0 cotangent). ``backend="ref"`` bypasses the
+custom_vjp: plain autodiff of the jnp oracle is the parity baseline.
 
 With ``t = A_w``, ``p = softmax(t)``, ``p_y`` the label prob, ``nll`` the CE
 and ``e`` the one-hot label, d(out)/dt factors as ``coeff · (p − e)`` where
@@ -29,7 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.dispatch import resolve_backend
-from repro.kernels.ghm_ce.kernel import ghm_ce_pallas
+from repro.kernels.ghm_ce.kernel import ghm_ce_bwd_pallas, ghm_ce_pallas
 from repro.kernels.ghm_ce.ref import ghm_ce_ref
 
 
@@ -51,24 +54,13 @@ def _ghm_ce_fwd(client_logits, labels, w, weighted, stop_difficulty_grad, interp
 
 def _ghm_ce_bwd(weighted, stop_difficulty_grad, interpret, block_b, block_v, res, g):
     client_logits, labels, w, lse, ly = res
-    k, b, v = client_logits.shape
-    cl = client_logits.astype(jnp.float32)
-    w32 = w.astype(jnp.float32)
-    t = jnp.einsum("k,kbv->bv", w32, cl)
-    p = jnp.exp(t - lse[:, None])
-    onehot = jax.nn.one_hot(labels, v, dtype=jnp.float32)
-    if not weighted:
-        coeff = jnp.ones_like(lse)
-    else:
-        py = jnp.exp(ly - lse)
-        coeff = 1.0 - py
-        if not stop_difficulty_grad:
-            coeff = coeff + py * (lse - ly)
-    g_t = (g * coeff)[:, None] * (p - onehot)
-    g_cl = w32[:, None, None] * g_t[None]
-    g_w = jnp.einsum("bv,kbv->k", g_t, cl)
+    g_cl, g_w = ghm_ce_bwd_pallas(
+        client_logits, labels, w, g, lse, ly,
+        weighted=weighted, stop_difficulty_grad=stop_difficulty_grad,
+        block_b=block_b, block_v=block_v, interpret=interpret,
+    )
     g_labels = np.zeros(labels.shape, dtype=jax.dtypes.float0)
-    return g_cl.astype(client_logits.dtype), g_labels, g_w.astype(w.dtype)
+    return g_cl, g_labels, g_w
 
 
 _ghm_ce_kernel.defvjp(_ghm_ce_fwd, _ghm_ce_bwd)

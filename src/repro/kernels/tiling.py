@@ -4,6 +4,12 @@ The VPU tile floor is (8, 128): blocks must never shrink below it, so short
 batches / narrow vocabs are zero-padded up to the block instead of the block
 being clamped down to the data (the old ``min(block, dim)`` bug produced
 sub-(8, 128) tiles whenever B < 8 or V < 128).
+
+Forward and backward kernels share the same ``tile_padding`` result, so a
+VJP sees exactly the padded geometry its forward ran on: padded rows enter
+the backward with a zero cotangent (all their grads are exactly zero and the
+pad is sliced off), and the padded vocab tail is masked in-kernel on both
+passes (``p = exp(NEG − lse)`` underflows to exact 0).
 """
 from __future__ import annotations
 

@@ -26,7 +26,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.dispatch import resolve
-from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.kernel import (
+    flash_attention_bwd_pallas,
+    flash_attention_pallas,
+)
 from repro.models.layers import apply_rope, dense_init, rms_norm
 from repro.sharding import constrain
 
@@ -316,22 +319,15 @@ def _flash_pallas_fwd(q, k, v, causal, window, softcap, interpret):
 
 
 def _flash_pallas_bwd(causal, window, softcap, interpret, res, dout):
-    """Backward for the Pallas forward: the same recompute-jnp flash VJP the
-    jnp twin uses, fed the kernel's online-softmax lse as residuals (the
-    ROADMAP backward-kernel item stays open; this keeps the O(S²) matrix out
-    of HBM either way)."""
+    """Backward for the Pallas forward: the fused Pallas backward kernels
+    (dq with kv minor, dk/dv with q minor), fed the forward kernel's
+    online-softmax lse as the residual — no score block is ever
+    re-materialized, in the same backend (compiled or interpret) as the
+    forward."""
     q, k, v, out, lse = res
-    sq, h = q.shape[1], q.shape[2]
-    q_block = min(DEFAULT_Q_BLOCK, max(128, sq // 16))
-    kv_block = min(DEFAULT_KV_BLOCK, max(128, k.shape[1] // 16))
-    # re-block the (B, Sq, H) lse into the (nq, B, H, cq) layout of
-    # _flash_bwd_impl, padding the tail with +inf-like so p underflows to 0
-    qb = min(q_block, sq)
-    pq = (-sq) % qb
-    lse_p = jnp.pad(lse, ((0, 0), (0, pq), (0, 0)), constant_values=1e30)
-    lses = lse_p.reshape(lse.shape[0], -1, qb, h).transpose(1, 0, 3, 2)
-    return _flash_bwd_impl(
-        (q, k, v, out, lses), dout, causal, window, softcap, q_block, kv_block, 0
+    return flash_attention_bwd_pallas(
+        q, k, v, out, lse, dout,
+        causal=causal, window=window, softcap=softcap, interpret=interpret,
     )
 
 

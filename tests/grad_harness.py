@@ -1,0 +1,249 @@
+"""Shared grad-parity harness for the differentiable kernel path.
+
+One fixture layer, three jobs (importable from any test module — pytest
+collects nothing from here):
+
+  * randomized *loss-op cases* (:func:`loss_case`) covering the geometry the
+    kernels must survive — non-tile-aligned batch/vocab tails, bf16 inputs
+    promoted at the call boundary, extreme logits, degenerate ensembling
+    weights — plus :func:`assert_loss_grad_parity`, which differentiates the
+    op under ``backend="ref"`` (plain autodiff of the jnp oracle) and
+    ``backend="pallas-interpret"`` (the fused Pallas VJP, bit-for-bit the
+    TPU kernel's math) and asserts every cotangent set agrees to
+    :data:`TOL`;
+  * ``check_grads``-grade numerical validation of the kernel VJPs against
+    finite differences (:func:`check_kernel_grads`);
+  * per-method *end-to-end one-step runners* (:func:`run_method`) for all
+    five methods (coboosting, DENSE, F-DAFL, F-ADI, FedDF) on the grouped
+    client bank, so tests can assert that a full fused-epoch optimizer
+    step — generator phase, EE, distillation, every ``jax.grad`` inside —
+    lands on the same server params under ``ref`` and ``pallas-interpret``.
+
+This harness IS the parity contract that retired ``driver="legacy"``: the
+oracle is the ref backend of the fused driver, not a second python loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.test_util import check_grads
+
+from repro.kernels import ensemble_kl, ghm_ce
+from repro.kernels.dispatch import BackendPolicy
+
+TOL = 1e-4
+INTERP = "pallas-interpret"
+
+
+# ---------------------------------------------------------------------------
+# tree assertions
+
+
+def tree_max_diff(a, b) -> float:
+    return max(
+        float(jnp.max(jnp.abs(u.astype(jnp.float32) - v.astype(jnp.float32))))
+        for u, v in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
+    )
+
+
+def assert_tree_close(got, want, tol: float = TOL) -> None:
+    """Leaf-wise allclose with ``tol`` as both rtol and atol (the rtol term
+    keeps extreme-logit cases meaningful: tolerance scales with |want|)."""
+    for u, v in zip(jax.tree_util.tree_leaves(got), jax.tree_util.tree_leaves(want)):
+        np.testing.assert_allclose(np.asarray(u), np.asarray(v), rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# randomized loss-op cases
+
+
+def loss_case(
+    seed: int,
+    k: int,
+    b: int,
+    v: int,
+    *,
+    dtype=jnp.float32,
+    logit_scale: float = 2.0,
+    w_mode: str = "softmax",
+) -> Dict[str, Any]:
+    """One randomized (K, B, V) ensemble-loss case.
+
+    ``dtype`` below f32 is generated in that dtype and PROMOTED to f32 at
+    the boundary — the kernels' contract is f32 compute, so parity at
+    :data:`TOL` is asserted on what the op actually receives, not on bf16
+    rounding. ``logit_scale`` stretches the logits (±1e4 exercises the
+    online-softmax residuals at the edge of f32). ``w_mode``: "softmax"
+    (generic simplex point), "onehot" (a single surviving client) or "zero"
+    (degenerate all-zero weights — lse falls back to log V)."""
+    ks = jax.random.split(jax.random.key(seed), 5)
+    cl = (jax.random.normal(ks[0], (k, b, v)) * logit_scale).astype(dtype)
+    st = (jax.random.normal(ks[1], (b, v)) * logit_scale).astype(dtype)
+    if w_mode == "softmax":
+        w = jax.nn.softmax(jax.random.normal(ks[2], (k,)))
+    elif w_mode == "onehot":
+        w = jax.nn.one_hot(int(jax.random.randint(ks[2], (), 0, k)), k)
+    elif w_mode == "zero":
+        w = jnp.zeros((k,))
+    else:
+        raise ValueError(f"unknown w_mode {w_mode!r}")
+    return {
+        "cl": cl.astype(jnp.float32),
+        "st": st.astype(jnp.float32),
+        "w": w,
+        "labels": jax.random.randint(ks[3], (b,), 0, v),
+        "ct": jax.random.normal(ks[4], (b,)),
+    }
+
+
+EPS32 = 1.2e-7  # f32 machine epsilon, rounded up
+
+
+def _cond_atols(case: Dict[str, Any], tol: float) -> Tuple[float, float]:
+    """Conditioning floor of the parity comparison, per cotangent set.
+
+    At extreme logit scales S the per-sample factor (log p − log q − KL)
+    cancels ~S-sized terms, so BOTH arms carry ~ε·S absolute rounding in the
+    logits cotangents — and the w cotangent contracts that against the
+    ~S-sized client logits, squaring the scale. Below those floors ref and
+    kernel legitimately disagree (the ref differs from itself by as much
+    under reassociation); at ordinary scales both floors sit far under
+    ``tol`` and the strict 1e-4 contract is what's asserted. Returns
+    ``(atol_logits, atol_w)``."""
+    s = max(float(jnp.max(jnp.abs(case["cl"]))), float(jnp.max(jnp.abs(case["st"]))), 1.0)
+    ct = max(float(jnp.max(jnp.abs(case["ct"]))), 1.0)
+    return max(tol, 4 * EPS32 * s * ct), max(tol, 4 * EPS32 * s * s * ct)
+
+
+def assert_loss_grad_parity(
+    op: str,
+    case: Dict[str, Any],
+    tol: float = TOL,
+    **op_kwargs,
+) -> None:
+    """ref-vs-interpret gradients for every cotangent set of one loss op.
+
+    ``op`` is "ensemble_kl" (grads for client_logits, student_logits, w) or
+    "ghm_ce" (grads for client_logits, w; labels are integer). Both arms go
+    through the public dispatched op so the ref arm exercises the real
+    "ref bypasses the custom_vjp" route. Tolerances: rtol ``tol``
+    throughout; atol ``tol`` lifted to the f32 conditioning floor of the
+    case (see :func:`_cond_atols`) so extreme-logit sweeps assert the
+    tightest bound f32 admits."""
+    cl, st, w, labels, ct = (case[x] for x in ("cl", "st", "w", "labels", "ct"))
+    atol_logits, atol_w = _cond_atols(case, tol)
+    if op == "ensemble_kl":
+
+        def f(backend, cl, st, w):
+            return jnp.vdot(ensemble_kl(cl, st, w, backend=backend, **op_kwargs), ct)
+
+        got = jax.grad(partial(f, INTERP), argnums=(0, 1, 2))(cl, st, w)
+        want = jax.grad(partial(f, "ref"), argnums=(0, 1, 2))(cl, st, w)
+        atols = (atol_logits, atol_logits, atol_w)
+    elif op == "ghm_ce":
+
+        def f(backend, cl, w):
+            return jnp.vdot(ghm_ce(cl, labels, w, backend=backend, **op_kwargs), ct)
+
+        got = jax.grad(partial(f, INTERP), argnums=(0, 1))(cl, w)
+        want = jax.grad(partial(f, "ref"), argnums=(0, 1))(cl, w)
+        atols = (atol_logits, atol_w)
+    else:
+        raise ValueError(f"unknown loss op {op!r}")
+    for u, v, atol in zip(got, want, atols):
+        np.testing.assert_allclose(np.asarray(u), np.asarray(v), rtol=tol, atol=atol)
+
+
+def check_kernel_grads(f, args, atol: float = 1e-2, rtol: float = 1e-2) -> None:
+    """Finite-difference validation of a kernel-backed scalar loss (rev
+    mode, order 1) — the ``check_grads``-grade part of the contract."""
+    check_grads(f, args, order=1, modes=("rev",), atol=atol, rtol=rtol)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end method runners (fused driver, grouped client bank)
+
+
+METHODS = ("coboosting", "dense", "f_dafl", "f_adi", "feddf")
+
+
+def build_tiny_market(
+    seed: int = 0,
+    classes: int = 4,
+    shape: Tuple[int, int, int] = (8, 8, 3),
+    epochs: int = 2,
+    archs: Tuple[str, ...] = ("mlp", "mlp"),
+) -> Dict[str, Any]:
+    """A tiny heterogeneous-market setup shared by the per-method parity
+    tests: grouped client bank (cfg.ensemble_impl default), two clients,
+    synthetic images, plus the FedDF validation split."""
+    from repro.config.train import OFLConfig
+    from repro.data import make_synth_images
+    from repro.fed import build_market
+
+    cfg = OFLConfig(
+        num_clients=len(archs), local_epochs=1, local_batch_size=16,
+        epochs=epochs, gen_iters=2, batch_size=8, latent_dim=8, buffer_batches=2,
+    )
+    x, y = make_synth_images(seed, classes, 24, shape)
+    applies, params, _, _ = build_market(seed, x, y, cfg, classes, archs=list(archs))
+    val_x, _ = make_synth_images(seed + 1, classes, 2 * cfg.batch_size, shape)
+    return {
+        "cfg": cfg, "applies": applies, "params": params,
+        "classes": classes, "shape": shape, "val_x": jnp.asarray(val_x),
+    }
+
+
+def run_method(method: str, backend: str, setup: Dict[str, Any], epochs: Optional[int] = None):
+    """Run one method end-to-end under the fused driver with every
+    dispatched op pinned to ``backend``; returns the final OFLState. The
+    run includes at least one full optimizer step per phase (generator,
+    EE where applicable, distillation), so its server params witness every
+    backward the backend routes."""
+    from repro.core import (
+        default_image_setup,
+        run_adi_baseline,
+        run_coboosting,
+        run_feddf,
+        run_generator_baseline,
+    )
+    from repro.models.cnn import cnn_apply, init_cnn
+
+    cfg, applies, params = setup["cfg"], setup["applies"], setup["params"]
+    classes, shape = setup["classes"], setup["shape"]
+    if epochs is not None:
+        cfg = dataclasses.replace(cfg, epochs=epochs)
+    cfg = dataclasses.replace(cfg, backend=BackendPolicy(default=backend))
+    server_apply = partial(cnn_apply, "mlp")
+    sp = init_cnn(jax.random.key(99), "mlp", classes, shape)
+    key = jax.random.key(0)
+    if method == "feddf":
+        return run_feddf(applies, params, server_apply, sp, setup["val_x"], cfg, key)
+    if method == "f_adi":
+        return run_adi_baseline(applies, params, server_apply, sp, shape, cfg, classes, key)
+    gen_apply, gp = default_image_setup(jax.random.key(5), cfg, classes, shape)
+    if method == "coboosting":
+        return run_coboosting(
+            applies, params, server_apply, sp, gen_apply, gp, cfg, classes, key
+        )
+    return run_generator_baseline(
+        method, applies, params, server_apply, sp, gen_apply, gp, cfg, classes, key
+    )
+
+
+def assert_method_backend_parity(
+    method: str, setup: Dict[str, Any], epochs: Optional[int] = None, tol: float = TOL
+) -> None:
+    """The end-to-end contract: ``ref`` and ``pallas-interpret`` runs of one
+    method land on the same server params (and ensembling weights)."""
+    ref = run_method(method, "ref", setup, epochs=epochs)
+    ker = run_method(method, INTERP, setup, epochs=epochs)
+    assert tree_max_diff(ref.server_params, ker.server_params) < tol, method
+    np.testing.assert_allclose(
+        np.asarray(ref.weights), np.asarray(ker.weights), atol=tol
+    )

@@ -153,6 +153,16 @@ def test_fused_epoch_matches_legacy_dense(tiny_market):
     assert _max_diff(fused.server_params, legacy.server_params) < 1e-4
 
 
+def test_legacy_driver_is_deprecated(tiny_market):
+    """driver="legacy" still runs (the parity pins above depend on it) but
+    is a deprecated alias scheduled for removal — the grad-parity oracle is
+    now backend="ref" under the fused driver (tests/grad_harness.py)."""
+    cfg, applies, params = tiny_market
+    cfg = dataclasses.replace(cfg, epochs=1)
+    with pytest.warns(DeprecationWarning, match="driver='legacy' is deprecated"):
+        _run("legacy", cfg, applies, params)
+
+
 def test_fused_driver_dispatches_constant_in_buffer_size(tiny_market):
     """O(1) dispatches per epoch: the epoch_step call count equals the epoch
     count whatever the buffer capacity (the legacy loop's per-epoch dispatch

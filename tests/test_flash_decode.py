@@ -171,3 +171,28 @@ def test_flash_decode_is_inference_only():
 
     with pytest.raises(NotImplementedError, match="inference-only"):
         jax.grad(loss)(q)
+
+
+def test_attn_decode_paged_grad_raises_inference_only():
+    """The documented contract holds through the MODEL path, not just the
+    raw op: jax.grad through the paged ``attn_decode`` branch (the serve
+    engine's decode step) must surface the flash_decode inference-only
+    error instead of silently differentiating a gather graph."""
+    cfg = ModelConfig(
+        name="t", family="dense", num_layers=1, d_model=32, num_heads=4,
+        num_kv_heads=2, head_dim=8, d_ff=64, vocab_size=64, dtype="float32",
+        param_dtype="float32", decode_backend="ref",
+    )
+    b, ps, w = 2, 8, 4
+    params = init_attention(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (b, 1, cfg.d_model), jnp.float32)
+    pos = jnp.asarray([3, 7], jnp.int32)
+    paged = init_paged_cache(cfg, b * w, ps, jnp.float32)
+    table = jnp.arange(b * w, dtype=jnp.int32).reshape(b, w)
+
+    def loss(p):
+        out, _ = attn_decode(p, x, cfg, paged, pos, page_table=table)
+        return jnp.sum(out)
+
+    with pytest.raises(NotImplementedError, match="inference-only"):
+        jax.grad(loss)(params)

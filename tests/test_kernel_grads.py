@@ -1,11 +1,18 @@
 """Differentiable kernel path: custom_vjp grad parity vs the jnp oracles,
 backend dispatch rules, and fused-epoch equivalence of the "ref" and
-"pallas-interpret" loss paths.
+"pallas-interpret" paths.
 
 The VJP contract (repro/kernels/*/ops.py): the Pallas forward returns its
-online softmax statistics as residuals and the backward produces cotangents
-for ``client_logits``, ``student_logits`` and ``w`` — the student cotangent
-drives server distillation (Eq. 4), the w cotangent the EE step (Eq. 12).
+online softmax statistics as residuals and the FUSED PALLAS BACKWARD
+produces the cotangents — ``ensemble_kl``: client_logits, student_logits
+and w (the student cotangent drives server distillation, Eq. 4; the w
+cotangent the EE step, Eq. 12); ``ghm_ce``: client_logits and w (labels are
+integer, float0); ``flash_attention``: dq/dk/dv rebuilt from the saved lse
+with no score-block re-materialization. ``backend="ref"`` bypasses the
+custom_vjp — plain autodiff of the jnp oracle is the parity baseline.
+
+Shared fixtures live in tests/grad_harness.py; randomized/adversarial
+shapes in tests/test_kernel_grads_property.py (slow lane).
 """
 from __future__ import annotations
 
@@ -15,25 +22,29 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.test_util import check_grads
 
+from grad_harness import (
+    INTERP,
+    METHODS,
+    TOL,
+    assert_loss_grad_parity,
+    assert_method_backend_parity,
+    assert_tree_close,
+    build_tiny_market,
+    check_kernel_grads,
+    loss_case,
+)
 from repro.kernels import (
     ensemble_kl,
     ensemble_kl_ref,
+    flash_attention,
     ghm_ce,
     ghm_ce_ref,
     resolve_backend,
 )
+from repro.kernels.flash_attention.ref import flash_attention_ref
 
 pytestmark = pytest.mark.tier1
-
-INTERP = "pallas-interpret"
-TOL = 1e-4
-
-
-def _assert_tree_close(a, b, tol=TOL):
-    for u, v in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
-        np.testing.assert_allclose(np.asarray(u), np.asarray(v), rtol=tol, atol=tol)
 
 
 # ---------------------------------------------------------------------------
@@ -61,20 +72,7 @@ def test_dispatch_auto_never_interprets_off_tpu():
 def test_ensemble_kl_grad_parity(k, b, v, temp):
     """Kernel-vs-ref gradients for all three differentiable inputs, with a
     random per-sample cotangent (covers padded batch + vocab tails)."""
-    cl = jax.random.normal(jax.random.key(0), (k, b, v)) * 2
-    st = jax.random.normal(jax.random.key(1), (b, v)) * 2
-    w = jax.nn.softmax(jax.random.normal(jax.random.key(2), (k,)))
-    ct = jax.random.normal(jax.random.key(3), (b,))
-
-    def f_ker(cl, st, w):
-        return jnp.vdot(ensemble_kl(cl, st, w, temperature=temp, backend=INTERP), ct)
-
-    def f_ref(cl, st, w):
-        return jnp.vdot(ensemble_kl_ref(cl, st, w, temp), ct)
-
-    got = jax.grad(f_ker, argnums=(0, 1, 2))(cl, st, w)
-    want = jax.grad(f_ref, argnums=(0, 1, 2))(cl, st, w)
-    _assert_tree_close(got, want)
+    assert_loss_grad_parity("ensemble_kl", loss_case(0, k, b, v), temperature=temp)
 
 
 def test_ensemble_kl_grad_numerical():
@@ -83,7 +81,7 @@ def test_ensemble_kl_grad_numerical():
     st = jax.random.normal(jax.random.key(1), (4, 32))
     w = jnp.asarray([0.6, 0.4])
     f = lambda cl, st, w: jnp.sum(ensemble_kl(cl, st, w, temperature=2.0, backend=INTERP))
-    check_grads(f, (cl, st, w), order=1, modes=("rev",), atol=1e-2, rtol=1e-2)
+    check_kernel_grads(f, (cl, st, w))
 
 
 def test_ensemble_kl_server_params_cotangent():
@@ -106,7 +104,7 @@ def test_ensemble_kl_server_params_cotangent():
 
     got = jax.grad(loss)(sp, INTERP)
     want = jax.grad(loss)(sp, "ref")
-    _assert_tree_close(got, want)
+    assert_tree_close(got, want)
 
 
 def test_ensemble_kl_w_cotangent_feeds_ee_sign_step():
@@ -130,22 +128,10 @@ def test_ensemble_kl_w_cotangent_feeds_ee_sign_step():
 @pytest.mark.parametrize("weighted", [True, False])
 @pytest.mark.parametrize("stop_difficulty_grad", [True, False])
 def test_ghm_ce_grad_parity(k, b, v, weighted, stop_difficulty_grad):
-    cl = jax.random.normal(jax.random.key(0), (k, b, v)) * 2
-    lbl = jax.random.randint(jax.random.key(1), (b,), 0, v)
-    w = jax.nn.softmax(jax.random.normal(jax.random.key(2), (k,)))
-    ct = jax.random.normal(jax.random.key(3), (b,))
-
-    def f_ker(cl, w):
-        out = ghm_ce(cl, lbl, w, weighted=weighted, backend=INTERP,
-                     stop_difficulty_grad=stop_difficulty_grad)
-        return jnp.vdot(out, ct)
-
-    def f_ref(cl, w):
-        return jnp.vdot(ghm_ce_ref(cl, lbl, w, weighted, stop_difficulty_grad), ct)
-
-    got = jax.grad(f_ker, argnums=(0, 1))(cl, w)
-    want = jax.grad(f_ref, argnums=(0, 1))(cl, w)
-    _assert_tree_close(got, want)
+    assert_loss_grad_parity(
+        "ghm_ce", loss_case(0, k, b, v),
+        weighted=weighted, stop_difficulty_grad=stop_difficulty_grad,
+    )
 
 
 def test_ghm_ce_grad_numerical():
@@ -153,57 +139,92 @@ def test_ghm_ce_grad_numerical():
     lbl = jax.random.randint(jax.random.key(1), (4,), 0, 32)
     w = jnp.asarray([0.3, 0.7])
     f = lambda cl, w: jnp.sum(ghm_ce(cl, lbl, w, backend=INTERP))
-    check_grads(f, (cl, w), order=1, modes=("rev",), atol=1e-2, rtol=1e-2)
+    check_kernel_grads(f, (cl, w))
+
+
+# ---------------------------------------------------------------------------
+# flash_attention VJP: dq/dk/dv from the saved lse, via the public op
+
+
+ATTN_CASES = [
+    # (b, sq, sk, h, kh, hd, causal, window, softcap) — GQA, SWA, softcap,
+    # cross-attention lengths, and non-tile-aligned tails (13, 9, 20)
+    (2, 16, 16, 4, 2, 32, True, 0, 0.0),
+    (1, 13, 13, 3, 3, 16, True, 5, 30.0),
+    (2, 9, 24, 4, 1, 8, False, 0, 0.0),
+    (1, 20, 20, 2, 2, 64, True, 0, 50.0),
+]
+
+
+def _attn_args(b, sq, sk, h, kh, hd, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    return (
+        jax.random.normal(ks[0], (b, sq, h, hd)),
+        jax.random.normal(ks[1], (b, sk, kh, hd)),
+        jax.random.normal(ks[2], (b, sk, kh, hd)),
+    )
+
+
+@pytest.mark.parametrize("b,sq,sk,h,kh,hd,causal,window,softcap", ATTN_CASES)
+def test_flash_attention_grad_parity(b, sq, sk, h, kh, hd, causal, window, softcap):
+    """dq/dk/dv through the fused Pallas backward vs plain autodiff of the
+    jnp reference, with a fixed non-trivial output cotangent."""
+    q, k, v = _attn_args(b, sq, sk, h, kh, hd)
+    ct = jax.random.normal(jax.random.key(9), q.shape)
+
+    def f(backend, q, k, v):
+        if backend == "ref":
+            out = flash_attention_ref(q, k, v, causal=causal, window=window, softcap=softcap)
+        else:
+            out = flash_attention(
+                q, k, v, causal=causal, window=window, softcap=softcap,
+                backend=backend, block_q=8, block_kv=8,
+            )
+        return jnp.vdot(out, ct)
+
+    got = jax.grad(partial(f, INTERP), argnums=(0, 1, 2))(q, k, v)
+    want = jax.grad(partial(f, "ref"), argnums=(0, 1, 2))(q, k, v)
+    assert_tree_close(got, want)
+
+
+def test_flash_attention_grad_numerical():
+    q, k, v = _attn_args(1, 8, 8, 2, 1, 16, seed=3)
+    f = lambda q, k, v: jnp.sum(flash_attention(q, k, v, causal=True, backend=INTERP))
+    check_kernel_grads(f, (q, k, v))
+
+
+def test_flash_attention_padded_tail_grads_are_exact_zero_free():
+    """Non-multiple-of-block shapes: the sliced grads must carry no leakage
+    from the padded rows/columns (parity at the padded geometry)."""
+    q, k, v = _attn_args(1, 5, 11, 2, 2, 8, seed=7)
+
+    def f(backend, q, k, v):
+        if backend == "ref":
+            return jnp.sum(flash_attention_ref(q, k, v, causal=True) ** 2)
+        return jnp.sum(
+            flash_attention(q, k, v, causal=True, backend=backend, block_q=8, block_kv=8) ** 2
+        )
+
+    got = jax.grad(partial(f, INTERP), argnums=(0, 1, 2))(q, k, v)
+    want = jax.grad(partial(f, "ref"), argnums=(0, 1, 2))(q, k, v)
+    assert_tree_close(got, want)
+    assert all(g.shape == x.shape for g, x in zip(got, (q, k, v)))
 
 
 # ---------------------------------------------------------------------------
 # fused epoch engine: "ref" and "pallas-interpret" backends produce the same
-# server params on the same PRNG stream
-
-
-@pytest.mark.parametrize("method", ["coboosting", "dense"])
-def test_fused_epoch_backend_parity(method, tiny_market_kernelpath):
-    from repro.core import default_image_setup, run_coboosting, run_generator_baseline
-    from repro.models.cnn import cnn_apply, init_cnn
-
-    cfg, applies, params, classes, shape = tiny_market_kernelpath
-    results = {}
-    for backend in ("ref", INTERP):
-        import dataclasses
-
-        c = dataclasses.replace(cfg, kernel_backend=backend)
-        server_apply = partial(cnn_apply, "mlp")
-        sp = init_cnn(jax.random.key(99), "mlp", classes, shape)
-        gen_apply, gp = default_image_setup(jax.random.key(5), c, classes, shape)
-        if method == "coboosting":
-            st = run_coboosting(
-                applies, params, server_apply, sp, gen_apply, gp, c, classes,
-                jax.random.key(0),
-            )
-        else:
-            st = run_generator_baseline(
-                method, applies, params, server_apply, sp, gen_apply, gp, c, classes,
-                jax.random.key(0),
-            )
-        results[backend] = st
-
-    _assert_tree_close(results["ref"].server_params, results[INTERP].server_params, tol=1e-4)
-    np.testing.assert_allclose(
-        np.asarray(results["ref"].weights), np.asarray(results[INTERP].weights), atol=1e-5
-    )
+# server params on the same PRNG stream — the contract that retired the
+# legacy driver, for all five methods on the grouped client bank
 
 
 @pytest.fixture(scope="module")
 def tiny_market_kernelpath():
-    from repro.config.train import OFLConfig
-    from repro.data import make_synth_images
-    from repro.fed import build_market
+    return build_tiny_market()
 
-    classes, shape = 4, (8, 8, 3)
-    cfg = OFLConfig(
-        num_clients=2, local_epochs=1, local_batch_size=16,
-        epochs=3, gen_iters=2, batch_size=8, latent_dim=8, buffer_batches=2,
-    )
-    x, y = make_synth_images(0, classes, 20, shape)
-    applies, params, _, _ = build_market(0, x, y, cfg, classes, archs=["mlp", "mlp"])
-    return cfg, applies, params, classes, shape
+
+@pytest.mark.parametrize("method", METHODS)
+def test_fused_epoch_backend_parity(method, tiny_market_kernelpath):
+    """End-to-end grad steps: every generator/EE/KD optimizer step of one
+    fused epoch runs its backward through the backend under test; ref and
+    interpret runs must land on the same server params and weights."""
+    assert_method_backend_parity(method, tiny_market_kernelpath)
